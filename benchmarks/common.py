@@ -1,0 +1,128 @@
+"""Shared benchmark driving: open/closed-loop workload injection for Nezha
+clusters and baseline clusters, with uniform result rows.
+
+Durations are short (simulated 0.15-0.4 s) so `python -m benchmarks.run`
+finishes on a laptop; every knob scales with --quick/--full.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core import ClusterConfig, NezhaCluster, OpType
+from repro.core.baselines import PROTOCOLS, BaselineConfig
+from repro.sim.workload import zipf_key
+
+WARM = 0.02
+N_KEYS = 1_000_000
+READ_RATIO = 0.5
+SKEW = 0.5
+
+
+def drive_nezha_openloop(cfg: ClusterConfig, rate_per_client: float, duration: float,
+                         seed: int = 0, read_ratio: float = READ_RATIO,
+                         skew: float = SKEW, sm_factory=None) -> dict:
+    kw = {"sm_factory": sm_factory} if sm_factory else {}
+    cl = NezhaCluster(cfg, **kw)
+    cl.start()
+    rng = np.random.default_rng(seed)
+    for c in cl.clients:
+        t = WARM
+        while t < duration:
+            t += rng.exponential(1.0 / rate_per_client)
+            key = zipf_key(rng, N_KEYS, skew)
+            op = OpType.READ if rng.random() < read_ratio else OpType.WRITE
+            cl.scheduler.schedule_at(
+                t, (lambda cc, kk, oo: (lambda: cc.submit(keys=(kk,), op=oo)))(c, key, op))
+    cl.run_for(duration + 0.1)
+    s = cl.summary()
+    s["throughput"] = s["committed"] / max(duration - WARM, 1e-9)
+    s["offered"] = rate_per_client * cfg.n_clients
+    return s
+
+
+def drive_nezha_closedloop(cfg: ClusterConfig, duration: float, seed: int = 0,
+                           read_ratio: float = READ_RATIO, skew: float = SKEW) -> dict:
+    cl = NezhaCluster(cfg)
+    rng = np.random.default_rng(seed)
+    stop_t = duration
+
+    def on_commit(client, rid):
+        if cl.scheduler.now < stop_t:
+            key = zipf_key(rng, N_KEYS, skew)
+            op = OpType.READ if rng.random() < read_ratio else OpType.WRITE
+            client.submit(keys=(key,), op=op)
+
+    for c in cl.clients:
+        c.on_commit = on_commit
+    cl.start()
+    for c in cl.clients:
+        key = zipf_key(rng, N_KEYS, skew)
+        c.submit(keys=(key,))
+    cl.run_for(duration + 0.05)
+    s = cl.summary()
+    s["throughput"] = s["committed"] / duration
+    s["n_clients"] = cfg.n_clients
+    return s
+
+
+def drive_baseline_openloop(name: str, bcfg: BaselineConfig, rate_per_client: float,
+                            duration: float, seed: int = 0, skew: float = SKEW,
+                            **proto_kw) -> dict:
+    cls = PROTOCOLS[name]
+    cl = cls(bcfg, **proto_kw) if proto_kw else cls(bcfg)
+    rng = np.random.default_rng(seed)
+    for cid in range(bcfg.n_clients):
+        t = WARM
+        while t < duration:
+            t += rng.exponential(1.0 / rate_per_client)
+            key = zipf_key(rng, N_KEYS, skew)
+            cl.scheduler.schedule_at(
+                t, (lambda c, k: (lambda: cl.submit(c, k, rng.random() < READ_RATIO)))(cid, key))
+    cl.run_for(duration + 0.1)
+    s = cl.summary()
+    s["throughput"] = s["committed"] / max(duration - WARM, 1e-9)
+    s["offered"] = rate_per_client * bcfg.n_clients
+    return s
+
+
+def drive_baseline_closedloop(name: str, bcfg: BaselineConfig, duration: float,
+                              seed: int = 0, **proto_kw) -> dict:
+    cls = PROTOCOLS[name]
+    cl = cls(bcfg, **proto_kw) if proto_kw else cls(bcfg)
+    rng = np.random.default_rng(seed)
+    stop_t = duration
+
+    def on_commit(cid):
+        if cl.scheduler.now < stop_t:
+            cl.submit(cid, zipf_key(rng, N_KEYS, SKEW), rng.random() < READ_RATIO)
+
+    cl.on_commit = on_commit
+    for cid in range(bcfg.n_clients):
+        cl.submit(cid, zipf_key(rng, N_KEYS, SKEW), False)
+    cl.run_for(duration + 0.05)
+    s = cl.summary()
+    s["throughput"] = s["committed"] / duration
+    s["n_clients"] = bcfg.n_clients
+    return s
+
+
+def fmt_row(name: str, s: dict) -> str:
+    return (f"{name:22s} thr={s['throughput']:9.0f}/s "
+            f"med={s.get('median_latency', float('nan'))*1e6:8.1f}us "
+            f"p90={s.get('p90_latency', float('nan'))*1e6:8.1f}us "
+            f"fcr={s.get('fast_commit_ratio', 0):.2f}")
+
+
+class Timer:
+    def __init__(self, label):
+        self.label = label
+
+    def __enter__(self):
+        self.t0 = time.time()
+        return self
+
+    def __exit__(self, *a):
+        print(f"  [{self.label}: {time.time()-self.t0:.1f}s wall]")

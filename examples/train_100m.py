@@ -1,0 +1,66 @@
+"""End-to-end driver: train a ~100M-parameter LM for a few hundred steps.
+
+Uses the real substrate end to end: deterministic data pipeline -> jitted
+train_step (AdamW, remat, microbatching) -> periodic checkpoints committed
+through the Nezha-replicated metadata log -> kill-and-restore drill halfway.
+
+A genuine ~100M-param config (mamba2-130m at full size would also do; we use
+a 8-layer/512-wide transformer for CPU wall-time) trained on synthetic
+packed documents. Takes a few minutes on CPU with --steps 200.
+
+Run:  PYTHONPATH=src python examples/train_100m.py --steps 200
+"""
+import argparse
+import dataclasses
+import shutil
+
+from repro.configs import get_config
+from repro.launch.train import Trainer, TrainerConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt", default="/tmp/train100m_ckpt")
+    args = ap.parse_args()
+
+    shutil.rmtree(args.ckpt, ignore_errors=True)
+
+    # ~100M params: 8 x 512 with a 32k vocab
+    base = get_config("tinyllama-1.1b")
+    cfg100 = dataclasses.replace(
+        base, name="repro-100m", n_layers=8, d_model=512, n_heads=8,
+        n_kv_heads=4, head_dim=64, d_ff=2048, vocab=32000, max_seq=2048)
+    from repro.configs import register
+
+    register(cfg100)
+
+    tc = TrainerConfig(arch="repro-100m", smoke=False, steps=args.steps,
+                       batch=args.batch, seq=args.seq, ckpt_dir=args.ckpt,
+                       ckpt_every=50, microbatches=2)
+    t = Trainer(tc)
+    from repro.models.model import count_params
+
+    print(f"training {cfg100.name}: {count_params(cfg100)/1e6:.1f}M params, "
+          f"{args.steps} steps of {args.batch}x{args.seq} tokens")
+    # phase 1: half the run, then simulate a crash (process restart)
+    half = args.steps // 2
+    t.tc = dataclasses.replace(tc, steps=half)
+    t.run()
+    print(f"-- simulated job kill at step {t.step}; restarting from checkpoints --")
+    t2 = Trainer(TrainerConfig(**{**dataclasses.asdict(tc)}))
+    restored = t2.maybe_restore()
+    print(f"restored={restored} at step {t2.step} "
+          f"(metadata log agrees: {t2.log.latest_committed()})")
+    hist = t2.run()
+    first = t.metrics_history[0]["loss"]
+    last = hist[-1]["loss"]
+    print(f"loss: {first:.3f} -> {last:.3f}")
+    assert last < first, "loss did not improve"
+    print("train_100m OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+"""repro: Nezha/DOM (deadline-ordered multicast consensus) as a first-class
+coordination layer for a multi-pod JAX training/serving framework.
+
+Subpackages:
+  core      -- the paper's contribution (DOM + Nezha, exact + vectorized)
+  sim       -- deterministic event/network/clock simulation substrate
+  models    -- the 10 assigned LM architectures (dense/MoE/SSM/hybrid/enc-dec)
+  parallel  -- mesh, sharding rules, distributed-optimization collectives
+  train     -- optimizer, train_step, fault-tolerant trainer
+  serving   -- replicated serving engine (DOM-ordered batching), KV cache
+  data      -- deterministic data pipeline
+  ckpt      -- checkpointing + Nezha-replicated metadata log
+  kernels   -- Pallas TPU kernels (+ pure-jnp oracles)
+  configs   -- per-architecture configs + input shapes
+  launch    -- mesh/dryrun/train/serve entry points
+  analysis  -- HLO parsing + roofline
+"""
+
+__version__ = "1.0.0"

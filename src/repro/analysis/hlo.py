@@ -1,0 +1,221 @@
+"""Post-SPMD HLO text analysis with while-loop trip-count accounting.
+
+XLA's `compiled.cost_analysis()` counts every computation ONCE -- a
+scan-over-layers body (L iterations) or a chunked-attention inner loop is
+undercounted by its trip count. Since this framework leans on lax.scan for
+depth (HLO size independence), we re-derive costs from the compiled HLO
+text, attributing to every op the product of `known_trip_count`s of its
+enclosing while loops (XLA records them in backend_config):
+
+  * dot FLOPs: 2 x prod(output shape) x contracted size, x multiplier
+  * collective bytes (all-gather/all-reduce/reduce-scatter/all-to-all/
+    collective-permute): output-shape bytes x multiplier
+  * memory bytes: HBM traffic proxy = dot operand+output bytes, plus output
+    bytes of copy/slice/gather/scatter/reduce/DUS/collective ops, x
+    multiplier. Elementwise chains are EXCLUDED -- on TPU they fuse into the
+    surrounding dots; the CPU-backend HLO leaves them unfused, and counting
+    them would inflate traffic ~10-50x.
+
+All quantities are PER-DEVICE (the HLO is one SPMD partition).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                     "collective-permute")
+
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_WHILE_RE = re.compile(
+    r"while\(.*?condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)"
+)
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_SHAPE_TOK = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+)$")
+_DOT_ARGS = re.compile(r"\bdot\(\s*%?([\w.\-]+)\s*,\s*%?([\w.\-]+)")
+_LHS_CDIMS = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+
+def _shape_list(type_str: str) -> list[tuple[str, list[int]]]:
+    out = []
+    for dt, dims in _SHAPE_TOK.findall(type_str):
+        if dt in _DTYPE_BYTES:
+            out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _bytes_of(shapes: list[tuple[str, list[int]]]) -> int:
+    total = 0
+    for dt, dims in shapes:
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _split_computations(hlo: str) -> tuple[dict, str | None]:
+    comps: dict[str, list[str]] = {}
+    entry = None
+    cur = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        if cur is None:
+            if stripped.endswith("{") and ("->" in stripped or stripped.startswith("ENTRY")):
+                m = _COMP_HDR.match(stripped)
+                if m:
+                    cur = m.group(2)
+                    comps[cur] = []
+                    if m.group(1):
+                        entry = cur
+        else:
+            if stripped == "}":
+                cur = None
+            else:
+                comps[cur].append(stripped)
+    return comps, entry
+
+
+def _multipliers(comps: dict, entry: str | None) -> dict:
+    mult: dict[str, float] = defaultdict(lambda: 1.0)
+    for _ in range(10):  # fixpoint over nesting depth
+        changed = False
+        for cname, lines in comps.items():
+            base = mult[cname] if (cname != entry) else 1.0
+            for line in lines:
+                m = _WHILE_RE.search(line)
+                if not m:
+                    continue
+                cond, body = m.group(1), m.group(2)
+                tm = _TRIP_RE.search(line)
+                trips = float(tm.group(1)) if tm else 1.0
+                want = base * trips
+                for target in (body, cond):
+                    if target in comps and mult[target] < want:
+                        mult[target] = want
+                        changed = True
+        if not changed:
+            break
+    return mult
+
+
+def analyze_hlo(hlo: str) -> dict:
+    comps, entry = _split_computations(hlo)
+    mult = _multipliers(comps, entry)
+
+    # name -> output shape list (first definition wins; names are unique)
+    shape_of: dict[str, list] = {}
+    for lines in comps.values():
+        for line in lines:
+            dm = _DEF_RE.match(line)
+            if dm:
+                name, rhs = dm.group(1), dm.group(2)
+                if rhs.startswith("("):
+                    # tuple type: take the balanced-paren prefix
+                    depth = 0
+                    for i, ch in enumerate(rhs):
+                        if ch == "(":
+                            depth += 1
+                        elif ch == ")":
+                            depth -= 1
+                            if depth == 0:
+                                break
+                    head = rhs[: i + 1]
+                else:
+                    head = rhs.split("(", 1)[0]
+                shape_of.setdefault(name, _shape_list(head))
+
+    dot_flops = 0.0
+    coll_bytes: dict[str, float] = defaultdict(float)
+    coll_counts: dict[str, float] = defaultdict(float)
+    mem_bytes = 0.0
+    fusion_prefixes = ("fused_", "wrapped_", "region_")
+
+    for cname, lines in comps.items():
+        k = mult[cname] if cname != entry else 1.0
+        is_fusion_comp = cname.startswith(fusion_prefixes) and "while" not in cname \
+            and not any(_WHILE_RE.search(l) for l in lines[:0])
+        # note: scan bodies are also named region_*; they contain real ops and
+        # must be counted. Distinguish: fusion computations never contain
+        # fusion/while/collective ops themselves -- cheap approximation: count
+        # every computation, since fusion computations' ops are elementwise
+        # (no dots/collectives) and their memory traffic is internal (we only
+        # count the fusion op's output at the call site, which lives in the
+        # parent computation).
+        for line in lines:
+            dm = _DEF_RE.match(line)
+            if not dm:
+                continue
+            name, rhs = dm.group(1), dm.group(2)
+            # ---- dots ------------------------------------------------------
+            if re.search(r"\bdot\(", rhs):
+                out_shapes = shape_of.get(name, [])
+                out_n = 1
+                for dt, dims in out_shapes[:1]:
+                    for d in dims:
+                        out_n *= d
+                am = _DOT_ARGS.search(rhs)
+                csize = 1
+                cm = _LHS_CDIMS.search(rhs)
+                operand_bytes = 0
+                if am:
+                    lhs_shapes = shape_of.get(am.group(1), [])
+                    rhs_shapes = shape_of.get(am.group(2), [])
+                    operand_bytes = _bytes_of(lhs_shapes) + _bytes_of(rhs_shapes)
+                    if cm and lhs_shapes:
+                        lhs_dims = lhs_shapes[0][1]
+                        for ci in cm.group(1).split(","):
+                            if ci and int(ci) < len(lhs_dims):
+                                csize *= lhs_dims[int(ci)]
+                dot_flops += 2.0 * out_n * csize * k
+                mem_bytes += (_bytes_of(out_shapes) + operand_bytes) * k
+                continue
+            # ---- collectives --------------------------------------------------
+            matched_coll = None
+            for kind in _COLLECTIVE_KINDS:
+                if re.search(rf"\b{kind}(?:-start)?\(", rhs):
+                    matched_coll = kind
+                    break
+            if matched_coll:
+                b = _bytes_of(shape_of.get(name, []))
+                coll_bytes[matched_coll] += b * k
+                coll_counts[matched_coll] += k
+                mem_bytes += 2 * b * k   # read + write through HBM
+                continue
+            # ---- heavy data movers only (elementwise fuses on TPU) --------------
+            if "dynamic-update-slice(" in rhs:
+                # in-place update (XLA aliases the buffer): traffic = the
+                # written slice, not the whole destination
+                m2 = re.search(r"dynamic-update-slice\(\s*%?[\w.\-]+\s*,\s*%?([\w.\-]+)", rhs)
+                if m2:
+                    mem_bytes += 2 * _bytes_of(shape_of.get(m2.group(1), [])) * k
+                continue
+            if re.search(r"\b(copy|dynamic-slice|gather|"
+                         r"scatter|reduce|sort|convolution|transpose|concatenate)\(", rhs):
+                mem_bytes += _bytes_of(shape_of.get(name, [])) * k
+
+    return {
+        "dot_flops": dot_flops,
+        "collective_bytes": {kk: float(v) for kk, v in coll_bytes.items()},
+        "collective_counts": {kk: float(v) for kk, v in coll_counts.items()},
+        "collective_total_bytes": float(sum(coll_bytes.values())),
+        "memory_bytes": mem_bytes,
+    }
+
+
+# Back-compat simple interface (used by dryrun.py)
+def collective_bytes_from_hlo(hlo_text: str) -> dict:
+    a = analyze_hlo(hlo_text)
+    return {"bytes": a["collective_bytes"], "counts": a["collective_counts"],
+            "total_bytes": a["collective_total_bytes"],
+            "dot_flops": a["dot_flops"], "memory_bytes": a["memory_bytes"]}
+
+
+__all__ = ["analyze_hlo", "collective_bytes_from_hlo"]

@@ -1,0 +1,49 @@
+"""Re-derive dry-run metrics from saved HLO dumps with the current analyzer.
+
+The dry-run stores <arch>__<shape>__<pod>.hlo.txt.gz next to its JSON; this
+tool re-runs repro.analysis.hlo over them (analyzer improvements don't
+require recompiling 80 cells).
+
+  PYTHONPATH=src python -m repro.analysis.reprocess --dir results/dryrun
+"""
+from __future__ import annotations
+
+import argparse
+import gzip
+import json
+import pathlib
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    args = ap.parse_args()
+    from repro.analysis.hlo import collective_bytes_from_hlo
+
+    d = pathlib.Path(args.dir)
+    results_path = d / "dryrun_results.json"
+    results = json.loads(results_path.read_text()) if results_path.exists() else []
+    by_key = {(r["arch"], r["shape"], r["multi_pod"]): r for r in results}
+    n = 0
+    for f in sorted(d.glob("*.hlo.txt.gz")):
+        arch, shape, pod = f.stem.replace(".hlo.txt", "").split("__")
+        mp = pod == "pod2"
+        with gzip.open(f, "rt") as fh:
+            hlo = fh.read()
+        coll = collective_bytes_from_hlo(hlo)
+        r = by_key.get((arch, shape, mp))
+        if r is None:
+            continue
+        r["flops"] = float(coll["dot_flops"])
+        r["bytes_accessed"] = float(coll["memory_bytes"])
+        r["collective_bytes"] = coll
+        n += 1
+        print(f"reprocessed {arch} x {shape} ({pod}): "
+              f"flops={r['flops']:.3e} mem={r['bytes_accessed']:.3e} "
+              f"coll={coll['total_bytes']:.3e}")
+    results_path.write_text(json.dumps(results, indent=1))
+    print(f"updated {n} cells in {results_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,134 @@
+"""Three-term roofline analysis from dry-run artifacts.
+
+Hardware model (TPU v5e): 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI.
+
+All dry-run metrics (cost_analysis flops/bytes, HLO collective bytes) are
+PER-DEVICE quantities of the SPMD-partitioned program, so:
+
+    compute term    = flops / PEAK_FLOPS
+    memory term     = bytes_accessed / HBM_BW
+    collective term = collective_bytes / ICI_BW
+
+MODEL_FLOPS = 6 N D for training (fwd+bwd), 2 N D for inference, with
+N = active params for MoE; D = tokens processed by the step. The ratio
+MODEL_FLOPS / (flops x n_chips) exposes remat recompute and dispatch
+overheads.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass
+from typing import Optional
+
+PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link (per-chip effective)
+
+
+def model_flops(arch: str, shape: str) -> float:
+    from repro.configs import get_config
+    from repro.configs.shapes import SHAPES
+
+    cfg = get_config(arch)
+    sp = SHAPES[shape]
+    from repro.models.model import count_params
+
+    n = count_params(cfg, active_only=True)
+    if sp.kind == "train":
+        tokens = sp.seq_len * sp.global_batch
+        return 6.0 * n * tokens
+    if sp.kind == "prefill":
+        tokens = sp.seq_len * sp.global_batch
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * sp.global_batch
+
+
+@dataclass
+class RooflineRow:
+    arch: str
+    shape: str
+    mesh: str
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float
+    hlo_flops_total: float
+    useful_ratio: float
+    mem_gib_per_dev: float
+
+    def step_time(self) -> float:
+        """No-overlap upper bound; with perfect overlap it's the max term."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def roofline_fraction(self) -> float:
+        """useful compute time / bound step time (the score we hillclimb)."""
+        useful_s = self.model_flops / (PEAK_FLOPS * self._chips)
+        return useful_s / max(self.step_time(), 1e-30)
+
+    _chips: int = 256
+
+
+def analyze(results_path: str = "results/dryrun/dryrun_results.json",
+            multi_pod: Optional[bool] = False) -> list[RooflineRow]:
+    rows = []
+    for r in json.load(open(results_path)):
+        if r["status"] != "ok":
+            continue
+        if multi_pod is not None and r["multi_pod"] != multi_pod:
+            continue
+        n_chips = r["n_chips"]
+        compute_s = r["flops"] / PEAK_FLOPS
+        memory_s = r["bytes_accessed"] / HBM_BW
+        coll_s = r["collective_bytes"]["total_bytes"] / ICI_BW
+        terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+        dom = max(terms, key=terms.get)
+        mf = model_flops(r["arch"], r["shape"])
+        total_flops = r["flops"] * n_chips
+        mem_gib = sum(r["memory"].values()) / 2**30
+        row = RooflineRow(
+            arch=r["arch"], shape=r["shape"],
+            mesh="2x16x16" if r["multi_pod"] else "16x16",
+            compute_s=compute_s, memory_s=memory_s, collective_s=coll_s,
+            dominant=dom, model_flops=mf, hlo_flops_total=total_flops,
+            useful_ratio=mf / max(total_flops, 1e-30),
+            mem_gib_per_dev=mem_gib)
+        row._chips = n_chips
+        rows.append(row)
+    return rows
+
+
+def to_markdown(rows: list[RooflineRow]) -> str:
+    out = ["| arch | shape | mesh | compute (s) | memory (s) | collective (s) | dominant | MODEL_FLOPS | useful/HLO | roofline frac | mem GiB/dev |",
+           "|---|---|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(rows, key=lambda r: (r.arch, r.shape)):
+        out.append(
+            f"| {r.arch} | {r.shape} | {r.mesh} | {r.compute_s:.3e} | {r.memory_s:.3e} "
+            f"| {r.collective_s:.3e} | **{r.dominant}** | {r.model_flops:.2e} "
+            f"| {r.useful_ratio:.2f} | {r.roofline_fraction():.3f} | {r.mem_gib_per_dev:.1f} |")
+    return "\n".join(out)
+
+
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", default="results/dryrun/dryrun_results.json")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+    rows = analyze(args.results, multi_pod=args.multi_pod)
+    print(to_markdown(rows))
+    # hillclimb candidates
+    if rows:
+        worst = min(rows, key=lambda r: r.roofline_fraction())
+        coll = max(rows, key=lambda r: r.collective_s / max(r.step_time(), 1e-30))
+        print(f"\nworst roofline fraction : {worst.arch} x {worst.shape} "
+              f"({worst.roofline_fraction():.3f})")
+        print(f"most collective-bound   : {coll.arch} x {coll.shape} "
+              f"({coll.collective_s / max(coll.step_time(),1e-30):.2f} of bound)")
+
+
+if __name__ == "__main__":
+    main()

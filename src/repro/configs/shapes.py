@@ -1,0 +1,95 @@
+"""The assigned input-shape sets and ShapeDtypeStruct builders.
+
+Four shapes per LM architecture (40 cells):
+  train_4k     seq_len=4096,   global_batch=256   (train_step)
+  prefill_32k  seq_len=32768,  global_batch=32    (inference prefill)
+  decode_32k   seq_len=32768,  global_batch=128   (serve_step: 1 new token,
+                                                   KV cache of seq_len)
+  long_500k    seq_len=524288, global_batch=1     (long-context decode;
+                                                   sub-quadratic archs only)
+
+`input_specs(cfg, shape)` returns (kind, specs) where kind selects which
+step function is lowered, and specs are allocation-free ShapeDtypeStructs
+(weak-type-correct, shardable).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig
+from repro.models.layers import CDT
+from repro.models.model import abstract_cache
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str          # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def shape_applicable(cfg: ArchConfig, shape_name: str) -> tuple[bool, str]:
+    """(runs?, reason). long_500k only for sub-quadratic archs (DESIGN.md)."""
+    if shape_name == "long_500k" and not cfg.subquadratic:
+        return False, "pure full-attention arch: 500K-token decode is skipped per assignment"
+    return True, ""
+
+
+def _i32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def input_specs(cfg: ArchConfig, shape_name: str) -> tuple[str, dict]:
+    """Allocation-free stand-ins for every model input of this cell."""
+    sp = SHAPES[shape_name]
+    B, S = sp.global_batch, sp.seq_len
+    if sp.kind == "train":
+        if cfg.enc_dec:
+            # split the budget: half source frames, half target tokens
+            s_src, s_tgt = S // 2, S // 2
+            batch = {"src": jax.ShapeDtypeStruct((B, s_src, cfg.d_model), CDT),
+                     "tokens": _i32((B, s_tgt))}
+        elif cfg.frontend:
+            nf = cfg.n_frontend_tokens
+            batch = {"frontend": jax.ShapeDtypeStruct((B, nf, cfg.d_model), CDT),
+                     "tokens": _i32((B, S - nf))}
+        else:
+            batch = {"tokens": _i32((B, S))}
+        return "train", {"batch": batch}
+
+    if sp.kind == "prefill":
+        if cfg.enc_dec:
+            s_src, s_tgt = S // 2, S // 2
+            batch = {"src": jax.ShapeDtypeStruct((B, s_src, cfg.d_model), CDT),
+                     "tokens": _i32((B, s_tgt))}
+        elif cfg.frontend:
+            nf = cfg.n_frontend_tokens
+            batch = {"frontend": jax.ShapeDtypeStruct((B, nf, cfg.d_model), CDT),
+                     "tokens": _i32((B, S - nf))}
+        else:
+            batch = {"tokens": _i32((B, S))}
+        return "prefill", {"batch": batch}
+
+    # decode: one new token against a cache of S
+    src_len = (S // 2) if cfg.enc_dec else 0
+    cache = abstract_cache(cfg, B, S, src_len=src_len)
+    return "decode", {
+        "cache": cache,
+        "tokens": _i32((B, 1)),
+        "cache_len": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+__all__ = ["SHAPES", "ShapeSpec", "shape_applicable", "input_specs"]

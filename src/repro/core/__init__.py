@@ -1,0 +1,23 @@
+"""repro.core -- the paper's contribution: DOM + the Nezha consensus protocol.
+
+Exact event-driven implementation (replica/proxy/protocol), pure quorum and
+recovery math, incremental hashing, and the vectorized JAX formulation used
+by the large-scale benchmarks and by the training/serving integration.
+"""
+from repro.core.clock import Clock, ClockParams, SyncService
+from repro.core.dom import DomParams, DomReceiver, DomSender, EarlyBuffer, LateBuffer, OwdEstimator
+from repro.core.hashing import IncrementalHash, PerKeyHashTable
+from repro.core.messages import OpType, Request, Status
+from repro.core.protocol import ClusterConfig, NezhaCluster
+from repro.core.quorum import QuorumTracker, fast_quorum_size, leader_of_view, slow_quorum_size
+from repro.core.replica import KVStore, NullApp, Replica, ReplicaParams, StateMachine
+
+__all__ = [
+    "Clock", "ClockParams", "SyncService",
+    "DomParams", "DomReceiver", "DomSender", "EarlyBuffer", "LateBuffer", "OwdEstimator",
+    "IncrementalHash", "PerKeyHashTable",
+    "OpType", "Request", "Status",
+    "ClusterConfig", "NezhaCluster",
+    "QuorumTracker", "fast_quorum_size", "slow_quorum_size", "leader_of_view",
+    "KVStore", "NullApp", "Replica", "ReplicaParams", "StateMachine",
+]

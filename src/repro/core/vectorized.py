@@ -1,0 +1,289 @@
+"""Vectorized JAX Monte-Carlo of DOM + Nezha protocol dynamics.
+
+The event-driven implementation (repro.core.replica) is exact but Python-
+slow; the large benchmark sweeps (Figs 1-3, 8, 10, 11) need millions of
+requests. This module reformulates the *steady-state data plane* of the
+protocol as pure array programs:
+
+  given per-(request, replica) arrival times, clock offsets and deadlines,
+  compute -- entirely with jnp ops --
+    * early-buffer admission (running-max eligibility over deadline order),
+    * release times (max(deadline, arrival) under admission),
+    * fast/slow commit classification and commit latencies,
+    * reordering scores (LIS via O(n log n) patience counts is replaced by
+      a rank-based pairwise estimator for differentiability-free speed).
+
+Everything is jit-compatible; the same code paths serve (a) the paper-figure
+benchmarks and (b) the deadline-ordered gradient-aggregation planner in
+repro.parallel.collectives (it reuses `dom_release_schedule`).
+
+Correspondence with the exact simulator is asserted in
+tests/test_vectorized.py on small instances.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.quorum import fast_quorum_size, slow_quorum_size
+
+
+@dataclass
+class VecDomParams:
+    percentile: float = 50.0
+    beta: float = 3.0
+    clamp_d: float = 200e-6
+    window: int = 1000
+
+
+# ---------------------------------------------------------------------------
+# DOM release schedule
+# ---------------------------------------------------------------------------
+def _release_one_receiver(deadlines: jnp.ndarray, arrivals: jnp.ndarray) -> jnp.ndarray:
+    """Exact early-buffer admission for ONE receiver via lax.scan.
+
+    Processes messages in arrival order; message m is admitted iff
+    d_m > max{ d_j : admitted(j), a_j < a_m, d_j <= a_m } -- i.e. larger than
+    every deadline already *released* when m arrives. O(N^2) but fully
+    vectorized per scan step.
+    """
+    N = deadlines.shape[0]
+    order = jnp.argsort(arrivals, stable=True)
+    d_by_arr = deadlines[order]
+    a_by_arr = arrivals[order]
+
+    def step(admitted_d, i):
+        a_i = a_by_arr[i]
+        d_i = d_by_arr[i]
+        # deadlines of already-admitted messages that have been released by a_i
+        released = jnp.where(jnp.isfinite(admitted_d) & (admitted_d <= a_i),
+                             admitted_d, -jnp.inf)
+        w = jnp.max(released)
+        admit = (d_i > w) & jnp.isfinite(a_i)
+        admitted_d = admitted_d.at[i].set(jnp.where(admit, d_i, jnp.inf))
+        return admitted_d, admit
+
+    init = jnp.full((N,), jnp.inf)
+    _, admit_by_arr = jax.lax.scan(step, init, jnp.arange(N))
+    # scatter back to original message order
+    admitted = jnp.zeros((N,), dtype=bool).at[order].set(admit_by_arr)
+    return admitted
+
+
+@jax.jit
+def dom_release_schedule(deadlines: jnp.ndarray, arrivals: jnp.ndarray) -> tuple:
+    """Per-receiver DOM early-buffer semantics, vectorized (exact).
+
+    Args:
+      deadlines: [N] message deadlines (global synchronized time).
+      arrivals:  [N, R] arrival time of each message at each receiver
+                 (+inf = dropped).
+
+    Returns:
+      admitted:  [N, R] bool -- entered the early-buffer.
+      release:   [N, R] release time (inf if not admitted/dropped).
+
+    Semantics match repro.core.dom.EarlyBuffer exactly (asserted by the
+    property tests): a message is admitted iff its deadline exceeds the
+    largest deadline already *released* at its arrival; admitted messages
+    release at max(deadline, arrival), in deadline order.
+    """
+    d = deadlines[:, None]
+    admitted = jax.vmap(_release_one_receiver, in_axes=(None, 1), out_axes=1)(
+        deadlines, arrivals)
+    release = jnp.where(admitted, jnp.maximum(d, arrivals), jnp.inf)
+    return admitted, release
+
+
+def dom_release_schedule_chunked(deadlines: np.ndarray, arrivals: np.ndarray,
+                                 chunk: int = 2048) -> tuple[np.ndarray, np.ndarray]:
+    """Chunked (deadline-sorted) variant for large N.
+
+    Each chunk is processed exactly, extended by a *halo* of later-deadline
+    messages whose deadlines fall within the maximum observed arrival
+    lateness of the chunk's tail -- those are the only later messages that
+    can be released before a chunk message arrives and reject it. Across
+    chunks the released-deadline watermark carries forward. Agreement with
+    the exact scan (`dom_release_schedule`) is property-tested.
+    """
+    order = np.argsort(deadlines, kind="stable")
+    inv = np.argsort(order, kind="stable")
+    d_sorted = deadlines[order]
+    a_sorted = arrivals[order]
+    N, R = arrivals.shape
+    fin_a = np.where(np.isfinite(a_sorted), a_sorted, -np.inf)
+    max_late = max(0.0, float(np.max(fin_a - d_sorted[:, None], initial=0.0)))
+    admitted = np.zeros((N, R), dtype=bool)
+    release = np.full((N, R), np.inf)
+    watermark = np.full((R,), -np.inf)
+    for lo in range(0, N, chunk):
+        hi = min(lo + chunk, N)
+        # halo: later-deadline messages that could reject a chunk member
+        hi_ext = int(np.searchsorted(d_sorted, d_sorted[hi - 1] + max_late,
+                                     side="right"))
+        hi_ext = min(max(hi_ext, hi), N)
+        adm, rel = dom_release_schedule(jnp.asarray(d_sorted[lo:hi_ext]),
+                                        jnp.asarray(a_sorted[lo:hi_ext]))
+        adm = np.asarray(adm)[: hi - lo]
+        # Apply the carried watermark: a message also needs deadline > the
+        # largest deadline released in prior chunks *before its arrival*.
+        bad = d_sorted[lo:hi, None] <= watermark[None, :]
+        adm = adm & ~bad
+        rel = np.where(adm, np.maximum(d_sorted[lo:hi, None], a_sorted[lo:hi]), np.inf)
+        admitted[lo:hi] = adm
+        release[lo:hi] = rel
+        fin = np.isfinite(rel)
+        if fin.any():
+            watermark = np.maximum(watermark,
+                                   np.max(np.where(fin, d_sorted[lo:hi, None], -np.inf), axis=0))
+    return admitted[inv], release[inv]
+
+
+# ---------------------------------------------------------------------------
+# Nezha commit classification
+# ---------------------------------------------------------------------------
+def nezha_commit_times(
+    deadlines: np.ndarray,          # [N] request deadlines (proxy-stamped)
+    arrivals: np.ndarray,           # [N, R] request arrival at each replica
+    reply_owd: np.ndarray,          # [N, R] replica->proxy reply delay
+    leader: int,
+    f: int,
+    mod_owd: Optional[np.ndarray] = None,   # [N, R] leader->follower log-mod delay
+    leader_batch_delay: float = 50e-6,
+) -> dict:
+    """Classify each request's commit path and commit time at the proxy.
+
+    Fast path: request admitted at leader + enough followers with *identical
+    log prefixes*. In steady state, hash-consistency at request m's release
+    equals "the set of admitted non-commutative requests with smaller
+    deadline is identical" -- we approximate set-identity by requiring the
+    follower to have admitted m AND every smaller-deadline request the leader
+    admitted that m's reply hash covers. For the null-app benchmark (all
+    requests non-commutative per key-class), we use the per-key refinement
+    upstream by pre-filtering to each key class.
+
+    Returns dict with commit_time[N], fast[N], committed[N].
+    """
+    N, R = arrivals.shape
+    admitted, release = dom_release_schedule_chunked(deadlines, arrivals)
+    admitted = np.asarray(admitted)
+    release = np.asarray(release)
+
+    # --- hash consistency: prefix-set equality per replica vs leader -------
+    order = np.argsort(deadlines, kind="stable")
+    adm_sorted = admitted[order]                       # [N, R] in deadline order
+    lead_adm = adm_sorted[:, leader]
+    # A replica's prefix (strictly before position i) matches the leader's iff
+    # the cumulative count of disagreements with the leader is 0.
+    disagree = adm_sorted != lead_adm[:, None]
+    cum_disagree = np.cumsum(disagree, axis=0) - disagree  # exclusive prefix
+    prefix_match = cum_disagree == 0                       # [N, R]
+    # Back to original order.
+    inv = np.argsort(order, kind="stable")
+    prefix_match = prefix_match[inv]
+
+    # --- replies ------------------------------------------------------------
+    fast_reply_t = np.where(admitted, release + reply_owd, np.inf)   # [N, R]
+    fast_hash_ok = admitted & prefix_match & admitted[:, [leader]]
+
+    # Fast quorum: leader + (fq-1) matching followers, by reply arrival time.
+    fq = fast_quorum_size(f)
+    ok_t = np.where(fast_hash_ok, fast_reply_t, np.inf)
+    ok_sorted = np.sort(ok_t, axis=1)
+    fast_commit_t = np.where(
+        np.isfinite(ok_t[:, leader]),
+        ok_sorted[:, fq - 1] if fq - 1 < R else np.inf,
+        np.inf,
+    )
+    fast_commit_t = np.maximum(fast_commit_t, ok_t[:, leader])
+
+    # --- slow path ------------------------------------------------------------
+    # Leader appends everything eventually: late requests get re-deadlined and
+    # released ~immediately at the leader.
+    leader_t = np.where(admitted[:, leader], release[:, leader], arrivals[:, leader])
+    leader_t = np.where(np.isfinite(arrivals[:, leader]), leader_t, np.inf)
+    if mod_owd is None:
+        mod_owd = reply_owd  # symmetric paths by default
+    # log-modification reaches follower; follower syncs; sends slow-reply.
+    sync_t = leader_t[:, None] + leader_batch_delay + mod_owd          # [N, R]
+    # Follower can only sync m after receiving it (or fetching: +2 hops).
+    have_t = np.where(np.isfinite(arrivals), arrivals, leader_t[:, None] + 3 * np.nanmean(reply_owd))
+    slow_ready = np.maximum(sync_t, have_t)
+    slow_reply_t = slow_ready + reply_owd
+    slow_reply_t[:, leader] = leader_t + reply_owd[:, leader]          # leader fast-reply
+    sq = slow_quorum_size(f)
+    slow_sorted = np.sort(slow_reply_t, axis=1)
+    slow_commit_t = np.maximum(slow_sorted[:, sq - 1], slow_reply_t[:, leader])
+
+    commit_t = np.minimum(fast_commit_t, slow_commit_t)
+    fast = fast_commit_t <= slow_commit_t
+    committed = np.isfinite(commit_t)
+    return {
+        "commit_time": commit_t,
+        "fast": fast & committed,
+        "committed": committed,
+        "admitted": admitted,
+        "release": release,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Reordering score (vectorized LIS via patience counting in numpy)
+# ---------------------------------------------------------------------------
+def reordering_score_np(ref_ranks: np.ndarray) -> float:
+    """1 - LIS/len over an array of reference ranks (see sim.network)."""
+    import bisect
+
+    tails: list = []
+    for x in ref_ranks.tolist():
+        i = bisect.bisect_left(tails, x)
+        if i == len(tails):
+            tails.append(x)
+        else:
+            tails[i] = x
+    if ref_ranks.size == 0:
+        return 0.0
+    return (1.0 - len(tails) / ref_ranks.size) * 100.0
+
+
+def multicast_reordering(owd: np.ndarray, send_times: np.ndarray) -> float:
+    """Fig 1-2 metric: reordering of receiver 2 w.r.t. receiver 1.
+
+    owd: [N, 2] one-way delays; send_times: [N].
+    """
+    t1 = send_times + owd[:, 0]
+    t2 = send_times + owd[:, 1]
+    order1 = np.argsort(t1, kind="stable")
+    rank1 = np.empty_like(order1)
+    rank1[order1] = np.arange(len(order1))
+    order2 = np.argsort(t2, kind="stable")
+    return reordering_score_np(rank1[order2])
+
+
+def dom_reordering(owd: np.ndarray, send_times: np.ndarray, deadlines: np.ndarray) -> float:
+    """Fig 3: reordering of the *released* sequences under DOM."""
+    arrivals = send_times[:, None] + owd
+    admitted, release = dom_release_schedule_chunked(deadlines, arrivals)
+    both = admitted[:, 0] & admitted[:, 1]
+    r1, r2 = release[both, 0], release[both, 1]
+    order1 = np.argsort(r1, kind="stable")
+    rank1 = np.empty_like(order1)
+    rank1[order1] = np.arange(len(order1))
+    order2 = np.argsort(r2, kind="stable")
+    return reordering_score_np(rank1[order2])
+
+
+__all__ = [
+    "VecDomParams",
+    "dom_release_schedule",
+    "dom_release_schedule_chunked",
+    "nezha_commit_times",
+    "multicast_reordering",
+    "dom_reordering",
+    "reordering_score_np",
+]

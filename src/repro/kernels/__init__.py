@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+  flash_attention -- tiled online-softmax attention (train/prefill)
+  ssd_scan        -- Mamba2/SSD chunked scan with VMEM state carry
+  dom_release     -- bitonic deadline-ordered release (DOM early-buffer)
+  inchash         -- murmur32 entry hashes + prefix XOR (fast-reply hashes)
+
+Each has ops.py (jit'd wrapper w/ backend dispatch) and ref.py (pure-jnp
+oracle); tests sweep shapes/dtypes in interpret mode.
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

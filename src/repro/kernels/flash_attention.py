@@ -1,0 +1,123 @@
+"""Pallas TPU flash-attention kernel (forward).
+
+Tiling: grid = (batch*kv_head_groups, q_blocks); each program streams KV
+blocks for one Q tile through VMEM, maintaining the online-softmax running
+max/denominator in VREGs. Block shapes are MXU-aligned (128 multiples on the
+contracting/lane dims); the causal/banded structure skips KV blocks entirely
+above the diagonal or outside the sliding window, so cost is O(S*W) under a
+window.
+
+The pure-jnp oracle is repro.kernels.ref.flash_attention_ref; interpret=True
+runs the kernel body on CPU for the test suite (the TARGET is TPU v5e VMEM:
+one (Bq=128, D<=256) Q tile + one (Bk=128, D) KV tile + accumulators
+comfortably fit the 16MiB/core budget).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, *, block_q, block_k, n_kv_blocks,
+               causal, window, seq_k, scale):
+    qi = pl.program_id(1)
+    q = q_ref[...].astype(jnp.float32) * scale          # [block_q, D]
+    m = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l = jnp.zeros((block_q,), jnp.float32)
+    acc = jnp.zeros((block_q, q.shape[-1]), jnp.float32)
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, 1), 0)[:, 0]
+
+    def body(kj, carry):
+        m, l, acc = carry
+        k = pl.load(k_ref, (pl.dslice(kj * block_k, block_k), slice(None)))
+        v = pl.load(v_ref, (pl.dslice(kj * block_k, block_k), slice(None)))
+        s = jax.lax.dot_general(q, k.astype(jnp.float32),
+                                (((1,), (1,)), ((), ())))   # [bq, bk]
+        k_pos = kj * block_k + jax.lax.broadcasted_iota(jnp.int32, (1, block_k), 1)[0]
+        mask = k_pos[None, :] < seq_k
+        if causal:
+            mask &= q_pos[:, None] >= k_pos[None, :]
+        if window is not None:
+            mask &= (q_pos[:, None] - k_pos[None, :]) < window
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(mask, p, 0.0)                       # kill fully-masked rows
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=1)
+        acc_new = acc * corr[:, None] + jax.lax.dot_general(
+            p, v.astype(jnp.float32), (((1,), (0,)), ((), ())))
+        return m_new, l_new, acc_new
+
+    # static KV-block range: causal upper bound + window lower bound
+    hi = n_kv_blocks
+    lo = 0
+    if causal:
+        # blocks strictly above the diagonal contribute nothing; computed
+        # bound must be dynamic in qi -> use fori with dynamic upper bound.
+        hi_dyn = jnp.minimum(((qi + 1) * block_q + block_k - 1) // block_k, n_kv_blocks)
+    else:
+        hi_dyn = n_kv_blocks
+    if window is not None:
+        lo_dyn = jnp.maximum((qi * block_q - window + 1) // block_k, 0)
+    else:
+        lo_dyn = 0
+    m, l, acc = jax.lax.fori_loop(lo_dyn, hi_dyn, body, (m, l, acc))
+    o_ref[...] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention_pallas(q, k, v, *, causal=True, window=None,
+                           block_q=128, block_k=128, interpret=False):
+    """q: [B, S, Hq, D]; k/v: [B, S, Hk, D] -> [B, S, Hq, D].
+
+    GQA: queries of group g attend the shared KV head g // (Hq/Hk).
+    """
+    B, S, Hq, D = q.shape
+    _, Sk, Hk, _ = k.shape
+    G = Hq // Hk
+    scale = 1.0 / math.sqrt(D)
+    block_q = min(block_q, S)
+    block_k = min(block_k, Sk)
+    pad_q = (-S) % block_q
+    pad_k = (-Sk) % block_k
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    Sp, Skp = q.shape[1], k.shape[1]
+    nq, nk = Sp // block_q, Skp // block_k
+
+    # layout: fold (B, Hq) into the grid's leading axis
+    qf = q.transpose(0, 2, 1, 3).reshape(B * Hq, Sp, D)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * Hk, Skp, D)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * Hk, Skp, D)
+
+    kernel = functools.partial(_fa_kernel, block_q=block_q, block_k=block_k,
+                               n_kv_blocks=nk, causal=causal, window=window,
+                               seq_k=Sk, scale=scale)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * Hq, nq),
+        in_specs=[
+            pl.BlockSpec((None, block_q, D), lambda h, i: (h, i, 0)),
+            pl.BlockSpec((None, Skp, D), lambda h, i, G=G: (h // G, 0, 0)),
+            pl.BlockSpec((None, Skp, D), lambda h, i, G=G: (h // G, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, D), lambda h, i: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * Hq, Sp, D), q.dtype),
+        interpret=interpret,
+    )(qf, kf, vf)
+    out = out.reshape(B, Hq, Sp, D).transpose(0, 2, 1, 3)
+    return out[:, :S]
+
+
+__all__ = ["flash_attention_pallas"]

@@ -1,0 +1,89 @@
+"""Pallas TPU kernel: incremental fast-reply hashes (paper S8.1).
+
+For a batch of appended log entries, compute h(entry_i) (murmur3-mixed
+<deadline, client-id, request-id>) and the running prefix XOR -- the hash
+each fast-reply carries. XOR-prefix is a Hillis-Steele scan: log2(n) sweeps
+of shift+xor on the VPU's uint32 lanes (TPU has no 64-bit integer datapath;
+the 32-bit lattice is the hardware adaptation, see repro.core.hashing).
+
+Grid carries the running fold across blocks in SMEM-like scratch so a
+replica can hash an arbitrarily long append stream block by block.
+
+Oracle: repro.kernels.ref.inchash_ref.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _mix32(x):
+    x = x ^ (x >> jnp.uint32(16))
+    x = x * jnp.uint32(0x85EBCA6B)
+    x = x ^ (x >> jnp.uint32(13))
+    x = x * jnp.uint32(0xC2B2AE35)
+    return x ^ (x >> jnp.uint32(16))
+
+
+def _inchash_kernel(d_ref, c_ref, r_ref, h_ref, pf_ref, carry_ref, *, block):
+    bi = pl.program_id(0)
+
+    @pl.when(bi == 0)
+    def _init():
+        carry_ref[0] = jnp.uint32(0)
+
+    d = _mix32(d_ref[...].astype(jnp.uint32))
+    c = _mix32(c_ref[...].astype(jnp.uint32) ^ jnp.uint32(0xA5A5A5A5))
+    r = _mix32(r_ref[...].astype(jnp.uint32) ^ jnp.uint32(0x5A5A5A5A))
+    h = _mix32(d ^ (c * jnp.uint32(0x01000193)) ^ r)
+    h_ref[...] = h
+
+    # Hillis-Steele prefix XOR within the block
+    pf = h
+    idx = jax.lax.iota(jnp.int32, block)
+    shift = 1
+    while shift < block:
+        rolled = jnp.roll(pf, shift)
+        pf = pf ^ jnp.where(idx >= shift, rolled, jnp.uint32(0))
+        shift *= 2
+    pf = pf ^ carry_ref[0]
+    pf_ref[...] = pf
+    carry_ref[0] = pf[block - 1]
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def inchash_pallas(deadline_ns, client_id, request_id, *, block=256, interpret=False):
+    """[n] uint32 triples -> (entry_hashes [n], prefix_hashes [n])."""
+    n = deadline_ns.shape[0]
+    block = min(block, max(n, 1))
+    pad = (-n) % block
+    if pad:
+        z = jnp.zeros(pad, jnp.uint32)
+        deadline_ns = jnp.concatenate([deadline_ns.astype(jnp.uint32), z])
+        client_id = jnp.concatenate([client_id.astype(jnp.uint32), z])
+        request_id = jnp.concatenate([request_id.astype(jnp.uint32), z])
+    npad = deadline_ns.shape[0]
+    nb = npad // block
+    kernel = functools.partial(_inchash_kernel, block=block)
+    h, pf = pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,)),
+                  pl.BlockSpec((block,), lambda i: (i,)),
+                  pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=[pl.BlockSpec((block,), lambda i: (i,)),
+                   pl.BlockSpec((block,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct((npad,), jnp.uint32),
+                   jax.ShapeDtypeStruct((npad,), jnp.uint32)],
+        scratch_shapes=[pltpu.SMEM((1,), jnp.uint32)],
+        interpret=interpret,
+    )(deadline_ns.astype(jnp.uint32), client_id.astype(jnp.uint32),
+      request_id.astype(jnp.uint32))
+    return h[:n], pf[:n]
+
+
+__all__ = ["inchash_pallas"]

@@ -1,0 +1,71 @@
+"""jit'd wrappers selecting kernel vs. pure-jnp path.
+
+On TPU the Pallas kernels run compiled; this container is CPU-only so the
+default is the jnp path, with `use_pallas=True` running interpret mode
+(used by the test suite; identical numerics asserts).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.dom_release import dom_release_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.inchash import inchash_pallas
+from repro.kernels.ssd_scan import ssd_scan_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def attention(q, k, v, *, causal=True, window=None, use_pallas=None):
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                      interpret=not _on_tpu())
+    from repro.models.attention import flash_attention
+
+    return flash_attention(q, k, v, causal=causal, window=window)
+
+
+def ssd_scan(x, dt, A, B, C, *, chunk=128, use_pallas=None):
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        return ssd_scan_pallas(x, dt, A, B, C, chunk=chunk,
+                               interpret=not _on_tpu())
+    return _ref.ssd_scan_ref(x, dt, A, B, C)
+
+
+def dom_release(deadlines, admitted, clock_now, *, use_pallas=None):
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        return dom_release_pallas(deadlines, admitted, clock_now,
+                                  interpret=not _on_tpu())
+    return dom_release_ref_order(deadlines, admitted, clock_now)
+
+
+def dom_release_ref_order(deadlines, admitted, clock_now):
+    """Oracle for dom_release: masked stable argsort by deadline."""
+    released = jnp.asarray(admitted, bool) & (deadlines <= clock_now)
+    keys = jnp.where(released, deadlines, jnp.inf)
+    order = jnp.argsort(keys, stable=True).astype(jnp.int32)
+    n_rel = jnp.sum(released.astype(jnp.int32))
+    seq = jnp.arange(deadlines.shape[0])
+    return jnp.where(seq < n_rel, order, -1), n_rel
+
+
+def inchash(deadline_ns, client_id, request_id, *, use_pallas=None):
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        return inchash_pallas(deadline_ns, client_id, request_id,
+                              interpret=not _on_tpu())
+    return _ref.inchash_ref(deadline_ns, client_id, request_id)
+
+
+__all__ = ["attention", "ssd_scan", "dom_release", "dom_release_ref_order", "inchash"]

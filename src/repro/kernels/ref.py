@@ -1,0 +1,75 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the correctness references the kernel tests assert against
+(interpret=True on CPU; the same asserts run on real TPU).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hashing import entry_hash_jnp, prefix_hashes_jnp
+from repro.models.attention import reference_attention
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None):
+    """[B, S, H, D] x [B, S, Hk, D]^2 -> [B, S, H, D]."""
+    return reference_attention(q, k, v, causal=causal, window=window)
+
+
+def ssd_scan_ref(x, dt, A, B, C):
+    """Sequential SSD recurrence. Shapes as repro.models.ssm.ssd_chunked
+    (no D skip -- the kernel computes the core scan only).
+
+    x: [b,S,H,P], dt: [b,S,H], A: [H], B,C: [b,S,N] -> y [b,S,H,P]."""
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp
+        decay = jnp.exp(dtt * A)                                     # [b,H]
+        h = h * decay[..., None, None] + jnp.einsum(
+            "bh,bn,bhp->bhnp", dtt, bt, xt)
+        y = jnp.einsum("bn,bhnp->bhp", ct, h)
+        return h, y
+
+    b, S, H, P = x.shape
+    N = B.shape[-1]
+    h0 = jnp.zeros((b, H, N, P), jnp.float32)
+    xs = (x.transpose(1, 0, 2, 3).astype(jnp.float32),
+          dt.transpose(1, 0, 2).astype(jnp.float32),
+          B.transpose(1, 0, 2).astype(jnp.float32),
+          C.transpose(1, 0, 2).astype(jnp.float32))
+    _, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype)
+
+
+def dom_release_ref(deadlines, arrivals, clock_now):
+    """Early-buffer release set + order for ONE receiver at time `clock_now`.
+
+    deadlines/arrivals: [N]. A message is in the early-buffer iff its
+    deadline exceeds the largest deadline among messages already released
+    when it arrived (the DOM entrance check); it is released iff its deadline
+    <= clock_now. Returns (released_mask [N], order [N] = release rank or -1,
+    both by message index).
+    """
+    from repro.core.vectorized import dom_release_schedule
+
+    admitted, release = dom_release_schedule(deadlines, arrivals[:, None])
+    admitted = admitted[:, 0]
+    released = admitted & (deadlines <= clock_now)
+    # release order = deadline order among released
+    key = jnp.where(released, deadlines, jnp.inf)
+    order_idx = jnp.argsort(key, stable=True)
+    ranks = jnp.full(deadlines.shape, -1, jnp.int32)
+    n_rel = jnp.sum(released)
+    seq = jnp.arange(deadlines.shape[0])
+    ranks = ranks.at[order_idx].set(jnp.where(seq < n_rel, seq, -1).astype(jnp.int32))
+    return released, ranks
+
+
+def inchash_ref(deadline_ns, client_id, request_id):
+    """Per-entry 32-bit hashes + prefix XOR folds (fast-reply hashes)."""
+    h = entry_hash_jnp(deadline_ns, client_id, request_id)
+    return h, prefix_hashes_jnp(h)
+
+
+__all__ = ["flash_attention_ref", "ssd_scan_ref", "dom_release_ref", "inchash_ref"]

@@ -1,0 +1,94 @@
+"""Pallas TPU kernel for the Mamba2/SSD chunked scan.
+
+Grid = (batch, n_chunks); the chunk axis is sequential ("arbitrary"
+dimension semantics) and carries the [H, N, P] state in a VMEM scratch
+buffer across grid steps -- the TPU-native replacement for the GPU
+implementation's inter-block shared-memory handoff. Within a chunk the
+quadratic dual form runs on the MXU:
+
+  Y_intra = ((C B^T) . L) (dt x),   state' = exp(l_last) state + B^T (decay dt x)
+
+Block shapes: chunk Q=128 rows (8x128-aligned), N/P lanes 64-128.
+Oracle: repro.kernels.ref.ssd_scan_ref (sequential recurrence).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, h_scratch, *, nc):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scratch[...] = jnp.zeros_like(h_scratch)
+
+    x = x_ref[...].astype(jnp.float32)      # [Q, H, P]
+    dt = dt_ref[...].astype(jnp.float32)    # [Q, H]
+    A = a_ref[...].astype(jnp.float32)      # [H]
+    B = b_ref[...].astype(jnp.float32)      # [Q, N]
+    C = c_ref[...].astype(jnp.float32)      # [Q, N]
+    Q = x.shape[0]
+
+    la = dt * A[None, :]                    # [Q, H] log-decay
+    cum = jnp.cumsum(la, axis=0)            # inclusive
+    # intra-chunk
+    scores = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())))   # [Q, Q]
+    decay = cum[:, None, :] - cum[None, :, :]                      # [Q, K, H]
+    causal = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    decay = jnp.where(causal[:, :, None], decay, -1e30)
+    L = jnp.exp(decay)
+    M = scores[:, :, None] * L * dt[None, :, :]                    # [Q, K, H]
+    y_intra = jnp.einsum("qkh,khp->qhp", M, x)
+    # inter-chunk from carried state
+    h = h_scratch[...].astype(jnp.float32)                         # [H, N, P]
+    y_inter = jnp.einsum("qn,hnp->qhp", C, h) * jnp.exp(cum)[:, :, None]
+    y_ref[...] = (y_intra + y_inter).astype(y_ref.dtype)
+    # state update
+    last = cum[-1, :]                                              # [H]
+    d2e = jnp.exp(last[None, :] - cum) * dt                        # [Q, H]
+    inc = jnp.einsum("qh,qn,qhp->hnp", d2e, B, x)
+    h_scratch[...] = (h * jnp.exp(last)[:, None, None] + inc).astype(h_scratch.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan_pallas(x, dt, A, B, C, *, chunk=128, interpret=False):
+    """x: [b,S,H,P]; dt: [b,S,H]; A: [H]; B,C: [b,S,N] -> y [b,S,H,P]."""
+    b, S, H, P = x.shape
+    N = B.shape[-1]
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    Sp = x.shape[1]
+    nc = Sp // Q
+
+    kernel = functools.partial(_ssd_kernel, nc=nc)
+    y = pl.pallas_call(
+        kernel,
+        grid=(b, nc),
+        in_specs=[
+            pl.BlockSpec((None, Q, H, P), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((None, Q, H), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((H,), lambda i, j: (0,)),
+            pl.BlockSpec((None, Q, N), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((None, Q, N), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, Q, H, P), lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, Sp, H, P), x.dtype),
+        scratch_shapes=[pltpu.VMEM((H, N, P), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, B, C)
+    return y[:, :S]
+
+
+__all__ = ["ssd_scan_pallas"]

@@ -1,0 +1,210 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes, print memory/cost analysis, and dump the artifacts
+the roofline analysis consumes.
+
+MUST be run as a module entry point (python -m repro.launch.dryrun ...);
+the XLA_FLAGS line above executes before any other import so jax sees 512
+host devices.
+
+Usage:
+  python -m repro.launch.dryrun --arch tinyllama-1.1b --shape train_4k
+  python -m repro.launch.dryrun --all --multi-pod both --out results/dryrun
+"""
+import argparse
+import json
+import time
+import traceback
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: str | None = None,
+             save_hlo: bool = True, donate: bool = True, verbose: bool = True,
+             overrides: dict | None = None, tag_suffix: str = "") -> dict:
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.analysis.hlo import collective_bytes_from_hlo
+    from repro.configs import get_config
+    from repro.configs.shapes import SHAPES, input_specs, shape_applicable
+    from repro.launch.mesh import make_production_mesh
+    from repro.models.model import make_decode_step, make_prefill
+    from repro.parallel.sharding import cache_shardings
+    from repro.parallel import sharding as _sh
+    from repro.train.train_step import make_train_state, make_train_step
+
+    cfg = get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+
+    def param_shardings(ap, mesh, serving=False):
+        return _sh.param_shardings(ap, mesh, dp_only=cfg.dp_only,
+                                   tp_only=cfg.serve_tp_only and serving,
+                                   ddp=cfg.ddp)
+
+    def batch_shardings(b, mesh):
+        return _sh.batch_shardings(b, mesh, dp_only=cfg.dp_only or cfg.ddp)
+    ok, reason = shape_applicable(cfg, shape)
+    res = {"arch": arch, "shape": shape, "multi_pod": multi_pod,
+           "variant": tag_suffix or "baseline", "overrides": overrides or {}}
+    if not ok:
+        res.update(status="skipped", reason=reason)
+        return res
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    t0 = time.time()
+    try:
+        kind, specs = input_specs(cfg, shape)
+        with jax.sharding.use_mesh(mesh) if hasattr(jax.sharding, "use_mesh") else mesh:
+            if kind == "train":
+                state = make_train_state(cfg)          # abstract
+                step = make_train_step(cfg)
+                state_sh = jax.tree.map(
+                    lambda s: s, param_shardings(state.params, mesh))
+                from repro.train.train_step import TrainState
+                from repro.train.optimizer import AdamWState
+
+                opt_sh = AdamWState(
+                    step=jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec()),
+                    m=param_shardings(state.opt.m, mesh),
+                    v=param_shardings(state.opt.v, mesh))
+                in_sh = (TrainState(params=state_sh, opt=opt_sh),
+                         batch_shardings(specs["batch"], mesh))
+                lowered = jax.jit(
+                    step,
+                    in_shardings=in_sh,
+                    out_shardings=(in_sh[0], None),
+                    donate_argnums=(0,) if donate else (),
+                ).lower(state, specs["batch"])
+            elif kind == "prefill":
+                from repro.models.model import abstract_params
+
+                pdt = jnp.dtype(cfg.serve_params_dtype)
+                params = abstract_params(cfg, dtype=pdt)
+                p_sh = param_shardings(params, mesh, serving=True)
+                fn = make_prefill(cfg)
+                lowered = jax.jit(
+                    fn,
+                    in_shardings=(p_sh, batch_shardings(specs["batch"], mesh)),
+                ).lower(params, specs["batch"])
+            else:  # decode
+                from repro.models.model import abstract_params
+
+                pdt = jnp.dtype(cfg.serve_params_dtype)
+                params = abstract_params(cfg, dtype=pdt)
+                p_sh = param_shardings(params, mesh, serving=True)
+                c_sh = cache_shardings(specs["cache"], mesh)
+                fn = make_decode_step(cfg)
+                lowered = jax.jit(
+                    fn,
+                    in_shardings=(p_sh, c_sh,
+                                  batch_shardings(specs["tokens"], mesh),
+                                  jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())),
+                    donate_argnums=(1,) if donate else (),
+                ).lower(params, specs["cache"], specs["tokens"], specs["cache_len"])
+
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0]
+        hlo = compiled.as_text()
+        coll = collective_bytes_from_hlo(hlo)
+        res.update(
+            status="ok",
+            kind=kind,
+            n_chips=int(n_chips),
+            lower_s=round(t_lower, 1),
+            compile_s=round(t_compile, 1),
+            # cost_analysis counts loop bodies ONCE -- kept for reference
+            flops_raw=float(cost.get("flops", 0.0)),
+            bytes_accessed_raw=float(cost.get("bytes accessed", 0.0)),
+            # trip-count-corrected per-device metrics (analysis/hlo.py)
+            flops=float(coll.get("dot_flops", 0.0)),
+            bytes_accessed=float(coll.get("memory_bytes", 0.0)),
+            collective_bytes=coll,
+            memory={
+                "argument_size_bytes": getattr(mem, "argument_size_in_bytes", 0),
+                "output_size_bytes": getattr(mem, "output_size_in_bytes", 0),
+                "temp_size_bytes": getattr(mem, "temp_size_in_bytes", 0),
+                "generated_code_size_bytes": getattr(mem, "generated_code_size_in_bytes", 0),
+            },
+        )
+        if out_dir and save_hlo:
+            import gzip
+            import pathlib
+
+            p = pathlib.Path(out_dir)
+            p.mkdir(parents=True, exist_ok=True)
+            tag = f"{arch}__{shape}__{'pod2' if multi_pod else 'pod1'}{tag_suffix}"
+            with gzip.open(p / f"{tag}.hlo.txt.gz", "wt") as fh:
+                fh.write(hlo)
+        if verbose:
+            print(f"  memory_analysis: args={res['memory']['argument_size_bytes']/2**30:.2f}GiB "
+                  f"out={res['memory']['output_size_bytes']/2**30:.2f}GiB "
+                  f"temp={res['memory']['temp_size_bytes']/2**30:.2f}GiB "
+                  f"(totals across {n_chips} chips)")
+            print(f"  cost_analysis: flops={res['flops']:.3e} bytes={res['bytes_accessed']:.3e}")
+            print(f"  collective_bytes: {json.dumps(coll)}")
+    except Exception as e:  # noqa: BLE001 -- report the cell as failed
+        res.update(status="failed", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+    return res
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", choices=["off", "on", "both"], default="off")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--no-hlo", action="store_true")
+    args = ap.parse_args()
+
+    from repro.configs import all_arch_names
+    from repro.configs.shapes import SHAPES
+
+    cells = []
+    archs = all_arch_names() if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    pods = {"off": [False], "on": [True], "both": [False, True]}[args.multi_pod]
+    results = []
+    for mp in pods:
+        for a in archs:
+            for s in shapes:
+                print(f"=== {a} x {s} ({'2x16x16' if mp else '16x16'}) ===", flush=True)
+                r = run_cell(a, s, mp, out_dir=args.out, save_hlo=not args.no_hlo)
+                print(f"  -> {r['status']}" + (f" ({r.get('reason','')})" if r['status'] == 'skipped'
+                                               else (f" ERROR {r.get('error','')}" if r['status'] == 'failed' else "")),
+                      flush=True)
+                results.append(r)
+
+    import pathlib
+
+    out = pathlib.Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+    stamp = out / "dryrun_results.json"
+    existing = []
+    if stamp.exists():
+        existing = json.loads(stamp.read_text())
+        keys = {(r["arch"], r["shape"], r["multi_pod"]) for r in results}
+        existing = [r for r in existing if (r["arch"], r["shape"], r["multi_pod"]) not in keys]
+    stamp.write_text(json.dumps(existing + results, indent=1))
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skipped" for r in results)
+    n_fail = sum(r["status"] == "failed" for r in results)
+    print(f"\nDRY-RUN SUMMARY: ok={n_ok} skipped={n_skip} failed={n_fail}")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""Elastic scaling: recompute the mesh + shardings on the surviving device
+set and reshard the training state.
+
+Flow on a real cluster: the health monitor detects dead hosts -> a scaling
+event commits to the Nezha metadata log (so every survivor agrees on the new
+world) -> each survivor rebuilds the mesh from the agreed device list ->
+state is resharded (device-to-device where possible, checkpoint restore for
+lost FSDP shards) -> training resumes from the last committed step.
+
+Here the resharding math is real (jax.device_put with the new shardings);
+failure detection is injected by the caller/test.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.parallel.sharding import param_shardings
+
+
+@dataclass
+class WorldState:
+    n_devices: int
+    mesh_shape: tuple
+    generation: int = 0
+
+
+def plan_mesh(n_devices: int, *, model_parallel: int = 1) -> tuple:
+    """Largest (data, model) grid that fits the surviving device count."""
+    model = min(model_parallel, n_devices)
+    while n_devices % model:
+        model -= 1
+    return (n_devices // model, model)
+
+
+def remesh(devices, *, model_parallel: int = 1):
+    n = len(devices)
+    shape = plan_mesh(n, model_parallel=model_parallel)
+    arr = np.asarray(devices[: shape[0] * shape[1]]).reshape(shape)
+    return jax.sharding.Mesh(arr, ("data", "model"))
+
+
+def reshard_state(state, new_mesh, abstract_like=None):
+    """Move every array of `state` onto the new mesh's shardings."""
+    ref = abstract_like if abstract_like is not None else state
+    sh = param_shardings(ref, new_mesh)
+
+    def put(x, s):
+        return jax.device_put(x, s)
+
+    return jax.tree.map(put, state, sh)
+
+
+def elastic_step(world: WorldState, healthy_devices, log=None,
+                 model_parallel: int = 1) -> Optional[tuple]:
+    """If the healthy set changed, agree on a new world (via the metadata
+    log when present) and return (new_world, new_mesh); else None."""
+    n = len(healthy_devices)
+    if n == world.n_devices:
+        return None
+    shape = plan_mesh(n, model_parallel=model_parallel)
+    new_world = WorldState(n_devices=n, mesh_shape=shape,
+                           generation=world.generation + 1)
+    if log is not None:
+        log.record_scaling_event(step=new_world.generation, n_healthy=n,
+                                 mesh_shape=shape)
+    mesh = remesh(healthy_devices, model_parallel=model_parallel)
+    return new_world, mesh
+
+
+__all__ = ["WorldState", "plan_mesh", "remesh", "reshard_state", "elastic_step"]

@@ -1,0 +1,132 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=512"
+
+"""Perf hillclimbing on the three selected (arch x shape) cells.
+
+Each iteration records: hypothesis -> change -> before/after roofline terms
+-> confirmed/refuted. Results go to results/hillclimb.json and the table in
+EXPERIMENTS.md SPerf.
+
+  PYTHONPATH=src python -m repro.launch.hillclimb
+"""
+import json
+import pathlib
+
+from repro.launch.dryrun import run_cell
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+def terms(res: dict) -> dict:
+    c = res["flops"] / PEAK_FLOPS
+    m = res["bytes_accessed"] / HBM_BW
+    k = res["collective_bytes"]["total_bytes"] / ICI_BW
+    dom = max(("compute", c), ("memory", m), ("collective", k), key=lambda t: t[1])
+    return {"compute_s": c, "memory_s": m, "collective_s": k,
+            "dominant": dom[0], "bound_s": dom[1]}
+
+
+def iterate(arch: str, shape: str, steps: list[dict], out: list) -> None:
+    print(f"\n#### cell: {arch} x {shape} (16x16)")
+    base = run_cell(arch, shape, multi_pod=False, out_dir="results/hillclimb",
+                    verbose=False, tag_suffix="__base")
+    assert base["status"] == "ok", base
+    cur = terms(base)
+    print(f"baseline: compute={cur['compute_s']:.3e}s memory={cur['memory_s']:.3e}s "
+          f"collective={cur['collective_s']:.3e}s dominant={cur['dominant']}")
+    out.append({"arch": arch, "shape": shape, "step": "baseline",
+                "overrides": {}, **cur})
+    acc: dict = {}
+    for i, step in enumerate(steps):
+        acc = {**acc, **step["overrides"]}
+        print(f"\niter {i+1}: HYPOTHESIS: {step['hypothesis']}")
+        print(f"  CHANGE: {step['overrides']}  (napkin: {step['napkin']})")
+        res = run_cell(arch, shape, multi_pod=False, out_dir="results/hillclimb",
+                       verbose=False, overrides=dict(acc), tag_suffix=f"__it{i+1}")
+        if res["status"] != "ok":
+            print(f"  FAILED: {res.get('error')}")
+            out.append({"arch": arch, "shape": shape, "step": f"iter{i+1}",
+                        "overrides": dict(acc), "status": "failed",
+                        "error": res.get("error")})
+            continue
+        new = terms(res)
+        delta = (cur["bound_s"] - new["bound_s"]) / cur["bound_s"]
+        verdict = "CONFIRMED" if new[f"{cur['dominant']}_s"] < cur[f"{cur['dominant']}_s"] * 0.95 \
+            else "REFUTED"
+        print(f"  AFTER: compute={new['compute_s']:.3e}s memory={new['memory_s']:.3e}s "
+              f"collective={new['collective_s']:.3e}s dominant={new['dominant']}")
+        print(f"  bound step-time: {cur['bound_s']:.3e}s -> {new['bound_s']:.3e}s "
+              f"({delta*100:+.1f}%)  [{verdict}]")
+        out.append({"arch": arch, "shape": shape, "step": f"iter{i+1}",
+                    "hypothesis": step["hypothesis"], "napkin": step["napkin"],
+                    "overrides": dict(acc), **new,
+                    "bound_delta_pct": delta * 100, "verdict": verdict})
+        cur = new
+
+
+def main() -> None:
+    out: list = []
+
+    # ---- cell 1: most collective-bound ------------------------------------------
+    iterate("mamba2-130m", "train_4k", [
+        {"hypothesis": "TP=16 on a 768-wide model wastes ICI: every layer "
+                       "all-reduces [B,S,768] activations fwd+bwd; folding the "
+                       "model axis into data (pure FSDP over 256 ways) removes "
+                       "them, leaving only per-layer weight gathers "
+                       "(~130M*4B*3passes ~ 1.6GB/dev) and grad reduce-scatter.",
+         "napkin": "collective 27.6s -> ~0.1s (~250x); memory/compute unchanged",
+         "overrides": {"dp_only": True}},
+        {"hypothesis": "with collectives gone, memory dominates; the SSD "
+                       "chunk=128 >> N=16 wastes the intra-chunk quadratic "
+                       "form: shrink to chunk=64 (still MXU-aligned on P=64).",
+         "napkin": "intra-chunk flops/bytes ~ Q/2: ~2x less SSD traffic",
+         "overrides": {"ssm_chunk": 64}},
+    ], out)
+
+    # ---- cell 2: worst roofline fraction ------------------------------------------
+    iterate("hymba-1.5b", "train_4k", [
+        {"hypothesis": "full remat recomputes every matmul in the backward: "
+                       "switching to dots_saveable keeps MXU outputs resident, "
+                       "cutting compute ~1.7x and (counted) memory traffic for "
+                       "the recompute pass.",
+         "napkin": "compute 11.5s -> ~7s; memory down ~25%",
+         "overrides": {"remat": "dots"}},
+        {"hypothesis": "SSD chunk=128 with N=16 state: the [Q,Q] dual form "
+                       "costs ~Q*H*P flops/token vs ~N*H*P for the scan; "
+                       "chunk=32 cuts intra-chunk work 4x with 4x more "
+                       "(cheap) state carries.",
+         "napkin": "SSD flops ~4x less; attention unchanged",
+         "overrides": {"ssm_chunk": 32}},
+        {"hypothesis": "1.5B params with TP=16 leaves tiny per-device matmuls "
+                       "(d_ff/16=344) and activation all-reduces; pure FSDP "
+                       "(dp_only) removes TP collectives and restores "
+                       "MXU-friendly tile sizes.",
+         "napkin": "collective ~10x less; compute unchanged",
+         "overrides": {"dp_only": True}},
+    ], out)
+
+    # ---- cell 3: most representative of the paper (serving/decode) -----------------
+    iterate("qwen2-7b", "decode_32k", [
+        {"hypothesis": "decode re-gathers fp32 FSDP-sharded weights every "
+                       "step (1.9GB/dev over ICI). Serving needs no optimizer "
+                       "sharding: replicate weights across the data axis "
+                       "(TP-only) in bf16 -> the all-gather disappears and "
+                       "weight reads halve.",
+         "napkin": "collective 24.8ms -> ~0.5ms; memory ~ -30%",
+         "overrides": {"serve_tp_only": True, "serve_params_dtype": "bfloat16"}},
+        {"hypothesis": "with weights resident, KV-cache reads dominate decode "
+                       "HBM traffic; fp8 KV halves them at negligible decode "
+                       "quality cost.",
+         "napkin": "KV bytes 2B->1B: memory term ~ -35%",
+         "overrides": {"kv_dtype": "float8_e4m3fn"}},
+    ], out)
+
+    pathlib.Path("results").mkdir(exist_ok=True)
+    pathlib.Path("results/hillclimb.json").write_text(json.dumps(out, indent=1))
+    print("\nwrote results/hillclimb.json")
+
+
+if __name__ == "__main__":
+    main()

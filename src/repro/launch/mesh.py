@@ -1,0 +1,30 @@
+"""Production mesh construction.
+
+Single pod: 16x16 = 256 chips, axes (data, model).
+Multi-pod:  2x16x16 = 512 chips, axes (pod, data, model) -- the "pod" axis
+carries the slow inter-pod links; sharding rules put only DP/FSDP traffic
+on it.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (the dry-run sets XLA_FLAGS before any jax import).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(*, data: int = 1, model: int = 1):
+    """Small mesh over however many local devices exist (tests/examples)."""
+    n = len(jax.devices())
+    data = min(data, n)
+    model = min(model, max(n // data, 1))
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+__all__ = ["make_production_mesh", "make_host_mesh"]

@@ -1,0 +1,22 @@
+"""Model substrate: the 10 assigned architectures, built from composable
+pure-JAX layers (kernels in repro.kernels swap in for the hot paths on TPU).
+"""
+from repro.models.model import (
+    abstract_cache,
+    abstract_params,
+    count_params,
+    init_params,
+    make_decode_step,
+    make_loss_fn,
+    make_prefill,
+)
+
+__all__ = [
+    "abstract_cache",
+    "abstract_params",
+    "count_params",
+    "init_params",
+    "make_decode_step",
+    "make_loss_fn",
+    "make_prefill",
+]

@@ -1,0 +1,167 @@
+"""GQA attention with flash semantics in pure jnp.
+
+Training/prefill uses a chunked online-softmax formulation (lax.scan over KV
+chunks inside a scan over Q chunks) so 32K-sequence attention never
+materializes an [S, S] score matrix -- the same tiling the Pallas kernel
+(repro.kernels.flash_attention) implements for real on TPU VMEM. Sliding-
+window attention iterates only the banded KV chunks, giving true
+sub-quadratic cost for hymba.
+
+Decode computes one-token attention against a (padded) KV cache.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _chunk(x, size, axis):
+    n = x.shape[axis] // size
+    shape = x.shape[:axis] + (n, size) + x.shape[axis + 1:]
+    return x.reshape(shape)
+
+
+def flash_attention(
+    q: jnp.ndarray,               # [B, Sq, Hq, D]
+    k: jnp.ndarray,               # [B, Sk, Hk, D]
+    v: jnp.ndarray,               # [B, Sk, Hk, D]
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,  # sliding window (in positions), None=global
+    q_offset: int = 0,             # q position i attends kv positions <= i+q_offset
+    chunk_q: int = 512,
+    chunk_kv: int = 512,
+) -> jnp.ndarray:
+    """Chunked online-softmax attention; GQA via head-group broadcast."""
+    B, Sq, Hq, D = q.shape
+    _, Sk, Hk, _ = k.shape
+    G = Hq // Hk
+    scale = 1.0 / (D ** 0.5)
+
+    chunk_q = min(chunk_q, Sq)
+    chunk_kv = min(chunk_kv, Sk)
+    # pad to chunk multiples
+    pad_q = (-Sq) % chunk_q
+    pad_k = (-Sk) % chunk_kv
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    Sq_p, Sk_p = q.shape[1], k.shape[1]
+    nq, nk = Sq_p // chunk_q, Sk_p // chunk_kv
+
+    qc = _chunk(q, chunk_q, 1)            # [B, nq, cq, Hq, D]
+    kc = _chunk(k, chunk_kv, 1)           # [B, nk, ck, Hk, D]
+    vc = _chunk(v, chunk_kv, 1)
+    q_pos = jnp.arange(Sq_p) + q_offset
+    k_pos = jnp.arange(Sk_p)
+    qp = q_pos.reshape(nq, chunk_q)
+    kp = k_pos.reshape(nk, chunk_kv)
+
+    # Which KV chunks each Q chunk must visit (static banding).
+    if window is not None:
+        # positions [qlo - window + 1, qhi]: band of kv chunks
+        n_band = (window + chunk_q) // chunk_kv + 2
+        n_band = min(n_band, nk)
+    else:
+        n_band = nk
+
+    def q_body(_, qi):
+        qblk = qc[:, qi].astype(jnp.float32) * scale           # [B, cq, Hq, D]
+        qblk = qblk.reshape(B, chunk_q, Hk, G, D)
+        qpos = qp[qi]                                           # [cq]
+        if window is not None:
+            lo_pos = jnp.maximum(qpos[0] - window + 1, 0)
+            j0 = jnp.clip(lo_pos // chunk_kv, 0, nk - n_band)
+        else:
+            j0 = jnp.int32(0)
+
+        def kv_body(carry, jj):
+            m, l, acc = carry
+            j = j0 + jj
+            kblk = jax.lax.dynamic_index_in_dim(kc, j, 1, keepdims=False)   # [B, ck, Hk, D]
+            vblk = jax.lax.dynamic_index_in_dim(vc, j, 1, keepdims=False)
+            kpos = jax.lax.dynamic_index_in_dim(kp, j, 0, keepdims=False)   # [ck]
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qblk, kblk.astype(jnp.float32))
+            mask = jnp.ones((chunk_q, chunk_kv), bool)
+            if causal:
+                mask &= qpos[:, None] >= kpos[None, :]
+            if window is not None:
+                mask &= qpos[:, None] - kpos[None, :] < window
+            mask &= kpos[None, :] < Sk  # padding
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))                               # [B,Hk,G,cq]
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p, vblk.astype(jnp.float32))
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((B, Hk, G, chunk_q), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hk, G, chunk_q), jnp.float32)
+        a0 = jnp.zeros((B, Hk, G, chunk_q, D), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_body, (m0, l0, a0), jnp.arange(n_band))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        out = out.transpose(0, 3, 1, 2, 4).reshape(B, chunk_q, Hk * G, D)   # [B,cq,Hq,D]
+        return None, out.astype(q.dtype)
+
+    _, blocks = jax.lax.scan(q_body, None, jnp.arange(nq))   # [nq, B, cq, Hq, D]
+    out = blocks.transpose(1, 0, 2, 3, 4).reshape(B, Sq_p, Hq, D)
+    return out[:, :Sq]
+
+
+def decode_attention(
+    q: jnp.ndarray,               # [B, 1, Hq, D]
+    k_cache: jnp.ndarray,         # [B, Smax, Hk, D]
+    v_cache: jnp.ndarray,
+    cur_len,                      # [] or [B] -- number of valid cache slots
+    *,
+    window: Optional[int] = None,
+) -> jnp.ndarray:
+    """Single-token attention over a padded KV cache."""
+    B, Smax, Hk, D = k_cache.shape
+    Hq = q.shape[2]
+    G = Hq // Hk
+    scale = 1.0 / (D ** 0.5)
+    qh = (q.astype(jnp.float32) * scale).reshape(B, Hk, G, D)
+    s = jnp.einsum("bhgd,bshd->bhgs", qh, k_cache.astype(jnp.float32))
+    pos = jnp.arange(Smax)
+    cur = jnp.asarray(cur_len)
+    cur_b = cur if cur.ndim else jnp.full((B,), cur)
+    mask = pos[None, :] < cur_b[:, None]
+    if window is not None:
+        mask &= pos[None, :] >= (cur_b[:, None] - window)
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgs,bshd->bhgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, 1, Hq, D).astype(q.dtype)
+
+
+def reference_attention(q, k, v, *, causal=True, window=None, q_offset=0):
+    """O(S^2) oracle used by tests against flash_attention."""
+    B, Sq, Hq, D = q.shape
+    _, Sk, Hk, _ = k.shape
+    G = Hq // Hk
+    qh = q.reshape(B, Sq, Hk, G, D).astype(jnp.float32) / (D ** 0.5)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qh, k.astype(jnp.float32))
+    qpos = jnp.arange(Sq) + q_offset
+    kpos = jnp.arange(Sk)
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window is not None:
+        mask &= qpos[:, None] - kpos[None, :] < window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, Hq, D).astype(q.dtype)
+
+
+__all__ = ["flash_attention", "decode_attention", "reference_attention"]

@@ -1,0 +1,136 @@
+"""Composable pure-JAX layers: norms, RoPE, MLPs, embeddings.
+
+Convention: parameters are plain nested dicts of jnp arrays (fp32 storage);
+compute happens in bf16 (`cdt`). Layer-stacked parameters carry a leading
+[n_layers] axis and are consumed via lax.scan in transformer.py.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+CDT = jnp.bfloat16  # compute dtype
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+def rms_norm(x, scale, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * scale.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def apply_norm(x, p: dict, kind: str):
+    if kind == "rms":
+        return rms_norm(x, p["scale"])
+    return layer_norm(x, p["scale"], p["bias"])
+
+
+def norm_params(d: int, kind: str) -> dict:
+    if kind == "rms":
+        return {"scale": jnp.ones((d,), jnp.float32)}
+    return {"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings (full, partial, and chatglm-style 2d == half-rotary)
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, rope_frac: float, theta: float):
+    rot = int(head_dim * rope_frac) // 2 * 2
+    inv = 1.0 / (theta ** (np.arange(0, rot, 2, dtype=np.float64) / rot))
+    return jnp.asarray(inv, jnp.float32), rot
+
+
+def apply_rope(x, positions, rope_frac: float = 1.0, theta: float = 10000.0):
+    """x: [..., S, H, D]; positions: [..., S] int32.
+
+    chatglm's '2d RoPE' rotates only the first half of the head dims
+    (rope_frac=0.5), leaving the rest as-is -- exactly partial rotary.
+    """
+    D = x.shape[-1]
+    inv, rot = rope_freqs(D, rope_frac, theta)
+    if rot == 0:
+        return x
+    ang = positions[..., :, None].astype(jnp.float32) * inv  # [..., S, rot/2]
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    sin = sin[..., :, None, :]  # broadcast over heads
+    cos = cos[..., :, None, :]
+    xr = x[..., :rot]
+    xp = x[..., rot:]
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    yr = jnp.stack([y1, y2], axis=-1).reshape(xr.shape)
+    return jnp.concatenate([yr.astype(x.dtype), xp], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+def swiglu(x, p: dict):
+    g = jnp.einsum("...d,df->...f", x, p["w_gate"].astype(x.dtype))
+    u = jnp.einsum("...d,df->...f", x, p["w_up"].astype(x.dtype))
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("...f,fd->...d", h, p["w_down"].astype(x.dtype))
+
+
+def gelu_mlp(x, p: dict):
+    h = jnp.einsum("...d,df->...f", x, p["w_up"].astype(x.dtype))
+    if "b_up" in p:
+        h = h + p["b_up"].astype(x.dtype)
+    h = jax.nn.gelu(h.astype(jnp.float32), approximate=True).astype(x.dtype)
+    y = jnp.einsum("...f,fd->...d", h, p["w_down"].astype(x.dtype))
+    if "b_down" in p:
+        y = y + p["b_down"].astype(x.dtype)
+    return y
+
+
+def apply_mlp(x, p: dict, kind: str):
+    return swiglu(x, p) if kind == "swiglu" else gelu_mlp(x, p)
+
+
+def mlp_param_shapes(d: int, f: int, kind: str) -> dict:
+    if kind == "swiglu":
+        return {"w_gate": (d, f), "w_up": (d, f), "w_down": (f, d)}
+    return {"w_up": (d, f), "b_up": (f,), "w_down": (f, d), "b_down": (d,)}
+
+
+# ---------------------------------------------------------------------------
+# embeddings / head
+# ---------------------------------------------------------------------------
+def embed(tokens, table):
+    return jnp.take(table, tokens, axis=0).astype(CDT)
+
+
+def unembed(x, table):
+    return jnp.einsum("...d,vd->...v", x, table.astype(x.dtype))
+
+
+__all__ = [
+    "CDT",
+    "rms_norm",
+    "layer_norm",
+    "apply_norm",
+    "norm_params",
+    "apply_rope",
+    "swiglu",
+    "gelu_mlp",
+    "apply_mlp",
+    "mlp_param_shapes",
+    "embed",
+    "unembed",
+]

@@ -1,0 +1,231 @@
+"""Model API: abstract/real parameter construction, losses, prefill, decode.
+
+Everything here is shape-driven so the 512-device dry-run can lower
+train/serve steps from ShapeDtypeStructs without allocating anything.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ArchConfig
+from repro.models import transformer as tf
+from repro.models.layers import CDT
+
+
+# ---------------------------------------------------------------------------
+# parameters
+# ---------------------------------------------------------------------------
+def _map_shapes(shapes, fn, path=()):
+    if isinstance(shapes, dict):
+        return {k: _map_shapes(v, fn, path + (k,)) for k, v in shapes.items()}
+    return fn(path, shapes)
+
+
+def abstract_params(cfg: ArchConfig, dtype=jnp.float32):
+    return _map_shapes(tf.param_shapes(cfg),
+                       lambda p, s: jax.ShapeDtypeStruct(tuple(s), dtype))
+
+
+def init_params(cfg: ArchConfig, rng: jax.Array, dtype=jnp.float32):
+    """Real initialization -- smoke tests only (small configs)."""
+    shapes = tf.param_shapes(cfg)
+    counter = [0]
+
+    def make(path, shape):
+        shape = tuple(shape)
+        counter[0] += 1
+        key = jax.random.fold_in(rng, counter[0])
+        name = "/".join(path)
+        last = path[-1]
+        if last == "scale" or last == "out_norm":
+            return jnp.ones(shape, dtype)
+        if last == "D":
+            return jnp.ones(shape, dtype)
+        if last in ("bias", "bq", "bk", "bv", "b_up", "b_down", "dt_bias"):
+            return jnp.zeros(shape, dtype)
+        if last == "A_log":
+            return jnp.broadcast_to(
+                jnp.log(jnp.linspace(1.0, 16.0, shape[-1], dtype=dtype)), shape).copy()
+        fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+        return jax.random.normal(key, shape, dtype) / math.sqrt(max(fan_in, 1))
+
+    return _map_shapes(shapes, make)
+
+
+def count_params(cfg: ArchConfig, active_only: bool = False) -> int:
+    total = 0
+    expert_scale = (cfg.top_k / cfg.n_experts) if (active_only and cfg.n_experts) else 1.0
+
+    def add(path, shape):
+        nonlocal total
+        n = int(np.prod(shape))
+        if "moe" in path and path[-1] in ("w_gate", "w_up", "w_down"):
+            n = int(n * expert_scale)
+        total += n
+        return shape
+
+    _map_shapes(tf.param_shapes(cfg), add)
+    return total
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+def make_loss_fn(cfg: ArchConfig):
+    """Returns loss_fn(params, batch) -> (loss, metrics).
+
+    batch: {"tokens": [B, S]} (+ "frontend" [B, F, d] for vlm/audio-lm,
+    + "src" [B, Ssrc, d] for enc-dec).
+    """
+
+    def loss_fn(params, batch):
+        tokens = batch["tokens"]
+        if cfg.enc_dec:
+            enc_x = tf.encoder_forward(params, batch["src"], cfg)
+            ekv = tf.cross_kv(params, enc_x, cfg)
+            hidden, aux = tf.decoder_forward(params, tokens, cfg, enc_kv=ekv)
+            n_front = 0
+        else:
+            frontend = batch.get("frontend")
+            hidden, aux = tf.decoder_forward(params, tokens, cfg, frontend=frontend)
+            n_front = 0 if frontend is None else frontend.shape[1]
+        logits = tf.logits_from_hidden(params, hidden, cfg)
+        # next-token prediction on the text positions only
+        logits = logits[:, n_front:, :]
+        pred = logits[:, :-1]
+        tgt = tokens[:, 1:]
+        logp = jax.nn.log_softmax(pred.astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+        loss = nll.mean() + 0.01 * aux
+        return loss, {"loss": loss, "aux_loss": aux, "ntokens": tgt.size}
+
+    return loss_fn
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode
+# ---------------------------------------------------------------------------
+def abstract_cache(cfg: ArchConfig, batch: int, max_seq: int, src_len: int = 0,
+                   dtype=None):
+    """ShapeDtypeStructs for the decode cache."""
+    if dtype is None:
+        dtype = jnp.dtype(cfg.kv_dtype) if cfg.kv_dtype != "bfloat16" else CDT
+    L = cfg.n_layers
+    cache: dict = {}
+    if cfg.family != "ssm":
+        hd = cfg.resolved_head_dim
+        kv_len = min(max_seq, cfg.window + 1) if (cfg.window and cfg.family == "hybrid") else max_seq
+        kv_len = max_seq  # keep the full cache; window masks reads
+        kv = jax.ShapeDtypeStruct((L, batch, kv_len, cfg.n_kv_heads, hd), dtype)
+        cache["kv"] = (kv, kv)
+    if cfg.family in ("ssm", "hybrid"):
+        d_inner = cfg.ssm_expand * cfg.d_model
+        H = d_inner // cfg.ssm_headdim
+        conv_ch = d_inner + 2 * cfg.ssm_state
+        cache["mamba"] = {
+            "h": jax.ShapeDtypeStruct((L, batch, H, cfg.ssm_state, cfg.ssm_headdim), jnp.float32),
+            "conv": jax.ShapeDtypeStruct((L, batch, cfg.conv_width - 1, conv_ch), dtype),
+        }
+    if cfg.enc_dec:
+        xkv = jax.ShapeDtypeStruct((L, batch, src_len or cfg.n_frontend_tokens,
+                                    cfg.n_kv_heads, cfg.resolved_head_dim), dtype)
+        cache["cross"] = (xkv, xkv)
+    return cache
+
+
+def zero_cache(cfg: ArchConfig, batch: int, max_seq: int, src_len: int = 0, dtype=None):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        abstract_cache(cfg, batch, max_seq, src_len, dtype))
+
+
+def make_decode_step(cfg: ArchConfig):
+    """decode_step(params, cache, tokens [B,1], cache_len []) ->
+    (logits [B, V], new_cache). One new token against the cache."""
+
+    def decode_step(params, cache, tokens, cache_len):
+        x = jnp.take(params["embed"], tokens, axis=0).astype(CDT)
+        positions = (jnp.zeros((1,), jnp.int32) + cache_len)[None, :]
+        if cfg.pos == "learned":
+            x = x + jax.lax.dynamic_slice_in_dim(
+                params["pos_embed"], cache_len, 1, axis=0).astype(x.dtype)[None]
+
+        if cfg.family == "ssm":
+            def body(x, inp):
+                lp, c = inp
+                y, new_c = tf.mamba_block(x, lp, cfg, cache=c)
+                return y, new_c
+            x, new_mamba = jax.lax.scan(body, x, (params["layers"], cache["mamba"]))
+            new_cache = {"mamba": new_mamba}
+        else:
+            per_layer_cache: dict = {}
+            if "kv" in cache:
+                per_layer_cache["kv"] = cache["kv"]
+            if "mamba" in cache:
+                per_layer_cache["mamba"] = cache["mamba"]
+            if cfg.enc_dec:
+                ek, ev = cache["cross"]
+
+                def body(x, inp):
+                    lp, c, ekv = inp
+                    y, new_c, _ = tf.dense_block(x, lp, cfg, positions, cache=c,
+                                                 cache_len=cache_len, enc_out=ekv)
+                    return y, new_c
+                x, new_c = jax.lax.scan(body, x, (params["layers"], per_layer_cache, (ek, ev)))
+            else:
+                def body(x, inp):
+                    lp, c = inp
+                    y, new_c, _ = tf.dense_block(x, lp, cfg, positions, cache=c,
+                                                 cache_len=cache_len)
+                    return y, new_c
+                x, new_c = jax.lax.scan(body, x, (params["layers"], per_layer_cache))
+            new_cache = dict(new_c)
+            if cfg.enc_dec:
+                new_cache["cross"] = cache["cross"]
+
+        from repro.models.layers import apply_norm as _an
+
+        x = _an(x, params["final_norm"], cfg.norm)
+        logits = tf.logits_from_hidden(params, x, cfg)
+        return logits[:, 0, :], new_cache
+
+    return decode_step
+
+
+def make_prefill(cfg: ArchConfig):
+    """prefill(params, batch) -> (logits_last [B, V], hidden).
+
+    The dry-run exercises the full-context forward; cache construction for
+    serving lives in repro.serving.engine (it reuses decoder_forward too).
+    """
+
+    def prefill(params, batch):
+        tokens = batch["tokens"]
+        if cfg.enc_dec:
+            enc_x = tf.encoder_forward(params, batch["src"], cfg)
+            ekv = tf.cross_kv(params, enc_x, cfg)
+            hidden, _ = tf.decoder_forward(params, tokens, cfg, enc_kv=ekv)
+        else:
+            hidden, _ = tf.decoder_forward(params, tokens, cfg,
+                                           frontend=batch.get("frontend"))
+        logits = tf.logits_from_hidden(params, hidden[:, -1:, :], cfg)
+        return logits[:, 0, :], hidden
+
+    return prefill
+
+
+__all__ = [
+    "abstract_params",
+    "init_params",
+    "count_params",
+    "make_loss_fn",
+    "make_decode_step",
+    "make_prefill",
+    "abstract_cache",
+    "zero_cache",
+]

@@ -1,0 +1,99 @@
+"""Mixture-of-Experts layer: top-k routing with sort-based capacity dispatch.
+
+TPU adaptation: instead of the dense one-hot dispatch einsum (T*E*C*d FLOPs)
+we sort assignments by expert and scatter into a fixed [E, C, d] buffer, so
+compiled FLOPs track *active* parameters (6*N_active*D). Experts shard over
+the 'model' mesh axis (expert parallelism); XLA inserts the all-to-all at the
+scatter/gather boundaries.
+
+Covers both assigned MoE architectures:
+  dbrx-132b    16 experts, top-4, swiglu experts
+  arctic-480b  128 experts, top-2, plus a *dense residual* FFN in parallel
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def router(x2d, w_router):
+    """x2d: [T, d] -> (probs [T, E], logits)."""
+    logits = jnp.einsum("td,de->te", x2d.astype(jnp.float32), w_router.astype(jnp.float32))
+    return jax.nn.softmax(logits, axis=-1), logits
+
+
+def moe_ffn(x2d: jnp.ndarray, p: dict, *, n_experts: int, top_k: int,
+            capacity_factor: float = 1.25) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Sort-based MoE.
+
+    x2d: [T, d]. p: {w_router [d,E], w_gate/w_up [E, d, f], w_down [E, f, d]}.
+    Returns (out [T, d], aux_loss []).
+    """
+    T, d = x2d.shape
+    E, k = n_experts, top_k
+    C = max(int(T * k / E * capacity_factor) // 8 * 8, 8)
+
+    probs, logits = router(x2d, p["w_router"])
+    top_p, top_e = jax.lax.top_k(probs, k)                      # [T, k]
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # Load-balancing aux loss (Switch-style): E * sum_e f_e * P_e
+    me = probs.mean(axis=0)                                     # [E]
+    ce = jnp.zeros((E,), jnp.float32).at[top_e.reshape(-1)].add(1.0) / (T * k)
+    aux = E * jnp.sum(me * ce)
+
+    # ---- dispatch: sort assignments by expert --------------------------------
+    flat_e = top_e.reshape(-1)                                  # [T*k]
+    sort_idx = jnp.argsort(flat_e, stable=True)                 # stable keeps token order
+    sorted_e = flat_e[sort_idx]
+    seg_start = jnp.searchsorted(sorted_e, jnp.arange(E))       # [E]
+    pos_in_e = jnp.arange(T * k) - seg_start[sorted_e]
+    keep = pos_in_e < C
+    slot = jnp.where(keep, sorted_e * C + pos_in_e, E * C)      # E*C = drop slot
+    token_of_assign = sort_idx // k
+
+    gathered = jnp.take(x2d, token_of_assign, axis=0)           # [T*k, d]
+    disp = jnp.zeros((E * C, d), x2d.dtype).at[slot].set(gathered, mode="drop")
+    disp = disp.reshape(E, C, d)
+
+    # ---- per-expert FFN (batched over the expert axis) -----------------------
+    g = jnp.einsum("ecd,edf->ecf", disp, p["w_gate"].astype(x2d.dtype))
+    u = jnp.einsum("ecd,edf->ecf", disp, p["w_up"].astype(x2d.dtype))
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x2d.dtype) * u
+    y = jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(x2d.dtype))
+    y = y.reshape(E * C, d)
+
+    # ---- combine: gather back, weight, segment-sum over k --------------------
+    got = jnp.take(y, jnp.clip(slot, 0, E * C - 1), axis=0)
+    got = jnp.where(keep[:, None], got, 0.0)
+    w = top_p.reshape(-1)[sort_idx][:, None].astype(x2d.dtype)
+    out = jnp.zeros((T, d), x2d.dtype).at[token_of_assign].add(got * w)
+    return out, aux
+
+
+def moe_param_shapes(d: int, f: int, n_experts: int) -> dict:
+    return {
+        "w_router": (d, n_experts),
+        "w_gate": (n_experts, d, f),
+        "w_up": (n_experts, d, f),
+        "w_down": (n_experts, f, d),
+    }
+
+
+def reference_moe(x2d, p, *, n_experts, top_k):
+    """Dense oracle: every token through its top-k experts, no capacity drop.
+    Used by tests (small shapes) to validate the sort-based dispatch."""
+    probs, _ = router(x2d, p["w_router"])
+    top_p, top_e = jax.lax.top_k(probs, top_k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+    out = jnp.zeros_like(x2d)
+    for e in range(n_experts):
+        g = x2d @ p["w_gate"][e].astype(x2d.dtype)
+        u = x2d @ p["w_up"][e].astype(x2d.dtype)
+        y = (jax.nn.silu(g.astype(jnp.float32)).astype(x2d.dtype) * u) @ p["w_down"][e].astype(x2d.dtype)
+        w = jnp.where(top_e == e, top_p, 0.0).sum(-1)[:, None].astype(x2d.dtype)
+        out = out + y * w
+    return out
+
+
+__all__ = ["moe_ffn", "moe_param_shapes", "reference_moe", "router"]

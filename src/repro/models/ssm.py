@@ -1,0 +1,188 @@
+"""Mamba2 / SSD (state-space duality) mixer [arXiv:2405.21060].
+
+Chunked SSD: within a chunk the quadratic (attention-dual) form runs on the
+MXU; across chunks a lax.scan carries the [B, H, N, P] state. This is the
+TPU-native formulation (the Pallas kernel repro.kernels.ssd_scan implements
+the same tiling explicitly); a sequential-scan oracle lives in ref.py.
+
+Decode is O(1) per token: h' = h * exp(A dt) + dt * B (x)ᵀ;  y = C h' + D x.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_chunked(x, dt, A, B, C, D, chunk: int):
+    """Chunked SSD.
+
+    x:  [b, S, H, P]   inputs per head
+    dt: [b, S, H]      positive step sizes (softplus applied by caller)
+    A:  [H]            negative decay rates
+    B:  [b, S, N]      input projections (single group, broadcast over heads)
+    C:  [b, S, N]      output projections
+    D:  [H]            skip connection
+    Returns (y [b, S, H, P], h_final [b, H, N, P]).
+    """
+    b, S, H, P = x.shape
+    N = B.shape[-1]
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    Sp = x.shape[1]
+    nc = Sp // Q
+
+    xc = x.reshape(b, nc, Q, H, P)
+    dtc = dt.reshape(b, nc, Q, H).astype(jnp.float32)
+    Bc = B.reshape(b, nc, Q, N).astype(jnp.float32)
+    Cc = C.reshape(b, nc, Q, N).astype(jnp.float32)
+    la = dtc * A.astype(jnp.float32)                 # [b, nc, Q, H] log-decay
+    cum = jnp.cumsum(la, axis=2)                     # inclusive cumulative
+
+    def step(h, inputs):
+        xq, dtq, bq, cq, cumq = inputs               # [b,Q,...]
+        # intra-chunk (quadratic dual form)
+        scores = jnp.einsum("bqn,bkn->bqk", cq, bq)  # [b, Q, Q] shared across H
+        decay = cumq[:, :, None, :] - cumq[:, None, :, :]          # [b,Q,K,H]
+        causal = jnp.tril(jnp.ones((Q, Q), bool))
+        # mask BEFORE exp: exp(+big) in the dead triangle would be inf, and
+        # inf*0 poisons the backward pass with NaNs
+        decay = jnp.where(causal[None, :, :, None], decay, -1e30)
+        L = jnp.exp(decay)
+        M = scores[:, :, :, None] * L * dtq[:, None, :, :]         # [b,Q,K,H]
+        xdt = xq.astype(jnp.float32)
+        y_intra = jnp.einsum("bqkh,bkhp->bqhp", M, xdt)
+        # inter-chunk: contribution of the carried state
+        y_inter = jnp.einsum("bqn,bhnp->bqhp", cq, h) * jnp.exp(cumq)[:, :, :, None]
+        # state update: h' = exp(cum_last) h + sum_j exp(cum_last - cum_j) dt_j B_j x_j
+        last = cumq[:, -1, :]                                       # [b, H]
+        decay_to_end = jnp.exp(last[:, None, :] - cumq) * dtq       # [b,Q,H]
+        state_inc = jnp.einsum("bkh,bkn,bkhp->bhnp", decay_to_end, bq, xdt)
+        h_new = h * jnp.exp(last)[:, :, None, None] + state_inc
+        y = y_intra + y_inter
+        return h_new, y.astype(x.dtype)
+
+    h0 = jnp.zeros((b, H, N, P), jnp.float32)
+    inputs = (
+        xc.transpose(1, 0, 2, 3, 4),
+        dtc.transpose(1, 0, 2, 3),
+        Bc.transpose(1, 0, 2, 3),
+        Cc.transpose(1, 0, 2, 3),
+        cum.transpose(1, 0, 2, 3),
+    )
+    h_final, ys = jax.lax.scan(step, h0, inputs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, Sp, H, P)[:, :S]
+    y = y + x[:, :S] * D.astype(x.dtype)[None, None, :, None]
+    return y, h_final
+
+
+def ssd_decode_step(h, x, dt, A, B, C, D):
+    """One-token SSD update.
+
+    h: [b, H, N, P]; x: [b, H, P]; dt: [b, H]; B, C: [b, N].
+    Returns (y [b, H, P], h').
+    """
+    dt = dt.astype(jnp.float32)
+    decay = jnp.exp(dt * A.astype(jnp.float32))                       # [b, H]
+    inc = jnp.einsum("bh,bn,bhp->bhnp", dt, B.astype(jnp.float32), x.astype(jnp.float32))
+    h_new = h * decay[:, :, None, None] + inc
+    y = jnp.einsum("bn,bhnp->bhp", C.astype(jnp.float32), h_new)
+    y = y + x.astype(jnp.float32) * D.astype(jnp.float32)[None, :, None]
+    return y.astype(x.dtype), h_new
+
+
+def causal_conv1d(x, w, cache: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv. x: [b, S, Ch]; w: [W, Ch].
+
+    With `cache` ([b, W-1, Ch]) performs the streaming update (decode) and
+    returns (y, new_cache); otherwise pads with zeros (train/prefill).
+    """
+    W = w.shape[0]
+    if cache is not None:
+        xx = jnp.concatenate([cache, x], axis=1)                  # [b, W-1+S, Ch]
+        new_cache = xx[:, -(W - 1):, :]
+    else:
+        xx = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+        new_cache = None
+    # y[t] = sum_u w[u] * xx[t+u]
+    y = sum(xx[:, u:u + x.shape[1], :] * w[u].astype(x.dtype) for u in range(W))
+    return y, new_cache
+
+
+class MambaParams(NamedTuple):
+    pass  # parameter layout documented in transformer.mamba_param_shapes
+
+
+def mamba_param_shapes(d_model: int, *, expand: int, headdim: int, n_state: int,
+                       conv_width: int) -> dict:
+    d_inner = expand * d_model
+    H = d_inner // headdim
+    conv_ch = d_inner + 2 * n_state
+    return {
+        "in_proj": (d_model, 2 * d_inner + 2 * n_state + H),  # z, xBC, dt
+        "conv_w": (conv_width, conv_ch),
+        "dt_bias": (H,),
+        "A_log": (H,),
+        "D": (H,),
+        "out_norm": (d_inner,),
+        "out_proj": (d_inner, d_model),
+    }
+
+
+def mamba_mixer(x, p, *, expand: int, headdim: int, n_state: int, chunk: int,
+                cache: Optional[dict] = None, return_cache: bool = False):
+    """Full Mamba2 block mixer. x: [b, S, d_model].
+
+    cache (decode): {"h": [b,H,N,P], "conv": [b,W-1,conv_ch]}.
+    return_cache (prefill): also build the decode cache from this call.
+    Returns (y [b,S,d_model], new_cache or None).
+    """
+    b, S, d_model = x.shape
+    d_inner = expand * d_model
+    H = d_inner // headdim
+    P = headdim
+    N = n_state
+
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(x.dtype))
+    z = zxbcdt[..., :d_inner]
+    xBC = zxbcdt[..., d_inner:d_inner + d_inner + 2 * N]
+    dt_raw = zxbcdt[..., -H:]
+
+    xBC_raw = xBC
+    conv_cache = cache["conv"] if cache is not None else None
+    xBC, new_conv = causal_conv1d(xBC, p["conv_w"], conv_cache)
+    xBC = jax.nn.silu(xBC.astype(jnp.float32)).astype(x.dtype)
+    xs = xBC[..., :d_inner].reshape(b, S, H, P)
+    B = xBC[..., d_inner:d_inner + N]
+    C = xBC[..., d_inner + N:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    if cache is None:
+        y, h_final = ssd_chunked(xs, dt, A, B, C, p["D"], chunk=chunk)
+        new_cache = None
+        if return_cache:
+            W = p["conv_w"].shape[0]
+            new_cache = {"h": h_final, "conv": xBC_raw[:, -(W - 1):, :]}
+    else:
+        y1, h_new = ssd_decode_step(cache["h"], xs[:, 0], dt[:, 0], A, B[:, 0], C[:, 0], p["D"])
+        y = y1[:, None]
+        new_cache = {"h": h_new, "conv": new_conv}
+
+    y = y.reshape(b, S, d_inner)
+    # gated output norm (mamba2 uses RMSNorm(y * silu(z)))
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    from repro.models.layers import rms_norm
+
+    y = rms_norm(y, p["out_norm"])
+    return jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(x.dtype)), new_cache
+
+
+__all__ = ["ssd_chunked", "ssd_decode_step", "causal_conv1d", "mamba_mixer",
+           "mamba_param_shapes"]

@@ -1,0 +1,318 @@
+"""LM assembly for all 10 assigned architectures.
+
+One homogeneous block per architecture family, stacked parameters with a
+leading [n_layers] axis, lax.scan over layers (keeps HLO size independent of
+depth -- essential for the 512-device dry-run), remat-compatible.
+
+Families:
+  dense   -- attn + MLP                     (granite, chatglm3, tinyllama, qwen2, phi3v backbone)
+  moe     -- attn + MoE (+ dense residual)  (dbrx, arctic)
+  ssm     -- mamba2 mixer only              (mamba2)
+  hybrid  -- parallel attn + mamba heads    (hymba)
+  audio   -- encoder/decoder + cross-attn   (seamless; frontend stubbed)
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (
+    CDT,
+    apply_mlp,
+    apply_norm,
+    apply_rope,
+    embed,
+    mlp_param_shapes,
+    norm_params,
+    unembed,
+)
+
+
+# ---------------------------------------------------------------------------
+# parameter shape construction
+# ---------------------------------------------------------------------------
+def _norm_shapes(d: int, kind: str) -> dict:
+    return {"scale": (d,)} if kind == "rms" else {"scale": (d,), "bias": (d,)}
+
+
+def attn_param_shapes(cfg: ArchConfig) -> dict:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    out = {
+        "wq": (d, cfg.n_heads * hd),
+        "wk": (d, cfg.n_kv_heads * hd),
+        "wv": (d, cfg.n_kv_heads * hd),
+        "wo": (cfg.n_heads * hd, d),
+    }
+    if cfg.qkv_bias:
+        out.update(bq=(cfg.n_heads * hd,), bk=(cfg.n_kv_heads * hd,),
+                   bv=(cfg.n_kv_heads * hd,))
+    return out
+
+
+def block_param_shapes(cfg: ArchConfig, cross: bool = False) -> dict:
+    d = cfg.d_model
+    shapes: dict = {}
+    if cfg.family == "ssm":
+        shapes["norm_m"] = _norm_shapes(d, cfg.norm)
+        shapes["mamba"] = ssm_mod.mamba_param_shapes(
+            d, expand=cfg.ssm_expand, headdim=cfg.ssm_headdim,
+            n_state=cfg.ssm_state, conv_width=cfg.conv_width)
+        return shapes
+    shapes["ln1"] = _norm_shapes(d, cfg.norm)
+    shapes["attn"] = attn_param_shapes(cfg)
+    if cfg.hybrid:
+        shapes["mamba"] = ssm_mod.mamba_param_shapes(
+            d, expand=cfg.ssm_expand, headdim=cfg.ssm_headdim,
+            n_state=cfg.ssm_state, conv_width=cfg.conv_width)
+        shapes["branch_norm_a"] = _norm_shapes(cfg.n_heads * cfg.resolved_head_dim, "rms")
+        shapes["branch_norm_m"] = _norm_shapes(d, "rms")
+    if cross:
+        shapes["ln_x"] = _norm_shapes(d, cfg.norm)
+        shapes["xattn"] = attn_param_shapes(cfg)
+    shapes["ln2"] = _norm_shapes(d, cfg.norm)
+    if cfg.family == "moe":
+        shapes["moe"] = moe_mod.moe_param_shapes(d, cfg.moe_dff, cfg.n_experts)
+        if cfg.dense_residual:
+            shapes["mlp"] = mlp_param_shapes(d, cfg.d_ff, cfg.mlp)
+    else:
+        shapes["mlp"] = mlp_param_shapes(d, cfg.d_ff, cfg.mlp)
+    return shapes
+
+
+def param_shapes(cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    shapes: dict = {"embed": (cfg.vocab, d)}
+    if cfg.pos == "learned":
+        shapes["pos_embed"] = (cfg.max_seq, d)
+    shapes["layers"] = {k: _stack(v, cfg.n_layers) for k, v in
+                        block_param_shapes(cfg, cross=cfg.enc_dec).items()}
+    if cfg.enc_dec:
+        shapes["enc_layers"] = {k: _stack(v, cfg.n_enc_layers) for k, v in
+                                block_param_shapes(cfg, cross=False).items()}
+        shapes["enc_final_norm"] = _norm_shapes(d, cfg.norm)
+    shapes["final_norm"] = _norm_shapes(d, cfg.norm)
+    if not cfg.tie_embeddings:
+        shapes["lm_head"] = (cfg.vocab, d)
+    return shapes
+
+
+def _stack(tree, n: int):
+    if isinstance(tree, dict):
+        return {k: _stack(v, n) for k, v in tree.items()}
+    return (n,) + tuple(tree)
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+def _project_qkv(x, p, cfg: ArchConfig):
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = jnp.einsum("bsd,de->bse", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,de->bse", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,de->bse", x, p["wv"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    return (q.reshape(b, s, cfg.n_heads, hd),
+            k.reshape(b, s, cfg.n_kv_heads, hd),
+            v.reshape(b, s, cfg.n_kv_heads, hd))
+
+
+def self_attention(x, p, cfg: ArchConfig, positions, *, cache=None, cache_len=None):
+    """Returns (attn_out_preWo [b,s,Hq*hd], out [b,s,d], new_kv or None)."""
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(x, p, cfg)
+    if cfg.pos in ("rope", "rope2d"):
+        q = apply_rope(q, positions, cfg.rope_frac, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_frac, cfg.rope_theta)
+    if cache is None:
+        o = attn.flash_attention(q, k, v, causal=True, window=cfg.window)
+        new_kv = (k, v)
+    else:
+        k_cache, v_cache = cache
+        idx = cache_len  # scalar: write position
+        k_cache = jax.lax.dynamic_update_slice_in_dim(
+            k_cache, k.astype(k_cache.dtype), idx, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(
+            v_cache, v.astype(v_cache.dtype), idx, axis=1)
+        o = attn.decode_attention(q, k_cache, v_cache, idx + s, window=cfg.window)
+        new_kv = (k_cache, v_cache)
+    o = o.reshape(b, s, -1)
+    return o, new_kv
+
+
+def dense_block(x, p, cfg: ArchConfig, positions, *, cache=None, cache_len=None,
+                enc_out=None):
+    h = apply_norm(x, p["ln1"], cfg.norm)
+    new_cache = {}
+    if cfg.family == "ssm":
+        raise AssertionError("ssm handled by mamba_block")
+    if cfg.hybrid:
+        # Hymba: attention and mamba run in parallel on the same input; each
+        # branch output is normalized, then averaged (arXiv:2411.13676).
+        ao, kv = self_attention(h, p["attn"], cfg, positions, cache=None if cache is None else cache.get("kv"),
+                                cache_len=cache_len)
+        mo, mcache = ssm_mod.mamba_mixer(
+            h, p["mamba"], expand=cfg.ssm_expand, headdim=cfg.ssm_headdim,
+            n_state=cfg.ssm_state, chunk=cfg.ssm_chunk,
+            cache=None if cache is None else cache.get("mamba"))
+        from repro.models.layers import rms_norm
+
+        ao = rms_norm(ao, p["branch_norm_a"]["scale"])
+        mo = rms_norm(mo, p["branch_norm_m"]["scale"])
+        mixed = 0.5 * (jnp.einsum("bse,ed->bsd", ao, p["attn"]["wo"].astype(x.dtype)) + mo)
+        x = x + mixed
+        if cache is not None:
+            new_cache = {"kv": kv, "mamba": mcache}
+    else:
+        ao, kv = self_attention(h, p["attn"], cfg, positions,
+                                cache=None if cache is None else cache.get("kv"),
+                                cache_len=cache_len)
+        x = x + jnp.einsum("bse,ed->bsd", ao, p["attn"]["wo"].astype(x.dtype))
+        if cache is not None:
+            new_cache = {"kv": kv}
+    if enc_out is not None:
+        hx = apply_norm(x, p["ln_x"], cfg.norm)
+        q, _, _ = _project_qkv(hx, p["xattn"], cfg)
+        ek, ev = enc_out  # precomputed per-layer cross K/V
+        o = attn.flash_attention(q, ek, ev, causal=False, window=None)
+        x = x + jnp.einsum("bse,ed->bsd", o.reshape(*o.shape[:2], -1),
+                           p["xattn"]["wo"].astype(x.dtype))
+    h2 = apply_norm(x, p["ln2"], cfg.norm)
+    aux = jnp.float32(0.0)
+    if cfg.family == "moe":
+        b, s, d = h2.shape
+        y, aux = moe_mod.moe_ffn(h2.reshape(b * s, d), p["moe"],
+                                 n_experts=cfg.n_experts, top_k=cfg.top_k,
+                                 capacity_factor=cfg.capacity_factor)
+        y = y.reshape(b, s, d)
+        if cfg.dense_residual:
+            y = y + apply_mlp(h2, p["mlp"], cfg.mlp)
+    else:
+        y = apply_mlp(h2, p["mlp"], cfg.mlp)
+    x = x + y
+    return x, new_cache, aux
+
+
+def mamba_block(x, p, cfg: ArchConfig, *, cache=None):
+    h = apply_norm(x, p["norm_m"], cfg.norm)
+    y, new_cache = ssm_mod.mamba_mixer(
+        h, p["mamba"], expand=cfg.ssm_expand, headdim=cfg.ssm_headdim,
+        n_state=cfg.ssm_state, chunk=cfg.ssm_chunk, cache=cache)
+    return x + y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# full forward passes
+# ---------------------------------------------------------------------------
+def encoder_forward(params, src_embeds, cfg: ArchConfig):
+    """Seamless encoder over precomputed frame embeddings (frontend stub)."""
+    x = src_embeds.astype(CDT)
+    positions = jnp.arange(x.shape[1])[None, :]
+    if cfg.pos == "learned":
+        x = x + params["pos_embed"][: x.shape[1]].astype(x.dtype)[None]
+
+    enc_cfg = cfg
+    def body(x, lp):
+        # encoder block: bidirectional attention + MLP
+        h = apply_norm(x, lp["ln1"], enc_cfg.norm)
+        q, k, v = _project_qkv(h, lp["attn"], enc_cfg)
+        o = attn.flash_attention(q, k, v, causal=False, window=None)
+        x = x + jnp.einsum("bse,ed->bsd", o.reshape(*o.shape[:2], -1),
+                           lp["attn"]["wo"].astype(x.dtype))
+        h2 = apply_norm(x, lp["ln2"], enc_cfg.norm)
+        x = x + apply_mlp(h2, lp["mlp"], enc_cfg.mlp)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return apply_norm(x, params["enc_final_norm"], cfg.norm)
+
+
+def cross_kv(params, enc_x, cfg: ArchConfig):
+    """Precompute per-decoder-layer cross-attention K/V from encoder output."""
+    hd = cfg.resolved_head_dim
+
+    def body(_, lp):
+        k = jnp.einsum("bsd,de->bse", enc_x, lp["xattn"]["wk"].astype(enc_x.dtype))
+        v = jnp.einsum("bsd,de->bse", enc_x, lp["xattn"]["wv"].astype(enc_x.dtype))
+        if cfg.qkv_bias:
+            k = k + lp["xattn"]["bk"].astype(enc_x.dtype)
+            v = v + lp["xattn"]["bv"].astype(enc_x.dtype)
+        b, s, _ = k.shape
+        return None, (k.reshape(b, s, cfg.n_kv_heads, hd), v.reshape(b, s, cfg.n_kv_heads, hd))
+
+    _, kv = jax.lax.scan(body, None, params["layers"])
+    return kv  # ([L, b, s, Hk, hd], [L, b, s, Hk, hd])
+
+
+def decoder_forward(params, tokens, cfg: ArchConfig, *, frontend=None,
+                    enc_kv=None, pos_offset: int = 0):
+    """Training/prefill forward. Returns (hidden [b,S,d], aux_loss)."""
+    x = embed(tokens, params["embed"])
+    if frontend is not None:
+        x = jnp.concatenate([frontend.astype(x.dtype), x], axis=1)
+    S = x.shape[1]
+    positions = (jnp.arange(S) + pos_offset)[None, :]
+    if cfg.pos == "learned":
+        x = x + jax.lax.dynamic_slice_in_dim(
+            params["pos_embed"], pos_offset, S, axis=0).astype(x.dtype)[None]
+
+    def _maybe_remat(fn):
+        # Activation checkpointing: recompute the block in backward; with
+        # scan-over-layers this is the standard "remat every layer" policy.
+        # remat="dots" keeps matmul outputs resident (no MXU recompute in the
+        # backward pass) at the cost of per-layer activation memory -- the
+        # compute-vs-HBM trade the §Perf hillclimb explores.
+        if cfg.remat == "full":
+            return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+        if cfg.remat == "dots":
+            return jax.checkpoint(fn, policy=jax.checkpoint_policies.dots_saveable)
+        return fn
+
+    if cfg.family == "ssm":
+        @_maybe_remat
+        def body(x, lp):
+            y, _ = mamba_block(x, lp, cfg)
+            return y, jnp.float32(0.0)
+        x, aux = jax.lax.scan(body, x, params["layers"])
+    elif enc_kv is not None:
+        @_maybe_remat
+        def body(x, inp):
+            lp, ekv = inp
+            y, _, aux = dense_block(x, lp, cfg, positions, enc_out=ekv)
+            return y, aux
+        x, aux = jax.lax.scan(body, x, (params["layers"], enc_kv))
+    else:
+        @_maybe_remat
+        def body(x, lp):
+            y, _, aux = dense_block(x, lp, cfg, positions)
+            return y, aux
+        x, aux = jax.lax.scan(body, x, params["layers"])
+
+    x = apply_norm(x, params["final_norm"], cfg.norm)
+    return x, jnp.sum(aux)
+
+
+def logits_from_hidden(params, x, cfg: ArchConfig):
+    table = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    return unembed(x, table)
+
+
+__all__ = [
+    "param_shapes",
+    "block_param_shapes",
+    "dense_block",
+    "mamba_block",
+    "encoder_forward",
+    "decoder_forward",
+    "cross_kv",
+    "logits_from_hidden",
+]

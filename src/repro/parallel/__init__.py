@@ -1,0 +1,12 @@
+"""Distribution layer: mesh axes, per-architecture sharding rules, and
+distributed-optimization collectives (deadline-ordered gradient aggregation,
+compressed all-reduce, overlap scheduling)."""
+from repro.parallel.sharding import (
+    batch_spec,
+    cache_shardings,
+    param_shardings,
+    DATA_AXES,
+    MODEL_AXIS,
+)
+
+__all__ = ["batch_spec", "cache_shardings", "param_shardings", "DATA_AXES", "MODEL_AXIS"]

@@ -1,0 +1,169 @@
+"""Per-architecture sharding rules over the (pod, data, model) mesh.
+
+Scheme (GSPMD, FSDP x TP x EP):
+  * weights [in, out]: `out` over "model" (tensor parallel), `in` over
+    ("pod","data") (fully-sharded / ZeRO-3) -- the per-layer all-gather
+    happens inside the scan, so at most one layer is resident unsharded.
+  * projections back to d_model ([out, in] layout like wo / w_down): mirror.
+  * MoE expert stacks [E, d, f]: experts over "model" (expert parallelism),
+    d over ("pod","data").
+  * embeddings / lm_head [V, d]: vocab over "model" (sharded softmax),
+    d over ("pod","data").
+  * activations: batch over ("pod","data"); model-parallel tensors are left
+    to GSPMD propagation.
+  * optimizer state: same spec as its parameter.
+
+Rules are name-based over the param-tree paths so every architecture
+(dense/MoE/SSM/hybrid/enc-dec) is covered by one table; stacked [L, ...]
+parameters get a leading None.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+DATA_AXES = ("pod", "data")   # collapsed to just ("data",) on single-pod meshes
+MODEL_AXIS = "model"
+
+
+def _fsdp(mesh: Mesh, dp_only: bool = False):
+    axes = tuple(a for a in DATA_AXES if a in mesh.axis_names)
+    if dp_only and MODEL_AXIS in mesh.axis_names:
+        # Small models: tensor parallelism wastes ICI on activation
+        # all-reduces; fold the model axis into the FSDP/data group instead.
+        axes = axes + (MODEL_AXIS,)
+    return axes or None
+
+
+def _spec_for(path: tuple[str, ...], shape: tuple[int, ...], mesh: Mesh,
+              fsdp_min: int = 1024, dp_only: bool = False) -> P:
+    """PartitionSpec for one parameter."""
+    fsdp = _fsdp(mesh, dp_only)
+    if dp_only:
+        # everything is FSDP-sharded on its largest divisible dim; no TP
+        name = path[-1]
+        stacked = path[0] in ("layers", "enc_layers")
+        core = shape[1:] if stacked else shape
+        lead = (None,) if stacked else ()
+        n = int(np.prod([mesh.shape[a] for a in fsdp])) if fsdp else 1
+        spec = [None] * len(core)
+        # shard the largest dim divisible by the fsdp group
+        order = sorted(range(len(core)), key=lambda i: -core[i])
+        for i in order:
+            if core[i] % n == 0 and n > 1:
+                spec[i] = fsdp
+                break
+        return P(*(lead + tuple(spec)))
+    name = path[-1]
+    stacked = path[0] in ("layers", "enc_layers")
+    core = shape[1:] if stacked else shape
+    lead = (None,) if stacked else ()
+
+    def ok(dim_size, axes):
+        if axes is None:
+            return False
+        n = int(np.prod([mesh.shape[a] for a in (axes if isinstance(axes, tuple) else (axes,))]))
+        return dim_size % n == 0
+
+    # ---- table ----------------------------------------------------------------
+    if name in ("scale", "bias", "out_norm", "dt_bias", "A_log", "D",
+                "bq", "bk", "bv", "b_up", "b_down"):
+        spec = (None,) * len(core)
+    elif name in ("embed", "lm_head"):
+        spec = (MODEL_AXIS if ok(core[0], MODEL_AXIS) else None,
+                fsdp if ok(core[1], fsdp) else None)
+    elif name == "pos_embed":
+        spec = (None, fsdp if ok(core[1], fsdp) else None)
+    elif name in ("wq", "wk", "wv", "w_gate", "w_up", "in_proj"):
+        spec = (fsdp if ok(core[0], fsdp) else None,
+                MODEL_AXIS if ok(core[1], MODEL_AXIS) else None)
+    elif name in ("wo", "w_down", "out_proj"):
+        spec = (MODEL_AXIS if ok(core[0], MODEL_AXIS) else None,
+                fsdp if ok(core[1], fsdp) else None)
+    elif name == "w_router":
+        spec = (fsdp if ok(core[0], fsdp) else None, None)
+    elif name == "conv_w":
+        spec = (None, MODEL_AXIS if ok(core[1], MODEL_AXIS) else None)
+    else:
+        spec = (None,) * len(core)
+
+    # MoE expert stacks: [E, d, f] -- expert dim over model, d over fsdp.
+    if name in ("w_gate", "w_up", "w_down") and len(core) == 3:
+        E, a, b = core
+        spec = (MODEL_AXIS if ok(E, MODEL_AXIS) else None,
+                fsdp if ok(a, fsdp) else None,
+                None)
+    return P(*(lead + tuple(spec)))
+
+
+def param_shardings(abstract_params, mesh: Mesh, dp_only: bool = False,
+                    tp_only: bool = False, ddp: bool = False):
+    """Pytree of NamedShardings matching abstract_params.
+
+    tp_only (serving): weights live replicated across the data axis and
+    sharded over `model` only -- no per-step FSDP all-gather on the decode
+    path (weights fit HBM once the optimizer state is gone).
+
+    ddp (tiny models): weights fully replicated; the only collective left is
+    the per-step gradient all-reduce.
+    """
+
+    def walk(tree, path=()):
+        if isinstance(tree, dict):
+            return {k: walk(v, path + (k,)) for k, v in tree.items()}
+        if ddp:
+            return NamedSharding(mesh, P(*([None] * len(tree.shape))))
+        spec = _spec_for(path, tuple(tree.shape), mesh, dp_only=dp_only)
+        if tp_only:
+            spec = P(*[None if (ax is not None and ax != MODEL_AXIS and
+                                MODEL_AXIS not in (ax if isinstance(ax, tuple) else (ax,)))
+                       else ax for ax in spec])
+        return NamedSharding(mesh, spec)
+
+    return walk(abstract_params)
+
+
+def batch_spec(mesh: Mesh) -> P:
+    """Activations: batch over (pod, data)."""
+    return P(_fsdp(mesh))
+
+
+def batch_shardings(batch_abstract, mesh: Mesh, dp_only: bool = False):
+    fsdp = _fsdp(mesh, dp_only)
+
+    def leaf(x):
+        # shard the leading (batch) dim when divisible
+        n = int(np.prod([mesh.shape[a] for a in fsdp])) if fsdp else 1
+        if x.shape and x.shape[0] % n == 0 and n > 1:
+            return NamedSharding(mesh, P(fsdp, *([None] * (len(x.shape) - 1))))
+        return NamedSharding(mesh, P(*([None] * len(x.shape))))
+
+    return jax.tree.map(leaf, batch_abstract)
+
+
+def cache_shardings(cache_abstract, mesh: Mesh):
+    """KV/SSM caches: [L, B, ...] -- batch over (pod,data), heads over model."""
+    fsdp = _fsdp(mesh)
+    n_dp = int(np.prod([mesh.shape[a] for a in fsdp])) if fsdp else 1
+    n_mp = mesh.shape.get(MODEL_AXIS, 1)
+
+    def leaf(x):
+        sh = x.shape
+        spec = [None] * len(sh)
+        if len(sh) >= 2 and sh[1] % n_dp == 0 and n_dp > 1:
+            spec[1] = fsdp
+        # heads axis: KV caches [L,B,S,H,D] -> axis 3; ssm h [L,B,H,N,P] -> axis 2
+        for ax in (3, 2):
+            if len(sh) > ax + 1 and sh[ax] % n_mp == 0 and n_mp > 1 and spec[ax] is None:
+                spec[ax] = MODEL_AXIS
+                break
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(leaf, cache_abstract)
+
+
+__all__ = ["param_shardings", "batch_spec", "batch_shardings", "cache_shardings",
+           "DATA_AXES", "MODEL_AXIS"]

@@ -1,0 +1,3 @@
+from repro.serving.engine import ReplicatedLMService, ServingEngine
+
+__all__ = ["ServingEngine", "ReplicatedLMService"]

@@ -1,0 +1,58 @@
+"""KV-cache slot management for continuous batching.
+
+A fixed pool of `n_slots` sequences; each slot owns a stripe of the padded
+cache tensors built by repro.models.model.zero_cache. Slot assignment is
+deterministic given the admission order -- which the DOM layer makes
+identical across replicas, so replicated engines allocate identically
+without coordination.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass
+class Slot:
+    seq_id: Optional[int] = None
+    length: int = 0
+
+
+class SlotPool:
+    def __init__(self, n_slots: int):
+        self.slots = [Slot() for _ in range(n_slots)]
+        self._free = list(range(n_slots))[::-1]
+
+    def alloc(self, seq_id: int) -> Optional[int]:
+        if not self._free:
+            return None
+        i = self._free.pop()
+        self.slots[i] = Slot(seq_id=seq_id, length=0)
+        return i
+
+    def release(self, i: int) -> None:
+        self.slots[i] = Slot()
+        self._free.append(i)
+
+    def active(self) -> list[int]:
+        return [i for i, s in enumerate(self.slots) if s.seq_id is not None]
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+
+def write_prefill_into_cache(cache, slot: int, seq_cache):
+    """Copy a single-sequence prefill cache into batch slot `slot`."""
+
+    def put(dst, src):
+        # dst: [L, B, ...]; src: [L, 1, ...]
+        return dst.at[:, slot:slot + 1].set(src.astype(dst.dtype))
+
+    return jax.tree.map(put, cache, seq_cache)
+
+
+__all__ = ["Slot", "SlotPool", "write_prefill_into_cache"]

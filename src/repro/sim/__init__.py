@@ -1,0 +1,21 @@
+"""Deterministic simulation substrate: event scheduler, cloud network model,
+clock models and workload generators.
+
+The exact event-driven protocol implementation (repro.core.replica et al.)
+runs on top of this; the vectorized JAX Monte-Carlo (repro.core.vectorized)
+shares the same statistical network model.
+"""
+from repro.sim.events import Event, EventScheduler
+from repro.sim.network import CloudNetwork, NetworkParams, lis_length, reordering_score
+from repro.sim.workload import ClosedLoopWorkload, OpenLoopWorkload
+
+__all__ = [
+    "Event",
+    "EventScheduler",
+    "CloudNetwork",
+    "NetworkParams",
+    "lis_length",
+    "reordering_score",
+    "ClosedLoopWorkload",
+    "OpenLoopWorkload",
+]

@@ -1,0 +1,115 @@
+"""Workload generators: closed-loop and open-loop (Poisson) clients (S9.1).
+
+Closed-loop: one outstanding request per client; a new request is issued only
+after the previous reply arrives.
+
+Open-loop: requests arrive per a Poisson process regardless of replies -- the
+"more realistic" benchmark from EPaxos-Revisited adopted by the paper.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import numpy as np
+
+
+@dataclass
+class RequestRecord:
+    client_id: int
+    request_id: int
+    submit_time: float
+    commit_time: float = float("nan")
+    fast_path: bool = False
+    retries: int = 0
+
+    @property
+    def latency(self) -> float:
+        return self.commit_time - self.submit_time
+
+
+class OpenLoopWorkload:
+    """Poisson arrivals at `rate` req/s per client; multiple outstanding."""
+
+    def __init__(self, n_clients: int, rate_per_client: float, seed: int = 0):
+        self.n_clients = n_clients
+        self.rate = rate_per_client
+        self.rng = np.random.default_rng(seed)
+
+    def arrival_times(self, duration: float) -> list[tuple[float, int]]:
+        """(time, client_id) tuples, time-sorted."""
+        out: list[tuple[float, int]] = []
+        for c in range(self.n_clients):
+            t = 0.0
+            while True:
+                t += self.rng.exponential(1.0 / self.rate)
+                if t > duration:
+                    break
+                out.append((t, c))
+        out.sort()
+        return out
+
+    def arrival_array(self, duration: float) -> tuple[np.ndarray, np.ndarray]:
+        arr = self.arrival_times(duration)
+        if not arr:
+            return np.zeros(0), np.zeros(0, dtype=np.int64)
+        t, c = zip(*arr)
+        return np.asarray(t), np.asarray(c, dtype=np.int64)
+
+
+class ClosedLoopWorkload:
+    """Back-to-back requests; think time ~0. Driven by the event simulator:
+    the protocol under test calls `on_commit(client_id)` and we immediately
+    issue the next request via the `submit` callback."""
+
+    def __init__(self, n_clients: int, submit: Callable[[int], None],
+                 think_time: float = 0.0, seed: int = 0):
+        self.n_clients = n_clients
+        self.submit = submit
+        self.think_time = think_time
+        self.rng = np.random.default_rng(seed)
+
+    def start(self) -> None:
+        for c in range(self.n_clients):
+            self.submit(c)
+
+    def on_commit(self, client_id: int, schedule_after: Callable[[float, Callable[[], None]], None]) -> None:
+        if self.think_time > 0:
+            schedule_after(self.rng.exponential(self.think_time), lambda: self.submit(client_id))
+        else:
+            self.submit(client_id)
+
+
+def zipf_key(rng: np.random.Generator, n_keys: int, theta: float) -> int:
+    """YCSB-style zipfian(theta) over [0, n_keys): P(i) ~ (i+1)^-theta.
+
+    Inverse-CDF approximation of the truncated zipfian: continuous CDF
+    F(x) = x^(1-theta) / N^(1-theta)  =>  x = N * u^(1/(1-theta)).
+    theta=0 is uniform; theta=0.99 is the YCSB 'hotspot' default.
+    """
+    if theta <= 0.0:
+        return int(rng.integers(0, n_keys))
+    u = rng.random()
+    x = n_keys * (u ** (1.0 / (1.0 - min(theta, 0.999))))
+    return min(int(x), n_keys - 1)
+
+
+def summarize_latencies(records: list[RequestRecord]) -> dict:
+    lat = np.asarray([r.latency for r in records if np.isfinite(r.commit_time)])
+    committed = int(np.isfinite([r.commit_time for r in records]).sum())
+    fast = sum(1 for r in records if r.fast_path and np.isfinite(r.commit_time))
+    out = {
+        "n": len(records),
+        "committed": committed,
+        "fast_commit_ratio": fast / max(committed, 1),
+    }
+    if lat.size:
+        out.update(
+            median_latency=float(np.median(lat)),
+            p90_latency=float(np.percentile(lat, 90)),
+            mean_latency=float(lat.mean()),
+        )
+    return out
+
+
+__all__ = ["RequestRecord", "OpenLoopWorkload", "ClosedLoopWorkload", "summarize_latencies"]

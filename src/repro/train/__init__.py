@@ -1,0 +1,5 @@
+from repro.train.optimizer import AdamWState, adamw_init, adamw_update, cosine_lr
+from repro.train.train_step import make_train_state, make_train_step
+
+__all__ = ["AdamWState", "adamw_init", "adamw_update", "cosine_lr",
+           "make_train_state", "make_train_step"]

@@ -1,0 +1,93 @@
+"""train_step construction: loss + grad + AdamW, microbatch accumulation,
+optional int8-compressed gradient reduction.
+
+The returned step is a pure function of (params, opt_state, batch) suitable
+for jax.jit with in_shardings/out_shardings from repro.parallel.sharding --
+GSPMD inserts the FSDP all-gathers/reduce-scatters.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig
+from repro.models.model import abstract_params, make_loss_fn
+from repro.train.optimizer import AdamWState, adamw_init, adamw_update, cosine_lr
+
+
+class TrainState(NamedTuple):
+    params: object
+    opt: AdamWState
+
+
+def make_train_state(cfg: ArchConfig, rng=None):
+    """Real state (smoke scale) or abstract state (dry-run) if rng is None."""
+    dt = jnp.bfloat16 if cfg.optimizer_dtype == "bfloat16" else jnp.float32
+    if rng is None:
+        params = abstract_params(cfg)
+        zeros = lambda p: jax.ShapeDtypeStruct(p.shape, dt)
+        opt = AdamWState(step=jax.ShapeDtypeStruct((), jnp.int32),
+                         m=jax.tree.map(zeros, params),
+                         v=jax.tree.map(zeros, params))
+        return TrainState(params=params, opt=opt)
+    from repro.models.model import init_params
+
+    params = init_params(cfg, rng)
+    return TrainState(params=params, opt=adamw_init(params, dt))
+
+
+def make_train_step(cfg: ArchConfig, *, microbatches: int = 1,
+                    peak_lr: float = 3e-4, warmup: int = 100, total_steps: int = 10000,
+                    compression: Optional[str] = None):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    microbatches > 1 splits the batch on the leading axis and accumulates
+    gradients with lax.scan (sequential microbatching -- the standard way to
+    scale global batch beyond memory).
+    """
+    loss_fn = make_loss_fn(cfg)
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        return loss, metrics, grads
+
+    def train_step(state: TrainState, batch):
+        params = state.params
+        if microbatches > 1:
+            def split(x):
+                return x.reshape((microbatches, x.shape[0] // microbatches) + x.shape[1:])
+
+            mb = jax.tree.map(split, batch)
+
+            def acc_body(carry, mb_i):
+                loss_acc, g_acc = carry
+                loss, _, g = grads_of(params, mb_i)
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                return (loss_acc + loss, g_acc), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss_sum, grads), _ = jax.lax.scan(acc_body, (jnp.float32(0.0), g0), mb)
+            loss = loss_sum / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            metrics = {"loss": loss}
+        else:
+            loss, metrics, grads = grads_of(params, batch)
+
+        if compression == "int8":
+            from repro.parallel.collectives import int8_compress_decompress
+
+            grads = jax.tree.map(int8_compress_decompress, grads)
+
+        lr = cosine_lr(state.opt.step, peak=peak_lr, warmup=warmup, total=total_steps)
+        new_params, new_opt, gnorm = adamw_update(params, grads, state.opt, lr=lr)
+        metrics = dict(metrics)
+        metrics.update(lr=lr, grad_norm=gnorm)
+        return TrainState(params=new_params, opt=new_opt), metrics
+
+    return train_step
+
+
+__all__ = ["TrainState", "make_train_state", "make_train_step"]

@@ -1,0 +1,83 @@
+"""Validate the trip-count-corrected HLO analyzer against a hand-checkable
+scan program, and the roofline bookkeeping."""
+import os
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="module")
+def scan_hlo():
+    # lower a known program on 4 host devices in a subprocess-safe way:
+    # jax is already initialized with 1 device in the test session, so we
+    # build the program on a 1-device mesh and check trip-count math only.
+    import jax
+    import jax.numpy as jnp
+
+    L, B, D = 4, 16, 32
+
+    def step(x, ws):
+        def body(x, w):
+            return jnp.tanh(x @ w), None
+
+        y, _ = jax.lax.scan(body, x, ws)
+        return y.sum()
+
+    x = jax.ShapeDtypeStruct((B, D), jnp.float32)
+    ws = jax.ShapeDtypeStruct((L, D, D), jnp.float32)
+    compiled = jax.jit(jax.grad(step, argnums=1)).lower(x, ws).compile()
+    return compiled.as_text(), (L, B, D)
+
+
+def test_dot_flops_trip_corrected(scan_hlo):
+    from repro.analysis.hlo import analyze_hlo
+
+    hlo, (L, B, D) = scan_hlo
+    a = analyze_hlo(hlo)
+    # forward dot + 2 backward dots per layer, L layers
+    expected = 2 * B * D * D * 3 * L
+    assert a["dot_flops"] == pytest.approx(expected, rel=0.05), \
+        f"{a['dot_flops']} vs {expected}"
+
+
+def test_collectives_parse_tuple_shapes():
+    from repro.analysis.hlo import analyze_hlo
+
+    hlo = """HloModule test, entry_computation_layout={()->f32[]}
+
+ENTRY %main (p: f32[8,4]) -> f32[8,4] {
+  %p = f32[8,4]{1,0} parameter(0)
+  %ar = (f32[8,4]{1,0}, f32[16]{0}) all-reduce(%p, %p), replica_groups={}, to_apply=%add
+  ROOT %gte = f32[8,4]{1,0} get-tuple-element(%ar), index=0
+}
+"""
+    a = analyze_hlo(hlo)
+    assert a["collective_bytes"]["all-reduce"] == (8 * 4 + 16) * 4
+
+
+def test_roofline_model_flops():
+    from repro.analysis.roofline import model_flops
+
+    mf = model_flops("tinyllama-1.1b", "train_4k")
+    # 6 * 1.1e9 * (4096*256) ~ 6.9e15
+    assert 6e15 < mf < 8e15
+    mf_moe = model_flops("dbrx-132b", "train_4k")
+    # active 36B, not total 132B
+    assert 2.0e17 < mf_moe < 2.5e17
+
+
+def test_dryrun_results_complete_if_present():
+    """If the dry-run has been run, every applicable cell must be ok."""
+    import json
+
+    path = "results/dryrun/dryrun_results.json"
+    if not os.path.exists(path):
+        pytest.skip("dry-run artifacts not generated in this environment")
+    rs = json.load(open(path))
+    assert not [r for r in rs if r["status"] == "failed"], "failed dry-run cells"
+    by_mesh = {}
+    for r in rs:
+        by_mesh.setdefault(r["multi_pod"], []).append(r)
+    for mp, rows in by_mesh.items():
+        assert sum(r["status"] == "ok" for r in rows) == 32
+        assert sum(r["status"] == "skipped" for r in rows) == 8

@@ -1,0 +1,266 @@
+"""Unit tests for the core Nezha/DOM building blocks."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.dom import DomParams, DomReceiver, DomSender, EarlyBuffer, LateBuffer, OwdEstimator
+from repro.core.hashing import (
+    IncrementalHash,
+    PerKeyHashTable,
+    crash_vector_hash_np,
+    entry_hash32_np,
+    entry_hash_jnp,
+    entry_hash_np,
+    fold_hashes_np,
+    prefix_hashes_jnp,
+)
+from repro.core.messages import LogEntry, OpType, Request, ViewChange
+from repro.core.quorum import QuorumTracker, fast_quorum_size, leader_of_view, slow_quorum_size
+from repro.core.recovery import aggregate_crash_vectors, check_crash_vector, merge_logs
+from repro.sim.network import lis_length, reordering_score
+
+
+# ---------------------------------------------------------------------------
+# quorum math
+# ---------------------------------------------------------------------------
+def test_quorum_sizes():
+    assert fast_quorum_size(1) == 3 and slow_quorum_size(1) == 2
+    assert fast_quorum_size(2) == 4 and slow_quorum_size(2) == 3
+    assert fast_quorum_size(3) == 6 and slow_quorum_size(3) == 4
+    assert leader_of_view(0, 1) == 0 and leader_of_view(4, 1) == 1
+
+
+def test_quorum_tracker_fast_path():
+    tr = QuorumTracker(f=1)
+    tr.add_fast(0, 0, hash_=42, result="R")       # leader
+    tr.add_fast(1, 0, hash_=42, result=None)
+    assert tr.check_committed() is None           # only 2 of 3 needed fast
+    tr.add_fast(2, 0, hash_=42, result=None)
+    assert tr.check_committed() == "R"
+    assert tr.fast_path is True
+
+
+def test_quorum_tracker_slow_path_and_hash_mismatch():
+    tr = QuorumTracker(f=1)
+    tr.add_fast(0, 0, hash_=1, result="R")
+    tr.add_fast(1, 0, hash_=2, result=None)       # mismatched hash
+    tr.add_fast(2, 0, hash_=3, result=None)
+    assert tr.check_committed() is None
+    tr.add_slow(1, 0)                              # one slow-reply + leader = f+1
+    assert tr.check_committed() == "R"
+    assert tr.fast_path is False
+
+
+def test_quorum_tracker_view_reset():
+    tr = QuorumTracker(f=1)
+    tr.add_fast(0, 0, hash_=1, result="old")
+    tr.add_fast(1, 1, hash_=9, result=None)        # newer view purges old replies
+    assert 0 not in tr.fast_hashes
+    assert tr.view_id == 1
+
+
+def test_slow_reply_subsumes_fast():
+    """A slow-reply counts toward the fast quorum (S6.4)."""
+    tr = QuorumTracker(f=1)
+    tr.add_fast(0, 0, hash_=7, result="R")
+    tr.add_fast(1, 0, hash_=7, result=None)
+    tr.add_slow(2, 0)
+    assert tr.check_committed() == "R"
+    assert tr.fast_path is True
+
+
+# ---------------------------------------------------------------------------
+# hashing
+# ---------------------------------------------------------------------------
+def test_incremental_hash_set_semantics():
+    h1 = IncrementalHash()
+    h2 = IncrementalHash()
+    entries = [(100, 1, 1), (200, 2, 5), (300, 1, 2)]
+    for e in entries:
+        h1.add(*e)
+    for e in reversed(entries):  # order-independent
+        h2.add(*e)
+    assert h1.value == h2.value
+    h1.remove(200, 2, 5)
+    h3 = IncrementalHash()
+    h3.add(100, 1, 1)
+    h3.add(300, 1, 2)
+    assert h1.value == h3.value
+
+
+def test_hash_crash_vector_changes_value():
+    h = IncrementalHash(crash_vector=(0, 0, 0))
+    h.add(1, 1, 1)
+    v0 = h.value
+    h.set_crash_vector((0, 1, 0))
+    assert h.value != v0           # stray fast-replies can't match post-crash
+
+
+def test_per_key_hash_table():
+    t = PerKeyHashTable()
+    t.add_write(5, 100, 1, 1)
+    t.add_write(7, 200, 2, 2)
+    assert t.reply_hash([5]) != 0
+    assert t.reply_hash([5, 7]) == t.reply_hash([5]) ^ t.reply_hash([7])
+    t.remove_write(5, 100, 1, 1)
+    assert t.reply_hash([5]) == 0
+
+
+def test_hash_np_jnp_agree():
+    d = np.arange(100, dtype=np.uint32) * 7919
+    c = np.arange(100, dtype=np.uint32) % 13
+    r = np.arange(100, dtype=np.uint32)
+    a = entry_hash32_np(d, c, r)
+    b = np.asarray(entry_hash_jnp(d, c, r))
+    np.testing.assert_array_equal(a, b)
+    # prefix hashes = cumulative XOR
+    pf = np.asarray(prefix_hashes_jnp(a))
+    acc = np.uint32(0)
+    for i in range(100):
+        acc ^= a[i]
+        assert pf[i] == acc
+
+
+def test_hash64_no_trivial_collisions():
+    hs = entry_hash_np(np.arange(10000), np.zeros(10000), np.arange(10000) % 17)
+    assert len(np.unique(hs)) == 10000
+
+
+# ---------------------------------------------------------------------------
+# DOM
+# ---------------------------------------------------------------------------
+def _req(cid, rid, deadline, keys=(), op=OpType.WRITE):
+    return Request(client_id=cid, request_id=rid, send_time=0.0,
+                   latency_bound=deadline, deadline=deadline, op=op, keys=keys)
+
+
+def test_early_buffer_orders_by_deadline():
+    eb = EarlyBuffer(commutative=False)
+    assert eb.insert(_req(1, 1, 5.0))
+    assert eb.insert(_req(1, 2, 3.0))
+    assert eb.insert(_req(1, 3, 4.0))
+    out = eb.release_ready(10.0)
+    assert [r.deadline for r in out] == [3.0, 4.0, 5.0]
+
+
+def test_early_buffer_entrance_check():
+    eb = EarlyBuffer(commutative=False)
+    eb.insert(_req(1, 1, 5.0))
+    eb.release_ready(10.0)
+    assert not eb.insert(_req(1, 2, 4.0))   # smaller than last released
+    assert eb.insert(_req(1, 3, 6.0))
+
+
+def test_early_buffer_commutativity_relaxation():
+    eb = EarlyBuffer(commutative=True)
+    eb.insert(_req(1, 1, 5.0, keys=(10,)))
+    eb.release_ready(10.0)
+    # different key -> commutative -> may enter despite smaller deadline
+    assert eb.insert(_req(1, 2, 4.0, keys=(11,)))
+    # same key -> rejected
+    assert not eb.insert(_req(1, 3, 4.5, keys=(10,)))
+
+
+def test_early_buffer_release_respects_clock():
+    eb = EarlyBuffer(commutative=False)
+    eb.insert(_req(1, 1, 5.0))
+    assert eb.release_ready(4.9) == []
+    assert len(eb.release_ready(5.0)) == 1
+
+
+def test_late_buffer():
+    lb = LateBuffer()
+    lb.insert(_req(3, 9, 1.0))
+    assert lb.get(3, 9) is not None
+    assert lb.pop(3, 9).request_id == 9
+    assert lb.pop(3, 9) is None
+
+
+def test_owd_estimator_percentile_and_clamp():
+    p = DomParams(percentile=50.0, beta=3.0, clamp_d=200e-6, window=100)
+    est = OwdEstimator(p)
+    for s in np.full(50, 60e-6):
+        est.record(0.0, s)
+    e = est.estimate(1e-6, 1e-6)
+    assert abs(e - (60e-6 + 3 * 2e-6)) < 1e-9
+    # negative / huge samples clamp to D
+    est2 = OwdEstimator(p)
+    est2.record(10.0, 0.0)  # negative OWD (clock went backwards)
+    assert est2.estimate(0, 0) == p.clamp_d
+    est3 = OwdEstimator(p)
+    est3.record(0.0, 1.0)   # 1s OWD
+    assert est3.estimate(0, 0) == p.clamp_d
+
+
+def test_dom_sender_latency_bound_is_max_over_receivers():
+    s = DomSender(3, DomParams(initial_owd=100e-6))
+    s.on_estimate(0, 50e-6)
+    s.on_estimate(1, 120e-6)
+    s.on_estimate(2, 80e-6)
+    assert abs(s.latency_bound() - 120e-6) < 1e-12
+
+
+# ---------------------------------------------------------------------------
+# recovery math
+# ---------------------------------------------------------------------------
+def test_crash_vector_ops():
+    assert aggregate_crash_vectors([(0, 1, 2), (3, 0, 1)]) == (3, 1, 2)
+    assert check_crash_vector((0, 5, 0), sender=1, msg_cv=(0, 4, 0)) is False
+    assert check_crash_vector((0, 5, 0), sender=1, msg_cv=(0, 5, 0)) is True
+
+
+def _entry(deadline, cid, rid):
+    return LogEntry(deadline=deadline, client_id=cid, request_id=rid,
+                    request=_req(cid, rid, deadline))
+
+
+def _vc(rid, log, sp, lnv=0, v=1):
+    return ViewChange(replica_id=rid, view_id=v, crash_vector=(0, 0, 0),
+                      log=log, sync_point=sp, last_normal_view=lnv)
+
+
+def test_merge_logs_copies_synced_prefix():
+    e1, e2, e3 = _entry(1.0, 1, 1), _entry(2.0, 1, 2), _entry(3.0, 1, 3)
+    # replica A synced through e2; replica B has e1 + e3 unsynced
+    out = merge_logs([_vc(1, [e1, e2], sp=2), _vc(2, [e1, e3], sp=1)], f=1)
+    keys = [e.key3 for e in out]
+    assert (1.0, 1, 1) in keys and (2.0, 1, 2) in keys
+    # e3 exists on only 1 of 2 qualified replicas; ceil(f/2)+1 = 2 -> dropped
+    assert (3.0, 1, 3) not in keys
+
+
+def test_merge_logs_super_quorum_entry_survives():
+    """A fast-path-committed entry (on f+ceil(f/2)+1 replicas) must survive
+    any f crashes -- quorum intersection leaves >= ceil(f/2)+1 copies."""
+    e1, e2 = _entry(1.0, 1, 1), _entry(2.0, 2, 1)
+    # f=1: e2 on 2 of the surviving 2 replicas (leader crashed)
+    out = merge_logs([_vc(1, [e1, e2], sp=1), _vc(2, [e1, e2], sp=1)], f=1)
+    assert [e.key3 for e in out] == [(1.0, 1, 1), (2.0, 2, 1)]
+
+
+def test_merge_logs_prefers_highest_last_normal_view():
+    e1, e2 = _entry(1.0, 1, 1), _entry(2.0, 1, 2)
+    stale = _vc(1, [e1, e2], sp=2, lnv=0)
+    fresh = _vc(2, [e1], sp=1, lnv=3)
+    out = merge_logs([stale, fresh], f=1)
+    # only the lnv=3 log qualifies; e2 must NOT appear
+    assert [e.key3 for e in out] == [(1.0, 1, 1)]
+
+
+def test_merge_logs_sorted_by_deadline():
+    es = [_entry(float(d), 1, d) for d in (5, 1, 3, 2, 4)]
+    out = merge_logs([_vc(1, sorted(es, key=lambda e: e.deadline), sp=5),
+                      _vc(2, sorted(es, key=lambda e: e.deadline), sp=5)], f=1)
+    assert [e.deadline for e in out] == [1.0, 2.0, 3.0, 4.0, 5.0]
+
+
+# ---------------------------------------------------------------------------
+# reordering metric
+# ---------------------------------------------------------------------------
+def test_lis_and_reordering_score():
+    assert lis_length(np.array([1, 2, 3])) == 3
+    assert lis_length(np.array([3, 2, 1])) == 1
+    assert reordering_score(np.array([0, 1, 2, 3]), np.array([0, 1, 2, 3])) == 0.0
+    s = reordering_score(np.array([0, 1, 2, 3]), np.array([3, 2, 1, 0]))
+    assert s == 75.0  # LIS of reversed = 1 -> 1 - 1/4

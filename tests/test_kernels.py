@@ -1,0 +1,115 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs pure-jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.dom_release import dom_release_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.inchash import inchash_pallas
+from repro.kernels.ops import dom_release_ref_order
+from repro.kernels.ssd_scan import ssd_scan_pallas
+
+RNG = np.random.default_rng(7)
+
+
+def _r(*shape, dtype=jnp.float32, scale=0.5):
+    return jnp.asarray(RNG.normal(0, scale, shape), dtype)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("S,Hq,Hk,D,causal,window,bq,bk", [
+    (128, 4, 2, 16, True, None, 32, 32),
+    (96, 4, 1, 32, True, None, 32, 32),     # MQA, padded seq
+    (128, 2, 2, 16, False, None, 64, 32),   # bidirectional
+    (256, 4, 2, 16, True, 64, 32, 32),      # sliding window (banded)
+    (64, 8, 8, 64, True, None, 64, 64),     # MHA wider head
+])
+def test_flash_attention_kernel(S, Hq, Hk, D, causal, window, bq, bk, dtype):
+    q, k, v = _r(2, S, Hq, D, dtype=dtype), _r(2, S, Hk, D, dtype=dtype), _r(2, S, Hk, D, dtype=dtype)
+    out = flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                 block_q=bq, block_k=bk, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+
+
+# ---------------------------------------------------------------------------
+# ssd scan
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,S,H,P,N,chunk", [
+    (2, 64, 3, 4, 8, 16),
+    (1, 40, 2, 8, 4, 16),     # padded chunk tail
+    (2, 128, 4, 16, 16, 32),
+])
+def test_ssd_scan_kernel(b, S, H, P, N, chunk, dtype):
+    x = _r(b, S, H, P, dtype=dtype)
+    dt = jnp.abs(_r(b, S, H, scale=0.3)).astype(dtype) + jnp.asarray(0.01, dtype)
+    A = (-jnp.abs(_r(H)) - 0.1).astype(jnp.float32)
+    B = _r(b, S, N, dtype=dtype)
+    C = _r(b, S, N, dtype=dtype)
+    y = ssd_scan_pallas(x, dt, A, B, C, chunk=chunk, interpret=True)
+    want = ref.ssd_scan_ref(x, dt, A, B, C)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 2e-4
+    np.testing.assert_allclose(np.asarray(y, np.float32), np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+
+
+# ---------------------------------------------------------------------------
+# dom release
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n", [8, 64, 100, 256])
+def test_dom_release_kernel(n):
+    deadlines = jnp.asarray(RNG.uniform(0, 1, n), jnp.float32)
+    admitted = jnp.asarray(RNG.random(n) < 0.8)
+    now = jnp.float32(0.6)
+    order, count = dom_release_pallas(deadlines, admitted, now, interpret=True)
+    want_order, want_count = dom_release_ref_order(deadlines, admitted, now)
+    assert int(count) == int(want_count)
+    k = int(count)
+    # release order must be identical (deadlines are distinct w.p. 1)
+    np.testing.assert_array_equal(np.asarray(order[:k]), np.asarray(want_order[:k]))
+    assert bool((np.asarray(order[k:]) == -1).all())
+
+
+def test_dom_release_released_are_sorted():
+    n = 128
+    deadlines = jnp.asarray(RNG.uniform(0, 1, n), jnp.float32)
+    admitted = jnp.ones(n, bool)
+    order, count = dom_release_pallas(deadlines, admitted, jnp.float32(0.5), interpret=True)
+    k = int(count)
+    rel = np.asarray(deadlines)[np.asarray(order[:k])]
+    assert (np.diff(rel) >= 0).all()
+    assert (rel <= 0.5).all()
+
+
+# ---------------------------------------------------------------------------
+# inchash
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n,block", [(16, 16), (100, 32), (256, 64), (1000, 256)])
+def test_inchash_kernel(n, block):
+    d = jnp.asarray(RNG.integers(0, 2**31, n), jnp.uint32)
+    c = jnp.asarray(RNG.integers(0, 1000, n), jnp.uint32)
+    r = jnp.asarray(RNG.integers(0, 2**20, n), jnp.uint32)
+    h, pf = inchash_pallas(d, c, r, block=block, interpret=True)
+    want_h, want_pf = ref.inchash_ref(d, c, r)
+    np.testing.assert_array_equal(np.asarray(h), np.asarray(want_h))
+    np.testing.assert_array_equal(np.asarray(pf), np.asarray(want_pf))
+
+
+def test_inchash_matches_python_protocol_hash():
+    """Kernel hashes == the 32-bit mirror used by the Python protocol."""
+    from repro.core.hashing import entry_hash32_np
+
+    d = np.asarray(RNG.integers(0, 2**31, 64), np.uint32)
+    c = np.asarray(RNG.integers(0, 100, 64), np.uint32)
+    r = np.asarray(RNG.integers(0, 2**20, 64), np.uint32)
+    h, _ = inchash_pallas(jnp.asarray(d), jnp.asarray(c), jnp.asarray(r),
+                          block=64, interpret=True)
+    np.testing.assert_array_equal(np.asarray(h), entry_hash32_np(d, c, r))

@@ -1,0 +1,122 @@
+"""Tests for the beyond-paper performance knobs introduced in §Perf:
+ddp/dp_only/tp_only sharding profiles, fp8 KV cache, remat=dots -- all must
+preserve numerics/shapes on CPU smoke scale."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.models.model import init_params, make_decode_step, make_loss_fn, zero_cache
+
+RNG = np.random.default_rng(3)
+
+
+def test_remat_dots_matches_full_loss_and_grads():
+    cfg_full = smoke_config("qwen2-7b")
+    cfg_dots = dataclasses.replace(cfg_full, remat="dots")
+    params = init_params(cfg_full, jax.random.PRNGKey(0))
+    batch = {"tokens": jnp.asarray(RNG.integers(0, cfg_full.vocab, (2, 64)))}
+    l1, _ = make_loss_fn(cfg_full)(params, batch)
+    l2, _ = make_loss_fn(cfg_dots)(params, batch)
+    assert float(jnp.abs(l1 - l2)) < 1e-5
+    g1 = jax.grad(lambda p: make_loss_fn(cfg_full)(p, batch)[0])(params)
+    g2 = jax.grad(lambda p: make_loss_fn(cfg_dots)(p, batch)[0])(params)
+    for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_fp8_kv_cache_decode_close_to_bf16():
+    cfg = smoke_config("qwen2-7b")
+    cfg8 = dataclasses.replace(cfg, kv_dtype="float8_e4m3fn")
+    params = init_params(cfg, jax.random.PRNGKey(1))
+    step = make_decode_step(cfg)
+    step8 = make_decode_step(cfg8)
+    cache = zero_cache(cfg, 2, 32)
+    cache8 = zero_cache(cfg8, 2, 32)
+    assert jax.tree.leaves(cache8)[0].dtype == jnp.float8_e4m3fn
+    tok = jnp.asarray(RNG.integers(0, cfg.vocab, (2, 1)))
+    for i in range(4):
+        logits, cache = step(params, cache, tok, jnp.int32(i))
+        logits8, cache8 = step8(params, cache8, tok, jnp.int32(i))
+    # greedy decisions should agree despite fp8 quantization at smoke scale
+    assert jnp.argmax(logits[0]) == jnp.argmax(logits8[0])
+
+
+def test_sharding_profiles_on_small_mesh():
+    from jax.sharding import Mesh
+
+    from repro.configs import get_config
+    from repro.models.model import abstract_params
+    from repro.parallel.sharding import param_shardings
+
+    devs = np.asarray(jax.devices() * 4)[:4].reshape(2, 2)
+    mesh = Mesh(devs, ("data", "model"))
+    ap = abstract_params(get_config("mamba2-130m"))
+
+    ddp = param_shardings(ap, mesh, ddp=True)
+    for s in jax.tree.leaves(ddp):
+        assert all(ax is None for ax in s.spec), "ddp must replicate everything"
+
+    tp = param_shardings(ap, mesh, tp_only=True)
+    for s in jax.tree.leaves(tp):
+        for ax in s.spec:
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            assert "data" not in axes and "pod" not in axes, \
+                "tp_only must not shard over data axes"
+
+    dp = param_shardings(ap, mesh, dp_only=True)
+    for p, s in zip(jax.tree.leaves(ap), jax.tree.leaves(dp)):
+        for dim, ax in zip(p.shape, s.spec):
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            n = int(np.prod([mesh.shape[a] for a in axes]))
+            assert dim % n == 0
+
+
+def test_dp_only_train_step_numerics():
+    """dp_only is a layout choice; results must match the default profile."""
+    from repro.train.train_step import make_train_state, make_train_step
+
+    cfg = smoke_config("hymba-1.5b")
+    cfg_dp = dataclasses.replace(cfg, dp_only=True)
+    state = make_train_state(cfg, rng=jax.random.PRNGKey(2))
+    batch = {"tokens": jnp.asarray(RNG.integers(0, cfg.vocab, (2, 32)))}
+    s1, m1 = jax.jit(make_train_step(cfg))(state, batch)
+    s2, m2 = jax.jit(make_train_step(cfg_dp))(state, batch)
+    assert float(jnp.abs(m1["loss"] - m2["loss"])) < 1e-6
+
+
+def test_wan_mode_latency_one_rtt():
+    """S9.8: proxies in the client zone -> ~1 WAN RTT commits."""
+    from repro.core import ClusterConfig, NezhaCluster
+    from repro.core.dom import DomParams
+    from repro.core.replica import ReplicaParams
+    from repro.sim.network import WAN_PARAMS
+
+    dom = DomParams(clamp_d=80e-3, initial_owd=40e-3, window=200)
+    cfg = ClusterConfig(f=1, n_proxies=1, n_clients=4, seed=0, net=WAN_PARAMS,
+                        dom=dom,
+                        replica=ReplicaParams(dom=dom, batch_interval=2e-3,
+                                              status_interval=10e-3,
+                                              commit_interval=50e-3,
+                                              heartbeat_timeout=500e-3),
+                        client_timeout=400e-3, client_proxy_lan=150e-6)
+    cl = NezhaCluster(cfg)
+    cl.start()
+    rng = np.random.default_rng(0)
+    for c in cl.clients:
+        t = 0.05
+        while t < 1.0:
+            t += rng.exponential(1 / 50)
+            cl.scheduler.schedule_at(
+                t, (lambda cc, kk: (lambda: cc.submit(keys=(kk,))))(
+                    c, int(rng.integers(1000))))
+    cl.run_for(1.4)
+    s = cl.summary()
+    # one WAN RTT is ~64ms here; two would be ~130ms
+    assert s["median_latency"] < 90e-3, s["median_latency"]
+    assert s["fast_commit_ratio"] > 0.8

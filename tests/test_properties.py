@@ -1,0 +1,265 @@
+"""Hypothesis property tests for the system's invariants.
+
+These model-check the pure protocol math (DOM ordering, hashing algebra,
+merge-log durability) over randomized inputs, and the full event-driven
+cluster over randomized crash schedules.
+"""
+import math
+
+import numpy as np
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.core.dom import EarlyBuffer
+from repro.core.hashing import IncrementalHash, entry_hash32_np, entry_hash_np, fold_hashes_np
+from repro.core.messages import LogEntry, OpType, Request, ViewChange
+from repro.core.quorum import QuorumTracker, fast_quorum_size
+from repro.core.recovery import aggregate_crash_vectors, merge_logs
+from repro.core.vectorized import dom_release_schedule_chunked
+
+# ---------------------------------------------------------------------------
+# DOM consistent ordering (the paper's core invariant, S3/S4)
+# ---------------------------------------------------------------------------
+deadline_lists = st.lists(
+    st.floats(min_value=0.0, max_value=1.0, allow_nan=False), min_size=1, max_size=40)
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    deadlines=deadline_lists,
+    seed=st.integers(0, 2**30),
+)
+def test_dom_consistent_ordering_any_arrival_order(deadlines, seed):
+    """Two receivers processing the same messages in *any* arrival orders
+    release non-commutative messages in the same relative order."""
+    rng = np.random.default_rng(seed)
+    n = len(deadlines)
+    reqs = [Request(client_id=0, request_id=i, deadline=d, send_time=0.0,
+                    latency_bound=d, op=OpType.WRITE, keys=())
+            for i, d in enumerate(deadlines)]
+
+    def run_receiver(perm, drop_mask):
+        eb = EarlyBuffer(commutative=False)
+        released = []
+        for idx in perm:
+            if drop_mask[idx]:
+                continue
+            # arrivals late enough that everything already queued released
+            released += [r.request_id for r in eb.release_ready(reqs[idx].deadline + rng.random())]
+            eb.insert(reqs[idx])
+        released += [r.request_id for r in eb.release_ready(math.inf)]
+        return released
+
+    perm1, perm2 = rng.permutation(n), rng.permutation(n)
+    drops1 = rng.random(n) < 0.2
+    drops2 = rng.random(n) < 0.2
+    r1, r2 = run_receiver(perm1, drops1), run_receiver(perm2, drops2)
+    common = set(r1) & set(r2)
+    f1 = [x for x in r1 if x in common]
+    f2 = [x for x in r2 if x in common]
+    assert f1 == f2, "consistent ordering violated"
+
+
+def _exact_admission(deadlines, arrivals):
+    """Replay arrivals through the event-driven EarlyBuffer."""
+    n = len(deadlines)
+    out = np.zeros((n, arrivals.shape[1]), dtype=bool)
+    for rcv in range(arrivals.shape[1]):
+        eb = EarlyBuffer(commutative=False)
+        order = np.argsort(arrivals[:, rcv], kind="stable")
+        for idx in order:
+            eb.release_ready(arrivals[idx, rcv])
+            out[idx, rcv] = eb.insert(
+                Request(client_id=0, request_id=int(idx), deadline=float(deadlines[idx]),
+                        send_time=0.0, latency_bound=0.0, op=OpType.WRITE))
+    return out
+
+
+@settings(max_examples=100, deadline=None)
+@given(
+    n=st.integers(2, 24),
+    seed=st.integers(0, 2**30),
+)
+def test_vectorized_release_matches_exact(n, seed):
+    """The scan-based vectorized DOM schedule equals the event-driven one,
+    even under pathological reordering (arrival noise ~ deadline span)."""
+    from repro.core.vectorized import dom_release_schedule
+
+    rng = np.random.default_rng(seed)
+    deadlines = np.sort(rng.uniform(0, 1.0, n)) + rng.uniform(0, 1e-6, n)
+    arrivals = deadlines[:, None] + rng.normal(0, 0.3, (n, 2))  # heavy reorder
+    admitted, _ = dom_release_schedule(deadlines, arrivals)
+    np.testing.assert_array_equal(np.asarray(admitted), _exact_admission(deadlines, arrivals))
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    n=st.integers(8, 200),
+    seed=st.integers(0, 2**30),
+)
+def test_chunked_release_matches_exact_realistic(n, seed):
+    """The chunked fast path is exact under realistic OWD spreads (arrival
+    lateness << chunk deadline span)."""
+    rng = np.random.default_rng(seed)
+    send = np.sort(rng.uniform(0, 1.0, n))
+    deadlines = send + 100e-6
+    arrivals = send[:, None] + rng.lognormal(np.log(60e-6), 0.6, (n, 3))
+    admitted, _ = dom_release_schedule_chunked(deadlines, arrivals, chunk=64)
+    np.testing.assert_array_equal(np.asarray(admitted), _exact_admission(deadlines, arrivals))
+
+
+# ---------------------------------------------------------------------------
+# hashing algebra
+# ---------------------------------------------------------------------------
+entry_tuples = st.lists(
+    st.tuples(st.integers(0, 2**40), st.integers(0, 1000), st.integers(0, 2**20)),
+    min_size=0, max_size=50, unique=True)
+
+
+@settings(max_examples=200)
+@given(entries=entry_tuples, seed=st.integers(0, 2**30))
+def test_incremental_hash_equals_batch_hash(entries, seed):
+    rng = np.random.default_rng(seed)
+    inc = IncrementalHash()
+    perm = rng.permutation(len(entries))
+    for i in perm:
+        inc.add(*entries[i])
+    if entries:
+        batch = fold_hashes_np(entry_hash_np(*map(np.asarray, zip(*entries))))
+    else:
+        batch = np.uint64(0)
+    assert inc.set_hash == int(batch)
+
+
+@settings(max_examples=200)
+@given(entries=entry_tuples)
+def test_hash_add_remove_inverse(entries):
+    inc = IncrementalHash()
+    for e in entries:
+        inc.add(*e)
+    for e in entries:
+        inc.remove(*e)
+    assert inc.set_hash == 0
+
+
+@settings(max_examples=100)
+@given(
+    a=st.lists(st.integers(0, 2**31 - 1), min_size=1, max_size=32),
+    b=st.lists(st.integers(0, 2**31 - 1), min_size=1, max_size=32),
+)
+def test_crash_vector_aggregate_lattice(a, b):
+    n = min(len(a), len(b))
+    a, b = tuple(a[:n]), tuple(b[:n])
+    m = aggregate_crash_vectors([a, b])
+    assert aggregate_crash_vectors([m, a]) == m        # absorbing
+    assert aggregate_crash_vectors([b, a]) == m        # commutative
+    assert all(x >= y for x, y in zip(m, a))           # dominates inputs
+
+
+# ---------------------------------------------------------------------------
+# merge-log durability (SB.1)
+# ---------------------------------------------------------------------------
+@settings(max_examples=150, deadline=None, suppress_health_check=[HealthCheck.filter_too_much])
+@given(
+    f=st.integers(1, 3),
+    n_entries=st.integers(1, 12),
+    seed=st.integers(0, 2**30),
+)
+def test_fast_committed_entries_survive_any_f_crashes(f, n_entries, seed):
+    """If an entry is on the leader + f+ceil(f/2) followers (fast commit),
+    it survives merge_logs over ANY f+1 survivors."""
+    rng = np.random.default_rng(seed)
+    n = 2 * f + 1
+    fq = fast_quorum_size(f)
+    deadlines = np.sort(rng.uniform(0, 1, n_entries))
+    # every entry is placed on a random super quorum (fast-path commit)
+    placement = np.zeros((n_entries, n), dtype=bool)
+    for i in range(n_entries):
+        placement[i, rng.choice(n, size=fq, replace=False)] = True
+    logs = []
+    for r in range(n):
+        entries = [LogEntry(deadline=float(deadlines[i]), client_id=0, request_id=i,
+                            request=Request(client_id=0, request_id=i,
+                                            deadline=float(deadlines[i])))
+                   for i in range(n_entries) if placement[i, r]]
+        logs.append(entries)
+    # crash any f replicas; merge over survivors (all NORMAL, sync_point=0)
+    crashed = set(rng.choice(n, size=f, replace=False).tolist())
+    survivors = [r for r in range(n) if r not in crashed][: f + 1]
+    vcs = [ViewChange(replica_id=r, view_id=1, crash_vector=tuple([0] * n),
+                      log=logs[r], sync_point=0, last_normal_view=0)
+           for r in survivors]
+    merged = merge_logs(vcs, f)
+    merged_ids = {e.request_id for e in merged}
+    for i in range(n_entries):
+        # quorum intersection: fq + (f+1) - n = ceil(f/2)+1 copies remain
+        assert i in merged_ids, f"fast-committed entry {i} lost (f={f})"
+
+
+@settings(max_examples=100, deadline=None)
+@given(f=st.integers(1, 3), seed=st.integers(0, 2**30))
+def test_synced_prefix_survives(f, seed):
+    """Slow-path commits (sync-point majority) survive: the merged log starts
+    with the largest synced prefix among the qualified replicas."""
+    rng = np.random.default_rng(seed)
+    n = 2 * f + 1
+    n_entries = 10
+    deadlines = np.sort(rng.uniform(0, 1, n_entries))
+    entries = [LogEntry(deadline=float(d), client_id=0, request_id=i,
+                        request=Request(client_id=0, request_id=i, deadline=float(d)))
+               for i, d in enumerate(deadlines)]
+    sp = int(rng.integers(1, n_entries + 1))
+    # f+1 replicas synced through sp (slow-path commit of entries < sp)
+    vcs = []
+    holders = rng.choice(n, size=f + 1, replace=False)
+    for r in range(n):
+        if r in holders:
+            vcs.append(ViewChange(replica_id=r, view_id=1, crash_vector=tuple([0] * n),
+                                  log=entries[:sp], sync_point=sp, last_normal_view=0))
+    merged = merge_logs(vcs[: f + 1], f)
+    assert [e.request_id for e in merged[:sp]] == list(range(sp))
+
+
+# ---------------------------------------------------------------------------
+# quorum tracker sanity under arbitrary reply interleavings
+# ---------------------------------------------------------------------------
+@settings(max_examples=200)
+@given(
+    f=st.integers(1, 3),
+    seed=st.integers(0, 2**30),
+)
+def test_quorum_never_commits_without_leader(f, seed):
+    rng = np.random.default_rng(seed)
+    tr = QuorumTracker(f=f)
+    n = 2 * f + 1
+    for rid in range(1, n):            # every follower, never the leader
+        if rng.random() < 0.5:
+            tr.add_fast(rid, 0, hash_=7, result=None)
+        else:
+            tr.add_slow(rid, 0)
+    assert tr.check_committed() is None
+
+
+# ---------------------------------------------------------------------------
+# vectorized commit classification sanity
+# ---------------------------------------------------------------------------
+@settings(max_examples=50, deadline=None)
+@given(seed=st.integers(0, 2**30))
+def test_vectorized_commit_times_sane(seed):
+    """nezha_commit_times: fast implies committed; fast commits need the
+    super quorum's replies; commit time >= leader reply arrival."""
+    from repro.core.vectorized import nezha_commit_times
+
+    rng = np.random.default_rng(seed)
+    n, R, f = 60, 3, 1
+    send = np.sort(rng.uniform(0, 0.01, n))
+    owd = rng.lognormal(np.log(60e-6), 0.5, (n, R))
+    deadlines = send + np.percentile(owd, 60)
+    arrivals = send[:, None] + owd
+    reply = rng.lognormal(np.log(60e-6), 0.5, (n, R))
+    out = nezha_commit_times(deadlines, arrivals, reply, leader=0, f=f)
+    fast, committed, ct = out["fast"], out["committed"], out["commit_time"]
+    assert not np.any(fast & ~committed)
+    assert np.all(np.isinf(ct) | (ct >= arrivals[:, 0] - 1e-12) | ~committed)
+    # with generous deadlines everything should commit
+    assert committed.mean() > 0.9

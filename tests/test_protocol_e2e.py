@@ -1,0 +1,199 @@
+"""End-to-end protocol tests: normal operation, crashes, view changes,
+linearizability under failures. These drive the exact event-driven
+implementation."""
+import numpy as np
+import pytest
+
+from repro.core import ClusterConfig, NezhaCluster, OpType
+from repro.core.messages import Status
+from repro.core.replica import KVStore
+from repro.sim.network import NetworkParams
+
+
+def _drive_closed_loop(cl, per_client, keys=lambda c: (c.id,)):
+    def on_commit(client, rid):
+        if client.next_request_id < per_client:
+            client.submit(keys=keys(client))
+    for c in cl.clients:
+        c.on_commit = on_commit
+        c.submit(keys=keys(c))
+
+
+def test_all_requests_commit_and_logs_agree():
+    cfg = ClusterConfig(f=1, n_proxies=1, n_clients=4, seed=0)
+    cl = NezhaCluster(cfg)
+    cl.start()
+    _drive_closed_loop(cl, per_client=100)
+    cl.run_for(2.0)
+    s = cl.summary()
+    assert s["committed"] == 400
+    logs = [[e.key3 for e in r.synced] for r in cl.replicas]
+    m = min(map(len, logs))
+    assert m > 0
+    assert logs[0][:m] == logs[1][:m] == logs[2][:m]
+    # With commutativity, logs are deadline-sorted *per key class* (S8.2).
+    for r in cl.replicas:
+        per_key: dict = {}
+        for e in r.synced:
+            for k in e.request.keys or ("__all__",):
+                per_key.setdefault(k, []).append(e.deadline)
+        for k, ds in per_key.items():
+            assert ds == sorted(ds), f"key class {k} out of deadline order"
+
+
+def test_fast_commit_ratio_reasonable():
+    cfg = ClusterConfig(f=1, n_proxies=1, n_clients=4, seed=1)
+    cl = NezhaCluster(cfg)
+    cl.start()
+    _drive_closed_loop(cl, per_client=100)
+    cl.run_for(2.0)
+    s = cl.summary()
+    assert s["fast_commit_ratio"] > 0.5  # S9: typically ~0.8+ at low load
+
+
+def test_f2_cluster():
+    cfg = ClusterConfig(f=2, n_proxies=1, n_clients=2, seed=2)
+    cl = NezhaCluster(cfg)
+    cl.start()
+    _drive_closed_loop(cl, per_client=50)
+    cl.run_for(2.0)
+    assert cl.summary()["committed"] == 100
+    logs = [[e.key3 for e in r.synced] for r in cl.replicas]
+    m = min(map(len, logs))
+    assert all(lg[:m] == logs[0][:m] for lg in logs)
+
+
+def test_follower_crash_does_not_block():
+    cfg = ClusterConfig(f=1, n_proxies=1, n_clients=2, seed=3)
+    cl = NezhaCluster(cfg)
+    cl.start()
+    _drive_closed_loop(cl, per_client=200)
+    cl.run_for(0.2)
+    cl.crash_replica(2)                      # a follower
+    cl.run_for(0.5)
+    cl.relaunch_replica(2)
+    cl.run_for(1.5)
+    s = cl.summary()
+    assert s["committed"] == 400
+    assert cl.replicas[2].status == Status.NORMAL
+    # rejoined follower copied the leader's log
+    lead = [e.key3 for e in cl.replicas[cl.leader_id].synced]
+    rej = [e.key3 for e in cl.replicas[2].synced]
+    m = min(len(lead), len(rej))
+    assert rej[:m] == lead[:m]
+
+
+def test_leader_crash_view_change_and_durability():
+    cfg = ClusterConfig(f=1, n_proxies=1, n_clients=2, seed=4)
+    cl = NezhaCluster(cfg, sm_factory=KVStore)
+
+    def on_commit(client, rid):
+        if client.next_request_id < 500:
+            client.submit(command=("SET", f"k{client.id}-{client.next_request_id}", 1),
+                          keys=(client.id,))
+    for c in cl.clients:
+        c.on_commit = on_commit
+    cl.start()
+    for c in cl.clients:
+        c.submit(command=("SET", f"k{c.id}-0", 1), keys=(c.id,))
+    cl.run_for(0.3)
+    committed_before = {rid: rec for c in cl.clients for rid, rec in c.records.items()
+                        if np.isfinite(rec.commit_time)}
+    cl.crash_replica(0)                      # the leader
+    cl.run_for(1.0)
+    assert cl.leader_id != 0
+    new_leader = cl.replicas[cl.leader_id]
+    assert new_leader.status == Status.NORMAL
+    # Durability: every request committed before the crash is in the new log.
+    new_uids = {e.uid for e in new_leader.synced}
+    for c in cl.clients:
+        for rid, rec in c.records.items():
+            if np.isfinite(rec.commit_time) and rec.commit_time < 0.3:
+                assert (c.id, rid) in new_uids, f"lost committed request {(c.id, rid)}"
+    # Liveness: the cluster keeps committing with f=1 dead.
+    cl.run_for(1.0)
+    s = cl.summary()
+    assert s["committed"] == 1000
+
+
+def test_leader_crash_recovery_rejoin():
+    cfg = ClusterConfig(f=1, n_proxies=1, n_clients=2, seed=5)
+    cl = NezhaCluster(cfg)
+    cl.start()
+    _drive_closed_loop(cl, per_client=2000)
+    cl.run_for(0.3)
+    cl.crash_replica(0)
+    cl.run_for(0.4)
+    cl.relaunch_replica(0)
+    cl.run_for(1.5)
+    assert cl.replicas[0].status == Status.NORMAL
+    assert not cl.replicas[0].is_leader        # rejoined as follower
+    assert cl.summary()["committed"] == 4000
+
+
+def test_consistency_results_stable_across_crash():
+    """S B.2: committed execution results unchanged by crash + recovery."""
+    cfg = ClusterConfig(f=1, n_proxies=1, n_clients=1, seed=6)
+    cl = NezhaCluster(cfg, sm_factory=KVStore)
+
+    results = {}
+
+    def on_commit(client, rid):
+        results[rid] = client.records[rid].result
+        if client.next_request_id < 300:
+            client.submit(command=("RMW", "a", "b", 1), op=OpType.RMW, keys=("a", "b"))
+    cl.clients[0].on_commit = on_commit
+    cl.start()
+    cl.clients[0].submit(command=("RMW", "a", "b", 1), op=OpType.RMW, keys=("a", "b"))
+    cl.run_for(0.25)
+    pre_crash = dict(results)
+    cl.crash_replica(0)
+    cl.run_for(1.5)
+    # Replay: new leader re-executed the log; committed results must agree.
+    new_leader = cl.replicas[cl.leader_id]
+    for rid, res in pre_crash.items():
+        uid = (0, rid)
+        if uid in new_leader.results:
+            assert new_leader.results[uid] == res, f"result changed for {uid}"
+
+
+def test_linearizability_deadline_order_respected():
+    """Sequentially-issued non-commutative requests commit in issue order."""
+    cfg = ClusterConfig(f=1, n_proxies=1, n_clients=1, seed=7)
+    cl = NezhaCluster(cfg, sm_factory=KVStore)
+    seq = []
+
+    def on_commit(client, rid):
+        seq.append((rid, client.records[rid].result))
+        if client.next_request_id < 100:
+            client.submit(command=("RMW", "x", "y", 1), op=OpType.RMW, keys=("x", "y"))
+    cl.clients[0].on_commit = on_commit
+    cl.start()
+    cl.clients[0].submit(command=("RMW", "x", "y", 1), op=OpType.RMW, keys=("x", "y"))
+    cl.run_for(2.0)
+    assert len(seq) == 100
+    # RMW moves 1 from x to y; result = (new_x, new_y) = (-k, k) for the k-th
+    xs = [r[1][0] for r in seq]
+    assert xs == sorted(xs, reverse=True) and xs[0] == -1 and xs[-1] == -100
+
+
+def test_heavy_loss_still_commits():
+    net = NetworkParams(drop_prob=0.01)   # 100x the default loss rate
+    cfg = ClusterConfig(f=1, n_proxies=1, n_clients=2, net=net, seed=8)
+    cl = NezhaCluster(cfg)
+    cl.start()
+    _drive_closed_loop(cl, per_client=50)
+    cl.run_for(5.0)
+    assert cl.summary()["committed"] == 100
+
+
+def test_nonproxy_mode():
+    cfg = ClusterConfig(f=1, n_proxies=2, n_clients=2, co_locate_proxies=True, seed=9)
+    cl = NezhaCluster(cfg)
+    cl.start()
+    _drive_closed_loop(cl, per_client=100)
+    cl.run_for(2.0)
+    s = cl.summary()
+    assert s["committed"] == 200
+    # non-proxy saves 2 message delays -> lower latency than ~4-hop proxy path
+    assert s["median_latency"] < 350e-6

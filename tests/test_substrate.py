@@ -1,0 +1,271 @@
+"""Tests for the training/serving substrate: optimizer, train_step, data
+pipeline, checkpointing (+ metadata log), sharding rules, collectives,
+elastic planning, serving engines."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+
+
+# ---------------------------------------------------------------------------
+# optimizer / train step
+# ---------------------------------------------------------------------------
+def test_adamw_decreases_loss_quadratic():
+    from repro.train.optimizer import adamw_init, adamw_update
+
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    st = adamw_init(params)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}   # d/dw w^2
+        params, st, _ = adamw_update(params, grads, st, lr=0.05, weight_decay=0.0)
+    assert float(jnp.abs(params["w"]).max()) < 0.1
+
+
+def test_cosine_schedule():
+    from repro.train.optimizer import cosine_lr
+
+    assert float(cosine_lr(jnp.int32(0), peak=1.0, warmup=10, total=100)) == 0.0
+    assert abs(float(cosine_lr(jnp.int32(10), peak=1.0, warmup=10, total=100)) - 1.0) < 1e-6
+    end = float(cosine_lr(jnp.int32(100), peak=1.0, warmup=10, total=100))
+    assert 0.05 < end < 0.2  # floor_frac
+
+
+def test_train_step_improves_loss():
+    from repro.train.train_step import make_train_state, make_train_step
+
+    cfg = smoke_config("tinyllama-1.1b")
+    state = make_train_state(cfg, rng=jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(cfg, peak_lr=1e-3, warmup=2))
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (4, 64)))}
+    losses = []
+    for _ in range(8):
+        state, m = step(state, batch)   # same batch -> loss must fall
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0]
+
+
+def test_train_step_microbatched_matches_full():
+    from repro.train.train_step import make_train_state, make_train_step
+
+    cfg = smoke_config("tinyllama-1.1b")
+    state = make_train_state(cfg, rng=jax.random.PRNGKey(1))
+    rng = np.random.default_rng(1)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (4, 32)))}
+    s1, m1 = jax.jit(make_train_step(cfg))(state, batch)
+    s2, m2 = jax.jit(make_train_step(cfg, microbatches=2))(state, batch)
+    # gradients averaged over microbatches ~ full-batch gradients
+    l1 = jax.tree.leaves(s1.params)
+    l2 = jax.tree.leaves(s2.params)
+    for a, b in zip(l1, l2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-4)
+
+
+def test_int8_compression_roundtrip_small_error():
+    from repro.parallel.collectives import int8_compress_decompress
+
+    x = jnp.asarray(np.random.default_rng(0).normal(0, 1e-2, (128,)), jnp.float32)
+    y = int8_compress_decompress(x)
+    assert float(jnp.max(jnp.abs(x - y))) < float(jnp.max(jnp.abs(x))) / 100
+
+
+def test_compression_error_feedback_unbiased():
+    from repro.parallel.collectives import compress_with_feedback, compression_init
+
+    rng = np.random.default_rng(0)
+    g = {"w": jnp.asarray(rng.normal(0, 1e-3, (64,)), jnp.float32)}
+    st = compression_init(g)
+    total_sent = jnp.zeros(64)
+    for _ in range(50):
+        out, st = compress_with_feedback(g, st)
+        total_sent = total_sent + out["w"]
+    # cumulative transmitted ~ cumulative true gradient (error feedback)
+    np.testing.assert_allclose(np.asarray(total_sent) / 50, np.asarray(g["w"]),
+                               atol=1e-5)
+
+
+def test_straggler_feedback_conserves_gradient_mass():
+    from repro.parallel.collectives import apply_straggler_feedback, straggler_init
+
+    g = {"w": jnp.ones(8)}
+    st = straggler_init(g)
+    contributed, st = apply_straggler_feedback(g, st, jnp.asarray(False))
+    assert float(contributed["w"].sum()) == 0.0           # late: nothing sent
+    contributed, st = apply_straggler_feedback(g, st, jnp.asarray(True))
+    np.testing.assert_allclose(np.asarray(contributed["w"]), 2.0 * np.ones(8))
+    assert float(st.residual["w"].sum()) == 0.0           # fully flushed
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+def test_data_determinism_and_resume():
+    from repro.data.pipeline import DataConfig, SyntheticTokenDataset
+
+    cfg = DataConfig(vocab=1000, seq_len=64, global_batch=8, seed=3)
+    ds = SyntheticTokenDataset(cfg)
+    a = ds.batch_at(17)["tokens"]
+    b = ds.batch_at(17)["tokens"]
+    np.testing.assert_array_equal(a, b)
+    it = ds.at_step(17)
+    np.testing.assert_array_equal(next(it)["tokens"], a)
+
+
+def test_data_sharding_partitions_batch():
+    from repro.data.pipeline import DataConfig, SyntheticTokenDataset
+
+    full = SyntheticTokenDataset(DataConfig(vocab=100, seq_len=16, global_batch=8,
+                                            n_shards=1, shard=0, seed=5))
+    sh0 = SyntheticTokenDataset(DataConfig(vocab=100, seq_len=16, global_batch=8,
+                                           n_shards=2, shard=0, seed=5))
+    sh1 = SyntheticTokenDataset(DataConfig(vocab=100, seq_len=16, global_batch=8,
+                                           n_shards=2, shard=1, seed=5))
+    assert sh0.batch_at(0)["tokens"].shape == (4, 16)
+    # shards differ from each other
+    assert not np.array_equal(sh0.batch_at(0)["tokens"], sh1.batch_at(0)["tokens"])
+
+
+# ---------------------------------------------------------------------------
+# checkpointing + metadata log
+# ---------------------------------------------------------------------------
+def test_checkpoint_roundtrip(tmp_path):
+    from repro.ckpt.checkpoint import load_checkpoint, save_checkpoint
+
+    tree = {"a": np.arange(10, dtype=np.float32), "b": {"c": np.ones((3, 3))}}
+    save_checkpoint(str(tmp_path), 5, tree)
+    got, manifest = load_checkpoint(str(tmp_path))
+    np.testing.assert_array_equal(got["a"], tree["a"])
+    np.testing.assert_array_equal(got["b"]["c"], tree["b"]["c"])
+    assert manifest["step"] == 5
+
+
+def test_checkpoint_integrity_detects_corruption(tmp_path):
+    from repro.ckpt.checkpoint import load_checkpoint, save_checkpoint
+
+    tree = {"a": np.arange(100, dtype=np.float32)}
+    save_checkpoint(str(tmp_path), 1, tree)
+    # corrupt the array file
+    path = os.path.join(str(tmp_path), "step_0000000001", "a.npy")
+    arr = np.load(path)
+    arr[0] = 999.0
+    np.save(path, arr)
+    with pytest.raises(IOError):
+        load_checkpoint(str(tmp_path), 1)
+
+
+def test_metadata_log_commit_and_read():
+    from repro.ckpt.replicated_log import ReplicatedMetadataLog
+
+    log = ReplicatedMetadataLog(seed=11)
+    assert log.latest_committed() is None
+    log.commit_manifest(step=10, integrity_hash=123, path="/x/step_10")
+    got = log.latest_committed()
+    assert got["step"] == 10 and got["hash"] == 123
+    log.commit_manifest(step=20, integrity_hash=456, path="/x/step_20")
+    assert log.latest_committed()["step"] == 20
+    assert log.acquire_shard_lease(3, "hostA")
+    assert not log.acquire_shard_lease(3, "hostB")   # already leased
+    assert log.acquire_shard_lease(3, "hostA")       # re-acquire ok
+
+
+# ---------------------------------------------------------------------------
+# sharding rules
+# ---------------------------------------------------------------------------
+def test_param_shardings_cover_and_divide():
+    import os
+
+    from jax.sharding import Mesh
+
+    from repro.configs import get_config
+    from repro.models.model import abstract_params
+    from repro.parallel.sharding import param_shardings
+
+    # build a fake 16x16 mesh object over 1 real device via mesh_utils? Not
+    # possible -- instead validate spec consistency on abstract shapes with a
+    # small real mesh.
+    devs = np.asarray(jax.devices() * 4)[:4].reshape(2, 2)
+    mesh = Mesh(devs, ("data", "model"))
+    for arch in ["qwen2-7b", "dbrx-132b", "mamba2-130m", "hymba-1.5b",
+                 "seamless-m4t-large-v2"]:
+        cfg = get_config(arch)
+        ap = abstract_params(cfg)
+        sh = param_shardings(ap, mesh)
+
+        def check(p, s):
+            spec = s.spec
+            assert len(spec) <= len(p.shape)
+            for dim, ax in zip(p.shape, spec):
+                if ax is None:
+                    continue
+                n = int(np.prod([mesh.shape[a] for a in
+                                 (ax if isinstance(ax, tuple) else (ax,))]))
+                assert dim % n == 0, f"{arch}: {p.shape} not divisible by {spec}"
+
+        jax.tree.map(check, ap, sh)
+
+
+def test_elastic_plan_mesh():
+    from repro.launch.elastic import plan_mesh
+
+    assert plan_mesh(256, model_parallel=16) == (16, 16)
+    assert plan_mesh(240, model_parallel=16) == (15, 16)
+    assert plan_mesh(7, model_parallel=4) == (7, 1)  # model shrinks to fit
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+def test_serving_engine_greedy_decode():
+    from repro.models.model import init_params
+    from repro.serving.engine import GenRequest, ServingEngine
+
+    cfg = smoke_config("tinyllama-1.1b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServingEngine(cfg, params, n_slots=2, max_seq=64)
+    assert eng.admit(GenRequest(seq_id=0, prompt=[5, 7, 9], max_new=4))
+    assert eng.admit(GenRequest(seq_id=1, prompt=[3], max_new=4))
+    for _ in range(4):
+        eng.tick()
+    assert eng.requests[0].done and len(eng.requests[0].out) == 4
+    assert eng.requests[1].done
+
+
+def test_serving_engines_are_deterministic_replicas():
+    from repro.models.model import init_params
+    from repro.serving.engine import GenRequest, ServingEngine
+
+    cfg = smoke_config("tinyllama-1.1b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    engines = [ServingEngine(cfg, params, n_slots=2, max_seq=64) for _ in range(3)]
+    for eng in engines:
+        eng.admit(GenRequest(seq_id=0, prompt=[5, 7, 9], max_new=5))
+        eng.tick()
+        eng.tick()
+    fps = {e.state_fingerprint() for e in engines}
+    assert len(fps) == 1, "replicated engines diverged"
+    outs = {tuple(e.requests[0].out) for e in engines}
+    assert len(outs) == 1
+
+
+# ---------------------------------------------------------------------------
+# trainer restart drill
+# ---------------------------------------------------------------------------
+def test_trainer_checkpoint_restart(tmp_path):
+    from repro.launch.train import Trainer, TrainerConfig
+
+    tc = TrainerConfig(arch="tinyllama-1.1b", smoke=True, steps=6, batch=2,
+                       seq=32, ckpt_dir=str(tmp_path), ckpt_every=3,
+                       use_metadata_log=False)
+    t = Trainer(tc)
+    t.run()
+    t2 = Trainer(TrainerConfig(arch="tinyllama-1.1b", smoke=True, steps=8,
+                               batch=2, seq=32, ckpt_dir=str(tmp_path),
+                               ckpt_every=3, use_metadata_log=False))
+    assert t2.maybe_restore()
+    assert t2.step == 6
+    t2.run()
+    assert t2.step == 8
