@@ -1,5 +1,10 @@
-"""Shared benchmark driving: open/closed-loop workload injection for Nezha
-clusters and baseline clusters, with uniform result rows.
+"""Shared benchmark scaffolding.
+
+Workload driving now lives in `repro.sim.workload.WorkloadDriver` (one
+driver for every registered cluster -- Nezha, all baselines, the vectorized
+backend); clusters are built with `repro.core.registry.make_cluster`. This
+module keeps the benchmark-wide defaults, result formatting, and timing
+helpers, plus a thin `drive()` convenience used by benchmarks/figs.py.
 
 Durations are short (simulated 0.15-0.4 s) so `python -m benchmarks.run`
 finishes on a laptop; every knob scales with --quick/--full.
@@ -7,13 +12,10 @@ finishes on a laptop; every knob scales with --quick/--full.
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass
 
-import numpy as np
-
-from repro.core import ClusterConfig, NezhaCluster, OpType
-from repro.core.baselines import PROTOCOLS, BaselineConfig
-from repro.sim.workload import zipf_key
+from repro.core.cluster import CommonConfig
+from repro.core.registry import make_cluster
+from repro.sim.workload import Workload, WorkloadDriver
 
 WARM = 0.02
 N_KEYS = 1_000_000
@@ -21,92 +23,15 @@ READ_RATIO = 0.5
 SKEW = 0.5
 
 
-def drive_nezha_openloop(cfg: ClusterConfig, rate_per_client: float, duration: float,
-                         seed: int = 0, read_ratio: float = READ_RATIO,
-                         skew: float = SKEW, sm_factory=None) -> dict:
-    kw = {"sm_factory": sm_factory} if sm_factory else {}
-    cl = NezhaCluster(cfg, **kw)
-    cl.start()
-    rng = np.random.default_rng(seed)
-    for c in cl.clients:
-        t = WARM
-        while t < duration:
-            t += rng.exponential(1.0 / rate_per_client)
-            key = zipf_key(rng, N_KEYS, skew)
-            op = OpType.READ if rng.random() < read_ratio else OpType.WRITE
-            cl.scheduler.schedule_at(
-                t, (lambda cc, kk, oo: (lambda: cc.submit(keys=(kk,), op=oo)))(c, key, op))
-    cl.run_for(duration + 0.1)
-    s = cl.summary()
-    s["throughput"] = s["committed"] / max(duration - WARM, 1e-9)
-    s["offered"] = rate_per_client * cfg.n_clients
-    return s
-
-
-def drive_nezha_closedloop(cfg: ClusterConfig, duration: float, seed: int = 0,
-                           read_ratio: float = READ_RATIO, skew: float = SKEW) -> dict:
-    cl = NezhaCluster(cfg)
-    rng = np.random.default_rng(seed)
-    stop_t = duration
-
-    def on_commit(client, rid):
-        if cl.scheduler.now < stop_t:
-            key = zipf_key(rng, N_KEYS, skew)
-            op = OpType.READ if rng.random() < read_ratio else OpType.WRITE
-            client.submit(keys=(key,), op=op)
-
-    for c in cl.clients:
-        c.on_commit = on_commit
-    cl.start()
-    for c in cl.clients:
-        key = zipf_key(rng, N_KEYS, skew)
-        c.submit(keys=(key,))
-    cl.run_for(duration + 0.05)
-    s = cl.summary()
-    s["throughput"] = s["committed"] / duration
-    s["n_clients"] = cfg.n_clients
-    return s
-
-
-def drive_baseline_openloop(name: str, bcfg: BaselineConfig, rate_per_client: float,
-                            duration: float, seed: int = 0, skew: float = SKEW,
-                            **proto_kw) -> dict:
-    cls = PROTOCOLS[name]
-    cl = cls(bcfg, **proto_kw) if proto_kw else cls(bcfg)
-    rng = np.random.default_rng(seed)
-    for cid in range(bcfg.n_clients):
-        t = WARM
-        while t < duration:
-            t += rng.exponential(1.0 / rate_per_client)
-            key = zipf_key(rng, N_KEYS, skew)
-            cl.scheduler.schedule_at(
-                t, (lambda c, k: (lambda: cl.submit(c, k, rng.random() < READ_RATIO)))(cid, key))
-    cl.run_for(duration + 0.1)
-    s = cl.summary()
-    s["throughput"] = s["committed"] / max(duration - WARM, 1e-9)
-    s["offered"] = rate_per_client * bcfg.n_clients
-    return s
-
-
-def drive_baseline_closedloop(name: str, bcfg: BaselineConfig, duration: float,
-                              seed: int = 0, **proto_kw) -> dict:
-    cls = PROTOCOLS[name]
-    cl = cls(bcfg, **proto_kw) if proto_kw else cls(bcfg)
-    rng = np.random.default_rng(seed)
-    stop_t = duration
-
-    def on_commit(cid):
-        if cl.scheduler.now < stop_t:
-            cl.submit(cid, zipf_key(rng, N_KEYS, SKEW), rng.random() < READ_RATIO)
-
-    cl.on_commit = on_commit
-    for cid in range(bcfg.n_clients):
-        cl.submit(cid, zipf_key(rng, N_KEYS, SKEW), False)
-    cl.run_for(duration + 0.05)
-    s = cl.summary()
-    s["throughput"] = s["committed"] / duration
-    s["n_clients"] = bcfg.n_clients
-    return s
+def drive(name: str, cfg: CommonConfig, *, mode: str = "open",
+          rate_per_client: float = 2000.0, duration: float = 0.2,
+          read_ratio: float = READ_RATIO, skew: float = SKEW,
+          seed: int = 0, lanes: int = 1, **cluster_kw) -> dict:
+    """Build cluster ``name`` from ``cfg`` and run one workload against it."""
+    w = Workload(mode=mode, rate_per_client=rate_per_client, duration=duration,
+                 warmup=WARM, read_ratio=read_ratio, skew=skew, n_keys=N_KEYS,
+                 seed=seed, lanes=lanes)
+    return WorkloadDriver(w).run(make_cluster(name, cfg, **cluster_kw))
 
 
 def fmt_row(name: str, s: dict) -> str:

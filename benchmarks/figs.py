@@ -5,15 +5,8 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import (
-    Timer,
-    drive_baseline_closedloop,
-    drive_baseline_openloop,
-    drive_nezha_closedloop,
-    drive_nezha_openloop,
-    fmt_row,
-)
-from repro.core import ClusterConfig, NezhaCluster, OpType
+from benchmarks.common import Timer, drive, fmt_row
+from repro.core import ClusterConfig, make_cluster
 from repro.core.baselines import BaselineConfig
 from repro.core.dom import DomParams
 from repro.core.replica import ReplicaParams
@@ -92,13 +85,13 @@ def fig8_latency_throughput(quick=True) -> list[dict]:
     print("Fig 8b (open loop, 10 clients):")
     rates = [2000, 10000, 30000] if quick else [2000, 5000, 10000, 20000, 30000, 50000, 80000]
     for rate in rates:
-        s = drive_nezha_openloop(ClusterConfig(f=1, n_proxies=3, n_clients=10, seed=0),
-                                 rate, dur)
+        s = drive("nezha", ClusterConfig(f=1, n_proxies=3, n_clients=10, seed=0),
+                  rate_per_client=rate, duration=dur)
         s.update(fig="8b", protocol="nezha-proxy", rate=rate)
         rows.append(s)
         print("  " + fmt_row(f"nezha-proxy@{rate}", s))
-        s = drive_nezha_openloop(ClusterConfig(f=1, n_proxies=10, n_clients=10,
-                                               co_locate_proxies=True, seed=0), rate, dur)
+        s = drive("nezha-nonproxy", ClusterConfig(f=1, n_proxies=10, n_clients=10, seed=0),
+                  rate_per_client=rate, duration=dur)
         s.update(fig="8b", protocol="nezha-nonproxy", rate=rate)
         rows.append(s)
         print("  " + fmt_row(f"nezha-nonproxy@{rate}", s))
@@ -106,23 +99,50 @@ def fig8_latency_throughput(quick=True) -> list[dict]:
         for rate in rates:
             if name == "fastpaxos" and rate > 10000:
                 continue  # saturates far earlier (S9.2)
-            s = drive_baseline_openloop(name, BaselineConfig(f=1, n_clients=10, seed=0),
-                                        rate, dur)
+            s = drive(name, BaselineConfig(f=1, n_clients=10, seed=0),
+                      rate_per_client=rate, duration=dur)
             s.update(fig="8b", protocol=name, rate=rate)
             rows.append(s)
             print("  " + fmt_row(f"{name}@{rate}", s))
     print("Fig 8a (closed loop):")
     n_clients_list = [8, 32] if quick else [8, 16, 32, 64, 128]
     for n in n_clients_list:
-        s = drive_nezha_closedloop(ClusterConfig(f=1, n_proxies=3, n_clients=n, seed=0), dur)
+        s = drive("nezha", ClusterConfig(f=1, n_proxies=3, n_clients=n, seed=0),
+                  mode="closed", duration=dur)
         s.update(fig="8a", protocol="nezha-proxy", n_clients=n)
         rows.append(s)
         print("  " + fmt_row(f"nezha-proxy c={n}", s))
         for name in ["multipaxos", "nopaxos-optim"]:
-            s = drive_baseline_closedloop(name, BaselineConfig(f=1, n_clients=n, seed=0), dur)
+            s = drive(name, BaselineConfig(f=1, n_clients=n, seed=0),
+                      mode="closed", duration=dur)
             s.update(fig="8a", protocol=name, n_clients=n)
             rows.append(s)
             print("  " + fmt_row(f"{name} c={n}", s))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Backend cross-check: the same workload through the event-driven cluster and
+# the vectorized (jit) backend, via the one unified API. The vectorized path
+# is what makes million-request sweeps tractable; this table shows its
+# latency/FCR agreement with the exact simulator at matched operating points.
+# ---------------------------------------------------------------------------
+def backend_crosscheck(quick=True) -> list[dict]:
+    from repro.core import CommonConfig
+    from repro.sim.workload import Workload, WorkloadDriver
+
+    rows = []
+    dur = 0.2 if quick else 0.5
+    rates = [1000, 5000] if quick else [1000, 2000, 5000, 10000]
+    print("Backend cross-check: event vs vectorized Nezha, same Workload")
+    for rate in rates:
+        w = Workload(mode="open", rate_per_client=rate, duration=dur, seed=0)
+        cfg = CommonConfig(f=1, n_clients=10, seed=0)
+        for name in ["nezha", "nezha-vectorized"]:
+            s = WorkloadDriver(w).run(make_cluster(name, cfg))
+            s.update(fig="xcheck", rate=rate, cluster=name)
+            rows.append(s)
+            print("  " + fmt_row(f"{name}@{rate}", s))
     return rows
 
 
@@ -145,7 +165,7 @@ def fig9_ablation(quick=True) -> list[dict]:
     }
     print(f"Fig 9: ablation at {rate*10}/s total (open loop)")
     for name, cfg in variants.items():
-        s = drive_nezha_openloop(cfg, rate, dur)
+        s = drive("nezha", cfg, rate_per_client=rate, duration=dur)
         s.update(fig="9", variant=name)
         rows.append(s)
         print("  " + fmt_row(name, s))
@@ -164,7 +184,7 @@ def fig10_percentile(quick=True) -> list[dict]:
             dom = DomParams(percentile=float(pctl))
             cfg = ClusterConfig(f=1, n_proxies=2, n_clients=10, seed=0, dom=dom,
                                 replica=ReplicaParams(dom=dom, commutative=commut))
-            s = drive_nezha_openloop(cfg, 2000, dur)
+            s = drive("nezha", cfg, rate_per_client=2000, duration=dur)
             s.update(fig="10", percentile=pctl, commutativity=commut)
             rows.append(s)
             print(f"  p{pctl:2d}: FCR={s['fast_commit_ratio']:.3f} "
@@ -182,18 +202,18 @@ def fig11_scalability(quick=True) -> list[dict]:
     print("Fig 11: throughput vs #replicas (open loop)")
     for f in ([1, 2] if quick else [1, 2, 3, 4]):
         n = 2 * f + 1
-        s = drive_nezha_openloop(ClusterConfig(f=f, n_proxies=5, n_clients=10, seed=0),
-                                 rate, dur)
+        s = drive("nezha", ClusterConfig(f=f, n_proxies=5, n_clients=10, seed=0),
+                  rate_per_client=rate, duration=dur)
         s.update(fig="11", protocol="nezha-proxy", n_replicas=n)
         rows.append(s)
         print("  " + fmt_row(f"nezha-proxy n={n}", s))
-        s = drive_nezha_openloop(ClusterConfig(f=f, n_proxies=10, n_clients=10,
-                                               co_locate_proxies=True, seed=0), rate, dur)
+        s = drive("nezha-nonproxy", ClusterConfig(f=f, n_proxies=10, n_clients=10, seed=0),
+                  rate_per_client=rate, duration=dur)
         s.update(fig="11", protocol="nezha-nonproxy", n_replicas=n)
         rows.append(s)
         print("  " + fmt_row(f"nezha-nonproxy n={n}", s))
-        s = drive_baseline_openloop("multipaxos", BaselineConfig(f=f, n_clients=10, seed=0),
-                                    rate, dur)
+        s = drive("multipaxos", BaselineConfig(f=f, n_clients=10, seed=0),
+                  rate_per_client=rate, duration=dur)
         s.update(fig="11", protocol="multipaxos", n_replicas=n)
         rows.append(s)
         print("  " + fmt_row(f"multipaxos n={n}", s))
@@ -210,19 +230,19 @@ def fig12_proxy(quick=True) -> list[dict]:
     for f in ([1, 4] if quick else [1, 2, 3, 4]):
         n = 2 * f + 1
         # one client submitting as fast as its CPU allows (closed loop x8 lanes)
-        for co, name in [(False, "proxy"), (True, "non-proxy")]:
-            cfg = ClusterConfig(f=f, n_proxies=5 if not co else 1, n_clients=1,
-                                co_locate_proxies=co, seed=0)
-            cl = NezhaCluster(cfg)
+        for reg_name, name in [("nezha", "proxy"), ("nezha-nonproxy", "non-proxy")]:
+            cfg = ClusterConfig(f=f, n_proxies=5 if reg_name == "nezha" else 1,
+                                n_clients=1, seed=0)
+            cl = make_cluster(reg_name, cfg)
             lanes = 16
 
-            def on_commit(client, rid, _cl=cl):
-                if _cl.scheduler.now < dur:
-                    client.submit(keys=(rid % 1024,))
-            cl.clients[0].on_commit = on_commit
+            def on_commit(cid, rid, _cl=cl):
+                if _cl.now < dur:
+                    _cl.submit(cid, keys=(rid % 1024,))
+            cl.on_commit = on_commit
             cl.start()
             for _ in range(lanes):
-                cl.clients[0].submit(keys=(0,))
+                cl.submit(0, keys=(0,))
             cl.run_for(dur + 0.05)
             s = cl.summary()
             thr = s["committed"] / dur
@@ -249,7 +269,8 @@ def appendix_c_workloads(quick=True) -> list[dict]:
         for commut in (True, False):
             cfg = ClusterConfig(f=1, n_proxies=2, n_clients=10, seed=0,
                                 replica=ReplicaParams(commutative=commut))
-            s = drive_nezha_openloop(cfg, rate, dur, read_ratio=read_ratio, skew=skew)
+            s = drive("nezha", cfg, rate_per_client=rate, duration=dur,
+                      read_ratio=read_ratio, skew=skew)
             meds[commut] = s.get("median_latency", float("nan"))
         gain = (meds[False] - meds[True]) / meds[False] * 100
         rows.append({"fig": "C", "read_ratio": read_ratio, "skew": skew,
@@ -323,14 +344,14 @@ def fig13_wan(quick=True) -> list[dict]:
                             commit_interval=50e-3, heartbeat_timeout=500e-3),
                         client_timeout=400e-3,
                         client_proxy_lan=150e-6)  # proxies in the client zone
-    s = drive_nezha_openloop(cfg, rate, dur)
+    s = drive("nezha", cfg, rate_per_client=rate, duration=dur)
     s.update(fig="13", protocol="nezha")
     rows.append(s)
     print("  " + fmt_row("nezha(wan)", s))
     for name in ["multipaxos", "nopaxos-optim", "toq-epaxos"]:
         bcfg = BaselineConfig(f=1, n_clients=10, seed=0, net=WAN_PARAMS,
                               client_timeout=400e-3)
-        s = drive_baseline_openloop(name, bcfg, rate, dur)
+        s = drive(name, bcfg, rate_per_client=rate, duration=dur)
         s.update(fig="13", protocol=name)
         rows.append(s)
         print("  " + fmt_row(f"{name}(wan)", s))
@@ -347,19 +368,17 @@ def fig14_15_recovery(quick=True) -> list[dict]:
     print("Fig 14/15: leader crash at t=0.15; view change + recovery")
     for rate in ([5000, 20000] if quick else [1000, 5000, 10000, 20000]):
         cfg = ClusterConfig(f=1, n_proxies=2, n_clients=10, seed=0)
-        cl = NezhaCluster(cfg)
+        cl = make_cluster("nezha", cfg)
         cl.start()
         rng = np.random.default_rng(0)
         dur = 0.8
-        for c in cl.clients:
+        for cid in range(cl.n_clients):
             t = 0.02
             while t < dur:
                 t += rng.exponential(1.0 / rate)
-                cl.scheduler.schedule_at(
-                    t, (lambda cc, kk: (lambda: cc.submit(keys=(kk,))))(
-                        c, int(rng.integers(1_000_000))))
+                cl.submit_at(t, cid, keys=(int(rng.integers(1_000_000)),))
         cl.run_for(0.15)
-        cl.crash_replica(0)
+        cl.crash(0)
         crash_t = cl.scheduler.now
         # measure view-change completion: all survivors NORMAL in view >= 1
         vc_done = None
@@ -401,12 +420,13 @@ def fig16_17_disk(quick=True) -> list[dict]:
     dom = DomParams()
     cfg = ClusterConfig(f=1, n_proxies=3, n_clients=10, seed=0,
                         replica=ReplicaParams(dom=dom, disk_write_latency=disk))
-    s = drive_nezha_openloop(cfg, 10000, dur)
+    s = drive("nezha", cfg, rate_per_client=10000, duration=dur)
     s.update(fig="16-17", protocol="nezha-disk")
     rows.append(s)
     print("  " + fmt_row("nezha-disk", s))
-    s = drive_baseline_openloop("raft", BaselineConfig(f=1, n_clients=10, seed=0,
-                                                       disk_write_latency=disk), 10000, dur)
+    s = drive("raft", BaselineConfig(f=1, n_clients=10, seed=0,
+                                     disk_write_latency=disk),
+              rate_per_client=10000, duration=dur)
     s.update(fig="16-17", protocol="raft-disk")
     rows.append(s)
     print("  " + fmt_row("raft-disk(Raft-2)", s))
@@ -424,20 +444,21 @@ def app_kv_exchange(quick=True) -> list[dict]:
     exec_cost = 2e-6  # HMSET/HGETALL on 1000 keys ~ a few us
     print("S10a: YCSB-A on the replicated KV store (20 closed-loop clients)")
     # unreplicated ceiling
-    s = drive_baseline_closedloop("unreplicated",
-                                  BaselineConfig(f=1, n_clients=20, seed=0,
-                                                 exec_cost=exec_cost), dur)
+    s = drive("unreplicated", BaselineConfig(f=1, n_clients=20, seed=0,
+                                             exec_cost=exec_cost),
+              mode="closed", duration=dur)
     s.update(fig="18", system="unreplicated")
     rows.append(s)
     print("  " + fmt_row("unreplicated", s))
     cfg = ClusterConfig(f=1, n_proxies=3, n_clients=20, seed=0, exec_cost=exec_cost)
-    s = drive_nezha_closedloop(cfg, dur)
+    s = drive("nezha", cfg, mode="closed", duration=dur)
     s.update(fig="18", system="nezha")
     rows.append(s)
     print("  " + fmt_row("nezha", s))
     for name in ["multipaxos", "nopaxos-optim", "fastpaxos"]:
-        s = drive_baseline_closedloop(name, BaselineConfig(f=1, n_clients=20, seed=0,
-                                                           exec_cost=exec_cost), dur)
+        s = drive(name, BaselineConfig(f=1, n_clients=20, seed=0,
+                                       exec_cost=exec_cost),
+                  mode="closed", duration=dur)
         s.update(fig="18", system=name)
         rows.append(s)
         print("  " + fmt_row(name, s))
@@ -445,14 +466,14 @@ def app_kv_exchange(quick=True) -> list[dict]:
     print("S10b: fair-access exchange (matching engine replicated)")
     # matching engine saturates ~43K orders/s (S10); orders are RMW on symbols
     eng_cost = 1.0 / 43100
-    s = drive_baseline_closedloop("unreplicated",
-                                  BaselineConfig(f=1, n_clients=48, seed=1,
-                                                 exec_cost=eng_cost), dur)
+    s = drive("unreplicated", BaselineConfig(f=1, n_clients=48, seed=1,
+                                             exec_cost=eng_cost),
+              mode="closed", duration=dur)
     s.update(fig="19-20", system="unreplicated-cloudex")
     rows.append(s)
     print("  " + fmt_row("unreplicated-cloudex", s))
     cfg = ClusterConfig(f=1, n_proxies=16, n_clients=48, seed=1, exec_cost=eng_cost)
-    s = drive_nezha_closedloop(cfg, dur, read_ratio=0.0, skew=0.9)
+    s = drive("nezha", cfg, mode="closed", duration=dur, read_ratio=0.0, skew=0.9)
     s.update(fig="19-20", system="nezha-cloudex")
     rows.append(s)
     print("  " + fmt_row("nezha-cloudex", s))
@@ -479,7 +500,7 @@ def appendix_d_clock(quick=True) -> list[dict]:
         dom = DomParams()
         cfg = ClusterConfig(f=1, n_proxies=2, n_clients=10, seed=0, dom=dom,
                             replica=ReplicaParams(dom=dom, deadline_cap=cap))
-        cl = NezhaCluster(cfg)
+        cl = make_cluster("nezha", cfg)
         if who == "proxy":
             for p in range(cfg.n_proxies):
                 cl.clock_of_proxy(p).inject_fault(mu, sigma)
@@ -487,13 +508,11 @@ def appendix_d_clock(quick=True) -> list[dict]:
             cl.clocks[who].inject_fault(mu, sigma)
         cl.start()
         rng = np.random.default_rng(0)
-        for c in cl.clients:
+        for cid in range(cl.n_clients):
             t = 0.02
             while t < dur:
                 t += rng.exponential(1.0 / rate)
-                cl.scheduler.schedule_at(
-                    t, (lambda cc, kk: (lambda: cc.submit(keys=(kk,))))(
-                        c, int(rng.integers(1_000_000))))
+                cl.submit_at(t, cid, keys=(int(rng.integers(1_000_000)),))
         cl.run_for(dur + 0.1)
         s = cl.summary()
         s.update(fig="D", case=name)

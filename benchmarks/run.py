@@ -85,6 +85,7 @@ def main() -> None:
         "fig1_2": figs.fig1_2_reordering,
         "fig3": figs.fig3_dom,
         "fig8": figs.fig8_latency_throughput,
+        "xcheck": figs.backend_crosscheck,
         "fig9": figs.fig9_ablation,
         "fig10": figs.fig10_percentile,
         "fig11": figs.fig11_scalability,

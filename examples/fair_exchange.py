@@ -13,7 +13,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import ClusterConfig, NezhaCluster, OpType
+from repro.core import ClusterConfig, OpType, make_cluster
 from repro.core.replica import StateMachine
 
 
@@ -73,28 +73,27 @@ def main() -> None:
     n_participants = 12
     cfg = ClusterConfig(f=1, n_proxies=4, n_clients=n_participants,
                         exec_cost=1.0 / 43100, seed=0)
-    cl = NezhaCluster(cfg, sm_factory=MatchingEngine)
+    cl = make_cluster("nezha", cfg, sm_factory=MatchingEngine)
     rng = np.random.default_rng(0)
     mid = 100.0
     duration = 0.3
 
-    def trade(client, rid):
-        if cl.scheduler.now < duration:
+    def trade(cid, rid):
+        if cl.now < duration:
             side = "B" if rng.random() < 0.5 else "S"
             price = round(mid + rng.normal(0, 2), 1)
             # every symbol keys the same book -> orders are non-commutative
-            client.submit(command=("ORDER", side, price, int(rng.integers(1, 10))),
-                          op=OpType.RMW, keys=("book",))
+            cl.submit(cid, command=("ORDER", side, price, int(rng.integers(1, 10))),
+                      op=OpType.RMW, keys=("book",))
 
-    for c in cl.clients:
-        c.on_commit = trade
+    cl.on_commit = trade
     cl.start()
-    for c in cl.clients:
-        c.submit(command=("ORDER", "B", mid, 1), op=OpType.RMW, keys=("book",))
+    for cid in range(cl.n_clients):
+        cl.submit(cid, command=("ORDER", "B", mid, 1), op=OpType.RMW, keys=("book",))
     cl.run_for(0.15)
     pre = cl.summary()
     leader_before = cl.leader_id
-    cl.crash_replica(leader_before)         # kill the matching engine leader
+    cl.crash(leader_before)                 # kill the matching engine leader
     cl.run_for(duration - 0.15 + 0.3)
     s = cl.summary()
     eng = cl.replicas[cl.leader_id].sm

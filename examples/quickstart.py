@@ -11,36 +11,50 @@ import numpy as np
 
 
 def demo_consensus():
-    from repro.core import ClusterConfig, NezhaCluster
+    from repro.core import ClusterConfig, make_cluster
 
     print("== 1. Nezha consensus on a simulated cloud zone ==")
     cfg = ClusterConfig(f=1, n_proxies=1, n_clients=4, seed=0)
-    cluster = NezhaCluster(cfg)
+    cluster = make_cluster("nezha", cfg)
 
-    def keep_going(client, rid):
-        if client.next_request_id < 100:
-            client.submit(keys=(client.id,))
+    def keep_going(cid, rid):
+        if rid < 99:
+            cluster.submit(cid, keys=(cid,))
 
-    for c in cluster.clients:
-        c.on_commit = keep_going
+    cluster.on_commit = keep_going
     cluster.start()
-    for c in cluster.clients:
-        c.submit(keys=(c.id,))
+    for cid in range(cluster.n_clients):
+        cluster.submit(cid, keys=(cid,))
     cluster.run_for(1.0)
     s = cluster.summary()
     print(f"   committed {s['committed']}/400 requests, "
           f"median latency {s['median_latency']*1e6:.0f}us, "
           f"fast-path ratio {s['fast_commit_ratio']:.0%}")
     # crash the leader; the cluster elects a new one and keeps going
-    cluster.crash_replica(0)
+    cluster.crash(0)
     for c in cluster.clients:
         c.next_request_id = 0
         c.records.clear()
-        c.submit(keys=(c.id,))
+    for cid in range(cluster.n_clients):
+        cluster.submit(cid, keys=(cid,))
     cluster.run_for(1.5)
     s = cluster.summary()
     print(f"   after leader crash: committed {s['committed']}/400, "
           f"new leader = replica {cluster.leader_id}")
+
+
+def demo_protocol_zoo():
+    from repro.core import CommonConfig, available_clusters, make_cluster
+    from repro.sim.workload import Workload, WorkloadDriver
+
+    print("== 1b. one config, one workload, every protocol ==")
+    cfg = CommonConfig(f=1, n_clients=4, seed=0)
+    w = Workload(mode="open", rate_per_client=1000, duration=0.1)
+    for name in available_clusters():
+        s = WorkloadDriver(w).run(make_cluster(name, cfg))
+        print(f"   {name:18s} [{s['backend']:10s}] committed={s['committed']:4d} "
+              f"median={s['median_latency']*1e6:7.1f}us "
+              f"fast-path={s['fast_commit_ratio']:.0%}")
 
 
 def demo_training():
@@ -73,6 +87,7 @@ def demo_kernel():
 
 if __name__ == "__main__":
     demo_consensus()
+    demo_protocol_zoo()
     demo_training()
     demo_kernel()
     print("quickstart OK")

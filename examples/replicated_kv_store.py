@@ -8,8 +8,8 @@ Run:  PYTHONPATH=src python examples/replicated_kv_store.py
 """
 import numpy as np
 
-from repro.core import ClusterConfig, NezhaCluster, OpType
-from repro.core.baselines import BaselineConfig, Unreplicated
+from repro.core import ClusterConfig, OpType, make_cluster
+from repro.core.baselines import BaselineConfig
 from repro.core.replica import KVStore
 from repro.sim.workload import zipf_key
 
@@ -23,41 +23,42 @@ def run_unreplicated() -> dict:
     from repro.sim.transport import CpuParams
 
     # identical server hardware as a Nezha replica (apples-to-apples)
-    cl = Unreplicated(BaselineConfig(
+    cl = make_cluster("unreplicated", BaselineConfig(
         f=1, n_clients=N_CLIENTS, exec_cost=EXEC, seed=0,
         replica_cpu=CpuParams(send_cost=0.45e-6, recv_cost=1.05e-6, threads=2.0)))
     rng = np.random.default_rng(0)
 
-    def go(cid):
-        if cl.scheduler.now < DURATION:
-            cl.submit(cid, zipf_key(rng, N_KEYS, 0.99), rng.random() < 0.5)
+    def go(cid, rid):
+        if cl.now < DURATION:
+            op = OpType.READ if rng.random() < 0.5 else OpType.WRITE
+            cl.submit(cid, keys=(zipf_key(rng, N_KEYS, 0.99),), op=op)
 
     cl.on_commit = go
+    cl.start()
     for cid in range(N_CLIENTS):
-        cl.submit(cid, zipf_key(rng, N_KEYS, 0.99), False)
+        cl.submit(cid, keys=(zipf_key(rng, N_KEYS, 0.99),))
     cl.run_for(DURATION + 0.05)
     return cl.summary() | {"throughput": cl.summary()["committed"] / DURATION}
 
 
 def run_nezha() -> dict:
     cfg = ClusterConfig(f=1, n_proxies=3, n_clients=N_CLIENTS, exec_cost=EXEC, seed=0)
-    cl = NezhaCluster(cfg, sm_factory=KVStore)
+    cl = make_cluster("nezha", cfg, sm_factory=KVStore)
     rng = np.random.default_rng(0)
 
-    def go(client, rid):
-        if cl.scheduler.now < DURATION:
+    def go(cid, rid):
+        if cl.now < DURATION:
             k = zipf_key(rng, N_KEYS, 0.99)
             if rng.random() < 0.5:
-                client.submit(command=("GET", k), op=OpType.READ, keys=(k,))
+                cl.submit(cid, command=("GET", k), op=OpType.READ, keys=(k,))
             else:
-                client.submit(command=("SET", k, rid), op=OpType.WRITE, keys=(k,))
+                cl.submit(cid, command=("SET", k, rid), op=OpType.WRITE, keys=(k,))
 
-    for c in cl.clients:
-        c.on_commit = go
+    cl.on_commit = go
     cl.start()
-    for c in cl.clients:
+    for cid in range(N_CLIENTS):
         k = zipf_key(rng, N_KEYS, 0.99)
-        c.submit(command=("SET", k, 0), keys=(k,))
+        cl.submit(cid, command=("SET", k, 0), keys=(k,))
     cl.run_for(DURATION + 0.05)
     s = cl.summary()
     s["throughput"] = s["committed"] / DURATION

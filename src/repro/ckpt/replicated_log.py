@@ -17,24 +17,24 @@ import json
 from typing import Optional
 
 from repro.core.messages import OpType
-from repro.core.protocol import ClusterConfig, NezhaCluster
+from repro.core.protocol import ClusterConfig
+from repro.core.registry import make_cluster
 from repro.core.replica import KVStore
 
 
 class ReplicatedMetadataLog:
     def __init__(self, f: int = 1, seed: int = 0):
         cfg = ClusterConfig(f=f, n_proxies=1, n_clients=1, seed=seed)
-        self.cluster = NezhaCluster(cfg, sm_factory=KVStore)
+        self.cluster = make_cluster("nezha", cfg, sm_factory=KVStore)
         self.cluster.start()
-        self.client = self.cluster.clients[0]
         self._completed: dict[int, object] = {}
-        self.client.on_commit = self._on_commit
+        self.cluster.on_commit = self._on_commit
 
-    def _on_commit(self, client, rid):
-        self._completed[rid] = client.records[rid].result
+    def _on_commit(self, cid, rid):
+        self._completed[rid] = self.cluster.result_of(cid, rid)
 
     def _run(self, op, keys, command) -> object:
-        rid = self.client.submit(command=command, op=op, keys=keys)
+        _, rid = self.cluster.submit(0, command=command, op=op, keys=keys)
         # drive the simulated cluster until this request commits
         for _ in range(200):
             self.cluster.run_for(5e-3)

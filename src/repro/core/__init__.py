@@ -3,21 +3,32 @@
 Exact event-driven implementation (replica/proxy/protocol), pure quorum and
 recovery math, incremental hashing, and the vectorized JAX formulation used
 by the large-scale benchmarks and by the training/serving integration.
+
+Unified protocol API: every consensus backend (Nezha, the eight baselines,
+the vectorized Monte-Carlo path) implements `repro.core.cluster.Cluster`;
+construct any of them with `repro.core.registry.make_cluster(name, config)`
+and drive them with `repro.sim.workload.WorkloadDriver`.
 """
 from repro.core.clock import Clock, ClockParams, SyncService
+from repro.core.cluster import SUMMARY_REQUIRED_KEYS, Cluster, CommonConfig
 from repro.core.dom import DomParams, DomReceiver, DomSender, EarlyBuffer, LateBuffer, OwdEstimator
 from repro.core.hashing import IncrementalHash, PerKeyHashTable
 from repro.core.messages import OpType, Request, Status
 from repro.core.protocol import ClusterConfig, NezhaCluster
 from repro.core.quorum import QuorumTracker, fast_quorum_size, leader_of_view, slow_quorum_size
+from repro.core.registry import available_clusters, make_cluster
 from repro.core.replica import KVStore, NullApp, Replica, ReplicaParams, StateMachine
+from repro.core.vectorized_cluster import VectorizedConfig, VectorizedNezhaCluster
 
 __all__ = [
     "Clock", "ClockParams", "SyncService",
+    "Cluster", "CommonConfig", "SUMMARY_REQUIRED_KEYS",
     "DomParams", "DomReceiver", "DomSender", "EarlyBuffer", "LateBuffer", "OwdEstimator",
     "IncrementalHash", "PerKeyHashTable",
     "OpType", "Request", "Status",
     "ClusterConfig", "NezhaCluster",
+    "VectorizedConfig", "VectorizedNezhaCluster",
+    "make_cluster", "available_clusters",
     "QuorumTracker", "fast_quorum_size", "slow_quorum_size", "leader_of_view",
     "KVStore", "NullApp", "Replica", "ReplicaParams", "StateMachine",
 ]

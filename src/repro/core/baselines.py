@@ -19,7 +19,9 @@ apples-to-apples:
 
 Unreplicated    -- client -> server -> client; the S10 application baseline.
 
-Each cluster exposes: submit(client_id, key, is_read), run_for, summary().
+Every cluster implements the unified `repro.core.cluster.Cluster` API
+(submit/submit_at/run_for/on_commit/summary); construct them through
+`repro.core.registry.make_cluster`.
 """
 from __future__ import annotations
 
@@ -29,33 +31,29 @@ from typing import Optional
 
 import numpy as np
 
-from repro.core.clock import Clock, ClockParams
+from repro.core.clock import Clock
+from repro.core.cluster import CommonConfig, EventCluster, summarize_commits
 from repro.core.dom import DomParams, OwdEstimator
+from repro.core.messages import OpType
 from repro.core.quorum import fast_quorum_size, n_replicas
-from repro.sim.network import NetworkParams
 from repro.sim.transport import CpuParams, SimFabric
 
 
 @dataclass
-class BaselineConfig:
-    f: int = 1
-    n_clients: int = 1
-    net: NetworkParams = field(default_factory=NetworkParams)
-    clock: ClockParams = field(default_factory=ClockParams)
+class BaselineConfig(CommonConfig):
+    """Baseline-specific extension of the shared `CommonConfig` core."""
+
     # The upstream baseline implementations (NOPaxos repo) run the protocol
     # core on ONE thread; per-message costs calibrated so Multi-Paxos
     # saturates ~75-100K req/s as in Fig 8 (see EXPERIMENTS.md §Calibration).
     replica_cpu: CpuParams = field(
         default_factory=lambda: CpuParams(send_cost=0.9e-6, recv_cost=2.2e-6, threads=1.0))
-    client_cpu: CpuParams = field(default_factory=lambda: CpuParams(threads=2.0))
     # The paper's software sequencer is explicitly multithreaded (S9.1).
     sequencer_cpu: CpuParams = field(
         default_factory=lambda: CpuParams(send_cost=0.45e-6, recv_cost=1.05e-6, threads=4.0))
     client_timeout: float = 25e-3
     disk_write_latency: float = 0.0     # per-fsync (Raft / Nezha-disk, S9.10)
     disk_batch: int = 64
-    exec_cost: float = 0.0
-    seed: int = 0
 
 
 @dataclass
@@ -67,10 +65,18 @@ class Rec:
     extra: float = 0.0   # e.g. execution lag for decoupled protocols
 
 
-class _Base:
-    """Shared scaffolding: fabric, clients, records, retries, summary."""
+class _Base(EventCluster):
+    """Shared scaffolding: fabric, clients, records, retries, summary.
+
+    Implements the unified `Cluster` API. Baselines do not model replica
+    failures, so `crash`/`relaunch` keep the base-class NotImplementedError.
+    """
 
     name = "base"
+
+    @property
+    def protocol(self) -> str:
+        return self.name
 
     def __init__(self, cfg: BaselineConfig, n_extra_nodes: int = 0):
         self.cfg = cfg
@@ -92,9 +98,17 @@ class _Base:
     def client_node(self, cid: int) -> int:
         return self._client_base + cid
 
-    def submit(self, client_id: int, key: int = 0, is_read: bool = False) -> tuple[int, int]:
-        rid = self._next_rid[client_id]
-        self._next_rid[client_id] += 1
+    def submit(self, client_id: int = 0, request_id: Optional[int] = None,
+               keys: tuple = (), op=None, command=None) -> tuple[int, int]:
+        """Unified-API submission: ``keys[0]`` is the (single) conflict key;
+        ``op == OpType.READ`` marks read-only requests. ``command`` is
+        ignored -- baselines replicate a null application (S9)."""
+        key = keys[0] if keys else 0
+        is_read = op == OpType.READ
+        rid = request_id if request_id is not None else self._next_rid[client_id]
+        if (client_id, rid) in self.records:
+            raise ValueError(f"duplicate request id {(client_id, rid)}")
+        self._next_rid[client_id] = max(self._next_rid[client_id], rid + 1)
         uid = (client_id, rid)
         self.records[uid] = Rec(submit_time=self.scheduler.now)
         self._dispatch(uid, key, is_read, attempt=0)
@@ -119,28 +133,20 @@ class _Base:
         rec.fast_path = fast_path
         rec.extra = extra
         if self.on_commit:
-            self.on_commit(uid[0])
+            self.on_commit(uid[0], uid[1])
 
     def _dispatch(self, uid, key, is_read, attempt) -> None:
         raise NotImplementedError
 
-    def run_for(self, d: float) -> None:
-        self.scheduler.run_for(d)
-
     def summary(self) -> dict:
         recs = list(self.records.values())
-        lat = np.asarray([r.commit_time - r.submit_time for r in recs
-                          if np.isfinite(r.commit_time)])
-        committed = int(sum(np.isfinite(r.commit_time) for r in recs))
         fast = sum(1 for r in recs if r.fast_path and np.isfinite(r.commit_time))
-        out = {"protocol": self.name, "n_requests": len(recs), "committed": committed,
-               "fast_commit_ratio": fast / max(committed, 1),
-               "leader_util": self.fabric.cpu_utilization(0)}
-        if lat.size:
-            out.update(median_latency=float(np.median(lat)),
-                       p90_latency=float(np.percentile(lat, 90)),
-                       mean_latency=float(lat.mean()))
-        return out
+        return summarize_commits(
+            self.name, "event",
+            [r.commit_time - r.submit_time for r in recs],
+            n_requests=len(recs), n_fast=fast,
+            leader_util=self.fabric.cpu_utilization(0),
+        )
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,182 @@
+"""Unified `Cluster` API: one protocol interface for Nezha, every baseline,
+and the vectorized JAX backend.
+
+Motivation (paper S9): the headline comparisons (1.9-20.9x vs Multi-Paxos,
+Raft, Fast Paxos, NOPaxos, Domino, TOQ-EPaxos) are only meaningful because
+every protocol is driven identically over the same fabric. This module is
+that guarantee in code: every consensus backend in the repo -- the exact
+event-driven `NezhaCluster`, the eight baseline protocols, and
+`VectorizedNezhaCluster` (the jit Monte-Carlo data plane) -- implements the
+same small surface, so one workload driver and one registry cover them all.
+
+The interface
+-------------
+  start()                       -- bring the cluster up (clock sync, timers).
+  submit(client_id, request_id=None, keys=(), op=None, command=None) -> uid
+                                -- issue one request now; returns
+                                   (client_id, request_id).
+  submit_at(t, client_id, ...)  -- schedule a submission at absolute sim
+                                   time t (open-loop injection). Works on
+                                   batch backends with no event loop.
+  run_for(duration)             -- advance simulated time.
+  crash(rid) / relaunch(rid)    -- fail/recover replica rid (backends that
+                                   do not model failures raise
+                                   NotImplementedError).
+  on_commit                     -- settable callback (client_id, request_id),
+                                   fired once per committed request; the
+                                   closed-loop driver uses it.
+  summary() -> SummaryDict      -- uniform result schema, below.
+
+SummaryDict schema
+------------------
+Every backend returns at least ``SUMMARY_REQUIRED_KEYS``:
+
+  protocol           str    registry-style protocol name
+  backend            str    "event" (discrete-event) or "vectorized" (jit)
+  n_requests         int    requests submitted
+  committed          int    requests committed
+  fast_commit_ratio  float  committed on the fast path / committed
+  median_latency     float  seconds (NaN when committed == 0)
+  p90_latency        float  seconds (NaN when committed == 0)
+  mean_latency       float  seconds (NaN when committed == 0)
+
+Backends may add extra keys (``leader_util``, ``messages``, ``batches``...)
+but never remove or re-type the required ones; the conformance test in
+tests/test_cluster_api.py enforces this for every registry entry.
+
+Configuration
+-------------
+`CommonConfig` carries the knobs every protocol shares (f, clients, network,
+clocks, client CPU, timeout, execution cost, seed). Protocol families extend
+it: `repro.core.protocol.ClusterConfig` (Nezha), `repro.core.baselines.
+BaselineConfig` (all baselines), `repro.core.vectorized_cluster.
+VectorizedConfig` (jit backend). `repro.core.registry.make_cluster` promotes
+a bare `CommonConfig` to whichever subclass the chosen protocol needs.
+"""
+from __future__ import annotations
+
+import abc
+from dataclasses import dataclass, field
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+
+from repro.core.clock import ClockParams
+from repro.sim.network import NetworkParams
+from repro.sim.transport import CpuParams
+
+
+@dataclass
+class CommonConfig:
+    """Protocol-agnostic configuration core shared by every backend."""
+
+    f: int = 1                     # tolerated failures; n = 2f + 1 replicas
+    n_clients: int = 1
+    net: NetworkParams = field(default_factory=NetworkParams)
+    clock: ClockParams = field(default_factory=ClockParams)
+    client_cpu: CpuParams = field(default_factory=lambda: CpuParams(threads=2.0))
+    client_timeout: float = 20e-3
+    exec_cost: float = 0.0         # state-machine execution cost (null app: 0)
+    seed: int = 0
+
+
+SUMMARY_REQUIRED_KEYS = frozenset({
+    "protocol", "backend", "n_requests", "committed", "fast_commit_ratio",
+    "median_latency", "p90_latency", "mean_latency",
+})
+
+
+def summarize_commits(protocol: str, backend: str, latencies: Sequence[float],
+                      n_requests: int, n_fast: int, **extra) -> dict:
+    """Assemble a schema-conformant SummaryDict from commit latencies."""
+    lat = np.asarray([l for l in latencies if np.isfinite(l)], dtype=float)
+    committed = int(lat.size)
+    out = {
+        "protocol": protocol,
+        "backend": backend,
+        "n_requests": int(n_requests),
+        "committed": committed,
+        "fast_commit_ratio": n_fast / max(committed, 1),
+        "median_latency": float(np.median(lat)) if committed else float("nan"),
+        "p90_latency": float(np.percentile(lat, 90)) if committed else float("nan"),
+        "mean_latency": float(lat.mean()) if committed else float("nan"),
+    }
+    out.update(extra)
+    return out
+
+
+class Cluster(abc.ABC):
+    """Abstract consensus cluster: the one API every backend implements."""
+
+    protocol: str = "abstract"
+    backend: str = "event"
+    supports_closed_loop: bool = True   # has per-commit callbacks + event loop
+    cfg: CommonConfig
+
+    # -- workload-facing ------------------------------------------------------
+    @property
+    def n_clients(self) -> int:
+        return self.cfg.n_clients
+
+    @property
+    @abc.abstractmethod
+    def now(self) -> float:
+        """Current simulated time in seconds."""
+
+    @abc.abstractmethod
+    def submit(self, client_id: int = 0, request_id: Optional[int] = None,
+               keys: tuple = (), op=None, command=None) -> tuple[int, int]:
+        """Issue one request at the current time; returns its uid."""
+
+    @abc.abstractmethod
+    def submit_at(self, t: float, client_id: int = 0, keys: tuple = (),
+                  op=None, command=None) -> None:
+        """Schedule a submission at absolute simulated time ``t``."""
+
+    # -- lifecycle -------------------------------------------------------------
+    def start(self) -> None:
+        """Bring the cluster up. Default: nothing to do."""
+
+    @abc.abstractmethod
+    def run_for(self, duration: float) -> None:
+        """Advance simulated time by ``duration`` seconds."""
+
+    def crash(self, rid: int) -> None:
+        raise NotImplementedError(
+            f"{type(self).__name__} does not model replica failures")
+
+    def relaunch(self, rid: int) -> None:
+        raise NotImplementedError(
+            f"{type(self).__name__} does not model replica failures")
+
+    # -- results ----------------------------------------------------------------
+    @abc.abstractmethod
+    def summary(self) -> dict:
+        """Uniform SummaryDict (see module docstring for the schema)."""
+
+    # ``on_commit`` is a plain settable attribute on concrete classes: a
+    # callable ``(client_id, request_id) -> None`` fired once per commit.
+    on_commit: Optional[Callable[[int, int], None]] = None
+
+
+class EventCluster(Cluster):
+    """Mixin for discrete-event backends owning a ``self.scheduler``."""
+
+    backend = "event"
+
+    @property
+    def now(self) -> float:
+        return self.scheduler.now
+
+    def submit_at(self, t: float, client_id: int = 0, keys: tuple = (),
+                  op=None, command=None) -> None:
+        self.scheduler.schedule_at(
+            t, lambda: self.submit(client_id, keys=keys, op=op, command=command),
+            tag="inject")
+
+    def run_for(self, duration: float) -> None:
+        self.scheduler.run_for(duration)
+
+
+__all__ = ["CommonConfig", "Cluster", "EventCluster",
+           "SUMMARY_REQUIRED_KEYS", "summarize_commits"]

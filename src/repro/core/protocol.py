@@ -16,26 +16,23 @@ from typing import Callable, Optional
 
 import numpy as np
 
-from repro.core.clock import Clock, ClockParams, SyncService
+from repro.core.clock import Clock, SyncService
+from repro.core.cluster import CommonConfig, EventCluster, summarize_commits
 from repro.core.dom import DomParams
 from repro.core.proxy import Client, Proxy
 from repro.core.quorum import leader_of_view, n_replicas
 from repro.core.replica import NullApp, Replica, ReplicaParams, StateMachine
-from repro.sim.network import NetworkParams
 from repro.sim.transport import CpuParams, SimFabric
 
 
 @dataclass
-class ClusterConfig:
-    f: int = 1
+class ClusterConfig(CommonConfig):
+    """Nezha-specific extension of the shared `CommonConfig` core."""
+
     n_proxies: int = 1
-    n_clients: int = 1
     co_locate_proxies: bool = False       # Nezha-Non-Proxy mode
     dom: DomParams = field(default_factory=DomParams)
     replica: Optional[ReplicaParams] = None
-    net: NetworkParams = field(default_factory=NetworkParams)
-    clock: ClockParams = field(default_factory=ClockParams)
-    client_timeout: float = 20e-3
     qc_at_leader: bool = False      # ablation (Fig 9 "No-QC-Offloading"):
     #   followers reply to the LEADER, which runs the quorum check
     no_dom: bool = False            # ablation (Fig 9 "No-DOM"): proxies send
@@ -48,9 +45,6 @@ class ClusterConfig:
     # replicas, n1-standard-32 proxies); calibration in EXPERIMENTS.md.
     replica_cpu: CpuParams = field(default_factory=lambda: CpuParams(threads=2.0))
     proxy_cpu: CpuParams = field(default_factory=lambda: CpuParams(threads=8.0))
-    client_cpu: CpuParams = field(default_factory=lambda: CpuParams(threads=2.0))
-    exec_cost: float = 0.0                # state-machine execution cost (null app: 0)
-    seed: int = 0
 
     def __post_init__(self):
         if self.no_dom:
@@ -61,12 +55,22 @@ class ClusterConfig:
             self.replica = ReplicaParams(dom=self.dom)
 
 
-class NezhaCluster:
+class NezhaCluster(EventCluster):
+    """Exact event-driven Nezha; implements the unified `Cluster` API.
+
+    `submit`/`submit_at`/`crash`/`relaunch`/`on_commit`/`summary` follow
+    repro.core.cluster; the per-client objects (`self.clients`) remain
+    available for tests that drive the protocol at a lower level.
+    """
+
     def __init__(self, cfg: ClusterConfig, sm_factory: Callable[[], StateMachine] = NullApp,
                  on_commit: Optional[Callable] = None):
         self.cfg = cfg
         self.f = cfg.f
         self.n = n_replicas(cfg.f)
+        self._lqc: dict = {}            # qc_at_leader ablation quorum trackers
+        self._last_leader = leader_of_view(0, cfg.f)
+        self._on_commit: Optional[Callable[[int, int], None]] = None
         total_nodes = self.n + cfg.n_proxies + cfg.n_clients
         self.fabric = SimFabric(total_nodes, cfg.net, seed=cfg.seed)
         self.scheduler = self.fabric.scheduler
@@ -87,9 +91,11 @@ class NezhaCluster:
         self.proxies = [Proxy(p, cfg.f, self, cfg.dom) for p in range(cfg.n_proxies)]
         proxy_ids = list(range(cfg.n_proxies))
         self.clients = [
-            Client(c, self, proxies=proxy_ids, timeout=cfg.client_timeout, on_commit=on_commit)
+            Client(c, self, proxies=proxy_ids, timeout=cfg.client_timeout)
             for c in range(cfg.n_clients)
         ]
+        if on_commit is not None:
+            self.on_commit = on_commit   # unified (client_id, request_id) hook
 
     # -- node-id helpers --------------------------------------------------------
     def _proxy_node(self, proxy_id: int) -> int:
@@ -154,8 +160,6 @@ class NezhaCluster:
         from repro.core.messages import FastReply, SlowReply
         from repro.core.quorum import QuorumTracker
 
-        if not hasattr(self, "_lqc"):
-            self._lqc: dict = {}
         uid = (msg.client_id, msg.request_id)
         tr = self._lqc.setdefault(uid, QuorumTracker(f=self.f))
         if tr.committed:
@@ -208,26 +212,66 @@ class NezhaCluster:
         self.fabric.send(self._proxy_node(proxy_id), self._client_node(client_id),
                          lambda: c.on_reply(uid[1], result, fast_path))
 
+    # -- unified Cluster API ---------------------------------------------------
+    @property
+    def protocol(self) -> str:
+        return "nezha-nonproxy" if self.cfg.co_locate_proxies else "nezha"
+
+    def submit(self, client_id: int = 0, request_id: Optional[int] = None,
+               keys: tuple = (), op=None, command=None) -> tuple[int, int]:
+        """Issue one request through client ``client_id``'s proxy path.
+
+        Request ids are always client-assigned (sequential); an explicit
+        ``request_id`` is accepted for interface compatibility and ignored.
+        """
+        rid = self.clients[client_id].submit(command=command, op=op, keys=keys)
+        return (client_id, rid)
+
+    @property
+    def on_commit(self) -> Optional[Callable]:
+        return self._on_commit
+
+    @on_commit.setter
+    def on_commit(self, cb: Optional[Callable]) -> None:
+        self._on_commit = cb
+        hook = (lambda client, rid: cb(client.id, rid)) if cb else None
+        for c in self.clients:
+            c.on_commit = hook
+
+    def crash(self, rid: int) -> None:
+        self.replicas[rid].crash()
+
+    def relaunch(self, rid: int) -> None:
+        self.replicas[rid].relaunch()
+
+    def result_of(self, client_id: int, request_id: int):
+        """Committed execution result of a request (None if unknown)."""
+        rec = self.clients[client_id].records.get(request_id)
+        return rec.result if rec is not None else None
+
     # -- lifecycle -----------------------------------------------------------------
     def start(self) -> None:
         self.sync.start()
         for r in self.replicas:
             r.start()
 
-    def run_for(self, duration: float) -> None:
-        self.scheduler.run_for(duration)
-
+    # legacy names, kept as aliases of the unified crash/relaunch
     def crash_replica(self, rid: int) -> None:
-        self.replicas[rid].crash()
+        self.crash(rid)
 
     def relaunch_replica(self, rid: int) -> None:
-        self.replicas[rid].relaunch()
+        self.relaunch(rid)
 
     # -- introspection ---------------------------------------------------------------
     @property
     def leader_id(self) -> int:
         views = [r.view_id for r in self.replicas if r.alive]
-        return leader_of_view(max(views), self.f)
+        if not views:
+            # Every replica is crashed: report the last known leader rather
+            # than raising; summary()/monitoring stay usable during outages.
+            return self._last_leader
+        self._last_leader = leader_of_view(max(views), self.f)
+        return self._last_leader
 
     def committed_records(self):
         out = []
@@ -238,23 +282,15 @@ class NezhaCluster:
 
     def summary(self) -> dict:
         recs = self.committed_records()
-        lat = np.asarray([r.commit_time - r.submit_time for r in recs
-                          if np.isfinite(r.commit_time)])
-        committed = int(np.sum([np.isfinite(r.commit_time) for r in recs])) if recs else 0
         fast = sum(1 for r in recs if r.fast_path and np.isfinite(r.commit_time))
-        out = {
-            "n_requests": len(recs),
-            "committed": committed,
-            "fast_commit_ratio": fast / max(committed, 1),
-            "events": self.scheduler.n_dispatched,
-            "messages": self.fabric.msg_count,
-            "leader_util": self.fabric.cpu_utilization(self.leader_id),
-        }
-        if lat.size:
-            out.update(median_latency=float(np.median(lat)),
-                       p90_latency=float(np.percentile(lat, 90)),
-                       mean_latency=float(lat.mean()))
-        return out
+        return summarize_commits(
+            self.protocol, "event",
+            [r.commit_time - r.submit_time for r in recs],
+            n_requests=len(recs), n_fast=fast,
+            events=self.scheduler.n_dispatched,
+            messages=self.fabric.msg_count,
+            leader_util=self.fabric.cpu_utilization(self.leader_id),
+        )
 
 
 __all__ = ["ClusterConfig", "NezhaCluster"]

@@ -155,6 +155,7 @@ def nezha_commit_times(
     f: int,
     mod_owd: Optional[np.ndarray] = None,   # [N, R] leader->follower log-mod delay
     leader_batch_delay: float = 50e-6,
+    key_ids: Optional[np.ndarray] = None,   # [N] commutativity class per request
 ) -> dict:
     """Classify each request's commit path and commit time at the proxy.
 
@@ -163,9 +164,13 @@ def nezha_commit_times(
     equals "the set of admitted non-commutative requests with smaller
     deadline is identical" -- we approximate set-identity by requiring the
     follower to have admitted m AND every smaller-deadline request the leader
-    admitted that m's reply hash covers. For the null-app benchmark (all
-    requests non-commutative per key-class), we use the per-key refinement
-    upstream by pre-filtering to each key class.
+    admitted that m's reply hash covers.
+
+    `key_ids` enables the paper's commutativity relaxation (S8.2) without
+    per-class Python loops: requests only hash-conflict *within* their key
+    class, so the prefix-disagreement count is segmented per class instead of
+    global. Omit it for the no-commutativity model (every request conflicts
+    with every other).
 
     Returns dict with commit_time[N], fast[N], committed[N].
     """
@@ -175,13 +180,26 @@ def nezha_commit_times(
     release = np.asarray(release)
 
     # --- hash consistency: prefix-set equality per replica vs leader -------
-    order = np.argsort(deadlines, kind="stable")
-    adm_sorted = admitted[order]                       # [N, R] in deadline order
+    if key_ids is None:
+        # Global order: every request is non-commutative with every other.
+        order = np.argsort(deadlines, kind="stable")
+    else:
+        # Per key class (S8.2): a request's reply hash covers only the
+        # smaller-deadline requests in ITS class, so disagreements in other
+        # classes cannot break its fast path.
+        order = np.lexsort((deadlines, np.asarray(key_ids)))
+    adm_sorted = admitted[order]                       # [N, R] in (class,) deadline order
     lead_adm = adm_sorted[:, leader]
     # A replica's prefix (strictly before position i) matches the leader's iff
     # the cumulative count of disagreements with the leader is 0.
     disagree = adm_sorted != lead_adm[:, None]
     cum_disagree = np.cumsum(disagree, axis=0) - disagree  # exclusive prefix
+    if key_ids is not None and N > 0:
+        # Segmented cumsum: subtract each class's running total at its start.
+        ks = np.asarray(key_ids)[order]
+        starts = np.r_[0, np.flatnonzero(ks[1:] != ks[:-1]) + 1]
+        seg_of = np.cumsum(np.r_[0, (ks[1:] != ks[:-1]).astype(np.int64)])
+        cum_disagree = cum_disagree - cum_disagree[starts][seg_of]
     prefix_match = cum_disagree == 0                       # [N, R]
     # Back to original order.
     inv = np.argsort(order, kind="stable")
@@ -212,7 +230,11 @@ def nezha_commit_times(
     # log-modification reaches follower; follower syncs; sends slow-reply.
     sync_t = leader_t[:, None] + leader_batch_delay + mod_owd          # [N, R]
     # Follower can only sync m after receiving it (or fetching: +2 hops).
-    have_t = np.where(np.isfinite(arrivals), arrivals, leader_t[:, None] + 3 * np.nanmean(reply_owd))
+    # Crashed replicas are modeled by inf reply_owd; exclude them from the
+    # fetch-delay estimate so live replicas keep a finite fetch path.
+    fin_reply = reply_owd[np.isfinite(reply_owd)]
+    fetch = 3 * float(fin_reply.mean()) if fin_reply.size else np.inf
+    have_t = np.where(np.isfinite(arrivals), arrivals, leader_t[:, None] + fetch)
     slow_ready = np.maximum(sync_t, have_t)
     slow_reply_t = slow_ready + reply_owd
     slow_reply_t[:, leader] = leader_t + reply_owd[:, leader]          # leader fast-reply

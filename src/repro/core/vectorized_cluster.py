@@ -1,0 +1,199 @@
+"""`VectorizedNezhaCluster`: the jit Monte-Carlo data plane behind the
+unified `Cluster` API.
+
+The exact event-driven `NezhaCluster` pays Python-interpreter cost per
+message; million-request sweeps (Figs 1-3, 8, 10, 11 at scale) want the
+vectorized formulation in `repro.core.vectorized` instead. This backend
+makes that path a drop-in `Cluster`: submissions are buffered with their
+timestamps, and each `run_for()` flushes the pending batch through
+`dom_release_schedule` / `nezha_commit_times` (one jit-backed array program
+instead of ~10 scheduled events per request).
+
+Modeling notes (steady-state data plane, S4-S6):
+  * Per-(request, replica) arrivals are bulk-sampled from the same
+    `CloudNetwork` statistical model the event simulator uses.
+  * The DOM latency bound is the batch percentile of observed proxy->replica
+    OWDs plus the clock-error margin (the sliding-window estimator's
+    steady-state value), clamped to `dom.clamp_d`.
+  * Reply paths are sampled independently with symmetric statistics.
+  * Replica crashes are modeled by infinite arrival times; the leader is the
+    lowest-id alive replica. View-change dynamics, retries, and CPU
+    queueing are event-backend-only fidelity -- this backend trades them for
+    throughput on huge request counts.
+
+Closed-loop driving needs per-commit callbacks interleaved with the event
+loop, which a batch backend cannot provide: `supports_closed_loop` is False
+and the `WorkloadDriver` raises a clear error instead of guessing.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+from repro.core.cluster import CommonConfig, Cluster, summarize_commits
+from repro.core.dom import DomParams
+from repro.core.quorum import n_replicas
+from repro.sim.network import CloudNetwork
+
+
+@dataclass
+class VectorizedConfig(CommonConfig):
+    """Vectorized-backend extension of the shared `CommonConfig` core."""
+
+    n_proxies: int = 1
+    co_locate_proxies: bool = False     # Nezha-Non-Proxy: skip client<->proxy hops
+    dom: DomParams = field(default_factory=DomParams)
+    commutative: bool = True            # S8.2: hash-conflict per key class only
+    leader_batch_delay: float = 50e-6   # leader log-mod batching (slow path)
+
+
+class VectorizedNezhaCluster(Cluster):
+    """Nezha's steady-state data plane as a batched array program."""
+
+    backend = "vectorized"
+    supports_closed_loop = False
+
+    def __init__(self, cfg: VectorizedConfig, sm_factory=None):
+        # sm_factory accepted for constructor compatibility; the vectorized
+        # backend models the null application only (no command execution).
+        self.cfg = cfg
+        self.f = cfg.f
+        self.n = n_replicas(cfg.f)
+        total = self.n + cfg.n_proxies + cfg.n_clients
+        self.net = CloudNetwork(total, cfg.net, seed=cfg.seed)
+        self.rng = np.random.default_rng(cfg.seed + 23)
+        self._alive = np.ones(self.n, dtype=bool)
+        self._now = 0.0
+        self._next_rid = [0] * cfg.n_clients
+        # pending submissions: (time, client_id, request_id, key_class)
+        self._pending: list[tuple[float, int, int, int]] = []
+        # accumulated results across batches
+        self._latencies: list[np.ndarray] = []
+        self._n_requests = 0
+        self._n_fast = 0
+        self._batches = 0
+
+    @property
+    def protocol(self) -> str:
+        return "nezha-nonproxy" if self.cfg.co_locate_proxies else "nezha"
+
+    # -- node-id helpers (same layout as the event backend) ---------------------
+    def _proxy_node(self, proxy_id: int) -> int:
+        return self.n + proxy_id
+
+    def _client_node(self, client_id: int) -> int:
+        return self.n + self.cfg.n_proxies + client_id
+
+    # -- Cluster API -------------------------------------------------------------
+    @property
+    def now(self) -> float:
+        return self._now
+
+    def submit(self, client_id: int = 0, request_id: Optional[int] = None,
+               keys: tuple = (), op=None, command=None) -> tuple[int, int]:
+        return self.submit_at(self._now, client_id, keys=keys, op=op,
+                              command=command)
+
+    def submit_at(self, t: float, client_id: int = 0, keys: tuple = (),
+                  op=None, command=None) -> tuple[int, int]:
+        rid = self._next_rid[client_id]
+        self._next_rid[client_id] = rid + 1
+        # Commutativity class: requests hash-conflict only within one class
+        # (S8.2). Keyless requests share the global class -1.
+        kcls = hash(tuple(keys)) if keys else -1
+        self._pending.append((t, client_id, rid, kcls))
+        return (client_id, rid)
+
+    def run_for(self, duration: float) -> None:
+        horizon = self._now + duration
+        due = [p for p in self._pending if p[0] <= horizon]
+        self._pending = [p for p in self._pending if p[0] > horizon]
+        self._now = horizon
+        if due:
+            self._process_batch(due)
+
+    def crash(self, rid: int) -> None:
+        self._alive[rid] = False
+
+    def relaunch(self, rid: int) -> None:
+        self._alive[rid] = True
+
+    # -- the batched data plane -----------------------------------------------
+    def _process_batch(self, due: list[tuple[float, int, int]]) -> None:
+        from repro.core.vectorized import nezha_commit_times
+
+        cfg = self.cfg
+        due.sort()
+        times = np.asarray([t for t, _, _, _ in due])
+        cids = np.asarray([c for _, c, _, _ in due], dtype=np.int64)
+        key_ids = (np.asarray([k for _, _, _, k in due], dtype=np.int64)
+                   if cfg.commutative else None)
+        N = len(due)
+        self._n_requests += N
+        self._batches += 1
+        if not self._alive.any():
+            return  # total outage: nothing commits
+        leader = int(np.argmax(self._alive))
+
+        proxies = cids % cfg.n_proxies
+        proxy_nodes = self.n + proxies
+        replica_ids = list(range(self.n))
+
+        # client -> proxy hop (skipped in non-proxy mode: co-located)
+        if cfg.co_locate_proxies:
+            c2p = np.zeros(N)
+            p2c = np.zeros(N)
+        else:
+            cnodes = self.n + cfg.n_proxies + cids
+            owd_cp, drop_cp = self.net.sample_owd_matrix(
+                cnodes, N, [self._proxy_node(p) for p in range(cfg.n_proxies)])
+            c2p = owd_cp[np.arange(N), proxies]
+            # Lost client->proxy messages never get stamped (no retry model).
+            c2p[drop_cp[np.arange(N), proxies]] = np.inf
+            owd_pc, _ = self.net.sample_owd_matrix(
+                proxy_nodes, N, [self._client_node(0)])   # one representative column
+            p2c = owd_pc[:, 0]
+        stamp = times + c2p
+
+        # proxy -> replica multicast
+        owd_pr, drop_pr = self.net.sample_owd_matrix(proxy_nodes, N, replica_ids)
+        arrivals = stamp[:, None] + owd_pr
+        arrivals[drop_pr] = np.inf
+        arrivals[:, ~self._alive] = np.inf
+
+        # DOM latency bound: percentile of observed OWDs + clock margin,
+        # clamped to [0, D] -- the sliding-window estimator's steady state.
+        sigma = cfg.clock.residual_sigma
+        bound = float(np.percentile(owd_pr, cfg.dom.percentile)) \
+            + cfg.dom.beta * 2.0 * sigma
+        if not (0.0 < bound < cfg.dom.clamp_d):
+            bound = cfg.dom.clamp_d
+        deadlines = stamp + bound
+
+        # replica -> proxy replies (symmetric path statistics); crashed
+        # replicas never reply, so neither quorum can count them.
+        reply_owd, _ = self.net.sample_owd_matrix(proxy_nodes, N, replica_ids)
+        reply_owd[:, ~self._alive] = np.inf
+
+        res = nezha_commit_times(deadlines, arrivals, reply_owd, leader,
+                                 self.f, leader_batch_delay=cfg.leader_batch_delay,
+                                 key_ids=key_ids)
+        commit_at_client = res["commit_time"] + p2c
+        lat = commit_at_client - times
+        lat[~res["committed"]] = np.inf
+        self._latencies.append(lat)
+        self._n_fast += int(np.sum(res["fast"] & res["committed"]))
+
+    def summary(self) -> dict:
+        lat = (np.concatenate(self._latencies) if self._latencies
+               else np.zeros(0))
+        return summarize_commits(
+            self.protocol, "vectorized", lat,
+            n_requests=self._n_requests, n_fast=self._n_fast,
+            batches=self._batches,
+        )
+
+
+__all__ = ["VectorizedConfig", "VectorizedNezhaCluster"]

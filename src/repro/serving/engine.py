@@ -26,7 +26,8 @@ import numpy as np
 
 from repro.configs import ArchConfig
 from repro.core.messages import OpType
-from repro.core.protocol import ClusterConfig, NezhaCluster
+from repro.core.protocol import ClusterConfig
+from repro.core.registry import make_cluster
 from repro.core.replica import StateMachine
 from repro.models.model import make_decode_step, make_prefill, zero_cache
 from repro.serving.kv_cache import SlotPool
@@ -144,16 +145,16 @@ class ReplicatedLMService:
                  max_seq: int = 128, seed: int = 0):
         make_engine = lambda: ServingEngine(cfg, params, n_slots=n_slots, max_seq=max_seq)
         ccfg = ClusterConfig(f=f, n_proxies=1, n_clients=1, seed=seed)
-        self.cluster = NezhaCluster(ccfg, sm_factory=lambda: _LMStateMachine(make_engine))
+        self.cluster = make_cluster(
+            "nezha", ccfg, sm_factory=lambda: _LMStateMachine(make_engine))
         self.cluster.start()
-        self.client = self.cluster.clients[0]
         self._completed: dict[int, object] = {}
-        self.client.on_commit = lambda c, rid: self._completed.setdefault(
-            rid, c.records[rid].result)
+        self.cluster.on_commit = lambda cid, rid: self._completed.setdefault(
+            rid, self.cluster.result_of(cid, rid))
         self._next_seq = 0
 
     def _run(self, command, keys=("svc",)) -> object:
-        rid = self.client.submit(command=command, op=OpType.RMW, keys=keys)
+        _, rid = self.cluster.submit(0, command=command, op=OpType.RMW, keys=keys)
         for _ in range(400):
             self.cluster.run_for(5e-3)
             if rid in self._completed:

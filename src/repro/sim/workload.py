@@ -1,10 +1,19 @@
-"""Workload generators: closed-loop and open-loop (Poisson) clients (S9.1).
+"""Workload generators: closed-loop and open-loop (Poisson) clients (S9.1),
+and the unified `WorkloadDriver` that injects either shape into ANY cluster
+registered in `repro.core.registry`.
 
 Closed-loop: one outstanding request per client; a new request is issued only
 after the previous reply arrives.
 
 Open-loop: requests arrive per a Poisson process regardless of replies -- the
 "more realistic" benchmark from EPaxos-Revisited adopted by the paper.
+
+`WorkloadDriver` replaces the former per-protocol ``drive_nezha_openloop`` /
+``drive_nezha_closedloop`` / ``drive_baseline_openloop`` /
+``drive_baseline_closedloop`` quartet: one driver, parameterized by a
+`Workload` (mode, rate, duration, zipf skew, read ratio), runs against any
+`Cluster` -- Nezha, every baseline, and the vectorized backend -- through the
+unified submit/submit_at/run_for/summary surface.
 """
 from __future__ import annotations
 
@@ -12,6 +21,8 @@ from dataclasses import dataclass
 from typing import Callable, Optional
 
 import numpy as np
+
+from repro.core.messages import OpType
 
 
 @dataclass
@@ -112,4 +123,89 @@ def summarize_latencies(records: list[RequestRecord]) -> dict:
     return out
 
 
-__all__ = ["RequestRecord", "OpenLoopWorkload", "ClosedLoopWorkload", "summarize_latencies"]
+# ---------------------------------------------------------------------------
+# Unified workload driver (any registered cluster)
+# ---------------------------------------------------------------------------
+@dataclass
+class Workload:
+    """One benchmark workload: injection shape + key/op distribution.
+
+    mode="open":   Poisson arrivals at `rate_per_client` req/s per client,
+                   injected from `warmup` to `duration`; throughput is
+                   committed / (duration - warmup).
+    mode="closed": `lanes` outstanding requests per client, resubmitted on
+                   commit until `duration`; throughput is committed/duration.
+    """
+
+    mode: str = "open"                  # "open" | "closed"
+    rate_per_client: float = 2000.0     # open-loop Poisson rate per client
+    duration: float = 0.2               # injection horizon (simulated s)
+    warmup: float = 0.02                # open loop: skip-start (estimators warm)
+    drain: float = 0.1                  # extra run time for in-flight commits
+    read_ratio: float = 0.5
+    skew: float = 0.5                   # zipf theta (0 = uniform)
+    n_keys: int = 1_000_000
+    lanes: int = 1                      # closed loop: outstanding per client
+    seed: int = 0
+
+
+class WorkloadDriver:
+    """Drives a `Workload` against any unified-API cluster.
+
+    Returns the cluster's `summary()` extended with ``throughput`` and
+    (open loop) ``offered`` or (closed loop) ``n_clients``.
+    """
+
+    def __init__(self, workload: Optional[Workload] = None, **kw):
+        self.workload = workload if workload is not None else Workload(**kw)
+        if workload is not None and kw:
+            raise TypeError("pass either a Workload or keyword overrides, not both")
+
+    def _next_op(self, rng) -> tuple:
+        w = self.workload
+        key = zipf_key(rng, w.n_keys, w.skew)
+        op = OpType.READ if rng.random() < w.read_ratio else OpType.WRITE
+        return key, op
+
+    def run(self, cluster) -> dict:
+        w = self.workload
+        rng = np.random.default_rng(w.seed)
+        cluster.start()
+        if w.mode == "open":
+            for cid in range(cluster.n_clients):
+                t = w.warmup
+                while t < w.duration:
+                    t += rng.exponential(1.0 / w.rate_per_client)
+                    key, op = self._next_op(rng)
+                    cluster.submit_at(t, cid, keys=(key,), op=op)
+            cluster.run_for(w.duration + w.drain)
+            s = cluster.summary()
+            s["throughput"] = s["committed"] / max(w.duration - w.warmup, 1e-9)
+            s["offered"] = w.rate_per_client * cluster.n_clients
+        elif w.mode == "closed":
+            if not cluster.supports_closed_loop:
+                raise ValueError(
+                    f"{type(cluster).__name__} is a batch backend and cannot "
+                    "run closed-loop workloads; use mode='open'")
+
+            def on_commit(cid, rid):
+                if cluster.now < w.duration:
+                    key, op = self._next_op(rng)
+                    cluster.submit(cid, keys=(key,), op=op)
+
+            cluster.on_commit = on_commit
+            for cid in range(cluster.n_clients):
+                for _ in range(w.lanes):
+                    key, op = self._next_op(rng)
+                    cluster.submit(cid, keys=(key,), op=op)
+            cluster.run_for(w.duration + w.drain)
+            s = cluster.summary()
+            s["throughput"] = s["committed"] / w.duration
+            s["n_clients"] = cluster.n_clients
+        else:
+            raise ValueError(f"unknown workload mode {w.mode!r}")
+        return s
+
+
+__all__ = ["RequestRecord", "OpenLoopWorkload", "ClosedLoopWorkload",
+           "Workload", "WorkloadDriver", "summarize_latencies", "zipf_key"]

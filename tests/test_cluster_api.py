@@ -1,0 +1,173 @@
+"""Conformance tests for the unified Cluster API (repro.core.cluster).
+
+Every registry entry -- both Nezha backends and all eight baselines -- must
+run the SAME short `WorkloadDriver` workload and return the documented
+`summary()` schema. This is the contract that keeps the paper's
+apples-to-apples comparisons honest as protocols/backends are added.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (
+    SUMMARY_REQUIRED_KEYS,
+    ClusterConfig,
+    CommonConfig,
+    available_clusters,
+    make_cluster,
+)
+from repro.core.cluster import Cluster
+from repro.sim.workload import Workload, WorkloadDriver
+
+SHORT = Workload(mode="open", rate_per_client=500.0, duration=0.1,
+                 warmup=0.01, drain=0.06, seed=0)
+
+
+def test_registry_covers_all_backends():
+    names = available_clusters()
+    assert len(names) >= 10
+    for expected in ("nezha", "nezha-nonproxy", "nezha-vectorized",
+                     "multipaxos", "raft", "fastpaxos", "nopaxos",
+                     "nopaxos-optim", "domino", "toq-epaxos", "unreplicated"):
+        assert expected in names
+
+
+@pytest.mark.parametrize("name", available_clusters())
+def test_conformance_open_loop_and_summary_schema(name):
+    cl = make_cluster(name, CommonConfig(f=1, n_clients=2, seed=0))
+    assert isinstance(cl, Cluster)
+    s = WorkloadDriver(SHORT).run(cl)
+    missing = SUMMARY_REQUIRED_KEYS - set(s)
+    assert not missing, f"{name} summary missing {missing}"
+    assert isinstance(s["protocol"], str) and s["protocol"]
+    assert s["backend"] in ("event", "vectorized")
+    assert s["n_requests"] > 0
+    assert 0 < s["committed"] <= s["n_requests"]
+    assert 0.0 <= s["fast_commit_ratio"] <= 1.0
+    assert np.isfinite(s["median_latency"]) and s["median_latency"] > 0
+    assert np.isfinite(s["p90_latency"]) and s["p90_latency"] >= s["median_latency"]
+    assert s["throughput"] > 0
+
+
+@pytest.mark.parametrize("name", ["nezha", "multipaxos", "unreplicated"])
+def test_conformance_closed_loop(name):
+    cl = make_cluster(name, CommonConfig(f=1, n_clients=2, seed=0))
+    s = WorkloadDriver(Workload(mode="closed", duration=0.05, drain=0.05)).run(cl)
+    assert s["committed"] > 0
+    assert s["n_clients"] == 2
+
+
+def test_vectorized_rejects_closed_loop():
+    cl = make_cluster("nezha-vectorized", CommonConfig(f=1, n_clients=1))
+    with pytest.raises(ValueError, match="closed-loop"):
+        WorkloadDriver(Workload(mode="closed", duration=0.05)).run(cl)
+
+
+def test_common_config_promotion_sweeps_all_protocols():
+    """One CommonConfig parameterizes every protocol identically."""
+    cfg = CommonConfig(f=2, n_clients=3, seed=7)
+    for name in ("nezha", "nezha-vectorized", "multipaxos"):
+        cl = make_cluster(name, cfg)
+        assert cl.cfg.f == 2 and cl.cfg.n_clients == 3 and cl.cfg.seed == 7
+        assert cl.n == 5  # 2f + 1
+
+
+def test_protocol_specific_config_passthrough():
+    cfg = ClusterConfig(f=1, n_proxies=4, n_clients=2)
+    cl = make_cluster("nezha", cfg)
+    assert cl.cfg is cfg
+    cl = make_cluster("nezha-nonproxy", ClusterConfig(f=1, n_clients=2))
+    assert cl.cfg.co_locate_proxies
+
+
+def test_unknown_cluster_name():
+    with pytest.raises(KeyError, match="unknown cluster"):
+        make_cluster("paxos-prime")
+
+
+def test_baselines_do_not_model_failures():
+    cl = make_cluster("multipaxos")
+    with pytest.raises(NotImplementedError):
+        cl.crash(0)
+
+
+def test_nezha_crash_relaunch_through_unified_api():
+    cl = make_cluster("nezha", ClusterConfig(f=1, n_clients=2, seed=3))
+    cl.start()
+    commits = []
+    cl.on_commit = lambda cid, rid: commits.append((cid, rid))
+    cl.submit(0, keys=(1,))
+    cl.run_for(0.2)
+    assert commits, "no commit before crash"
+    cl.crash(0)
+    cl.run_for(1.0)
+    cl.submit(1, keys=(2,))
+    cl.run_for(1.0)
+    assert cl.leader_id != 0
+    assert (1, 0) in commits, "no commit after leader crash"
+
+
+def test_leader_id_survives_total_outage():
+    """Satellite fix: leader_id must not raise when every replica is down."""
+    cl = make_cluster("nezha", ClusterConfig(f=1, n_clients=1, seed=0))
+    cl.start()
+    cl.run_for(0.05)
+    before = cl.leader_id
+    for rid in range(cl.n):
+        cl.crash(rid)
+    assert cl.leader_id == before          # last known leader, no ValueError
+    s = cl.summary()                       # summary stays usable mid-outage
+    assert s["protocol"] == "nezha"
+
+
+def test_vectorized_crash_degrades_but_commits():
+    cl = make_cluster("nezha-vectorized", CommonConfig(f=1, n_clients=2, seed=0))
+    cl.start()
+    for i in range(100):
+        cl.submit_at(i * 1e-3, i % 2, keys=(i,))
+    cl.run_for(0.05)
+    cl.crash(1)                            # a follower
+    cl.run_for(0.1)
+    s = cl.summary()
+    assert s["committed"] == 100           # f=1: one failure is tolerated
+    cl2 = make_cluster("nezha-vectorized", CommonConfig(f=1, n_clients=1, seed=0))
+    for rid in range(3):
+        cl2.crash(rid)
+    cl2.submit(0, keys=(0,))
+    cl2.run_for(0.1)
+    assert cl2.summary()["committed"] == 0  # total outage commits nothing
+    # more than f crashed (2 of 3): no quorum is reachable either
+    cl3 = make_cluster("nezha-vectorized", CommonConfig(f=1, n_clients=1, seed=0))
+    cl3.crash(1)
+    cl3.crash(2)
+    for i in range(20):
+        cl3.submit_at(i * 1e-3, 0, keys=(i,))
+    cl3.run_for(0.1)
+    assert cl3.summary()["committed"] == 0
+
+
+def test_vectorized_agrees_with_event_backend():
+    """Same CommonConfig + Workload through both Nezha backends: latency and
+    fast-commit ratio must land in the same regime (the vectorized path is
+    the jit stand-in for the exact simulator in large sweeps)."""
+    cfg = CommonConfig(f=1, n_clients=4, seed=0)
+    w = Workload(mode="open", rate_per_client=1000, duration=0.15, seed=0)
+    ev = WorkloadDriver(w).run(make_cluster("nezha", cfg))
+    vec = WorkloadDriver(w).run(make_cluster("nezha-vectorized", cfg))
+    assert vec["committed"] >= 0.9 * ev["committed"]
+    assert 0.5 < vec["median_latency"] / ev["median_latency"] < 2.0
+    assert abs(vec["fast_commit_ratio"] - ev["fast_commit_ratio"]) < 0.25
+
+
+def test_vectorized_scales_to_large_batches():
+    """The point of the jit path: 50K requests in one batch, quickly."""
+    cl = make_cluster("nezha-vectorized", CommonConfig(f=1, n_clients=10, seed=1))
+    cl.start()
+    rng = np.random.default_rng(1)
+    n = 50_000
+    for t in np.sort(rng.uniform(0, 1.0, n)):
+        cl.submit_at(float(t), int(rng.integers(10)), keys=(int(rng.integers(1000)),))
+    cl.run_for(1.1)
+    s = cl.summary()
+    assert s["n_requests"] == n
+    assert s["committed"] > 0.95 * n
+    assert s["batches"] == 1

@@ -6,6 +6,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow   # heavy jit compiles; quick tier skips these
+
 from repro.configs import all_arch_names, get_config, smoke_config
 from repro.models.attention import decode_attention, flash_attention, reference_attention
 from repro.models.model import (

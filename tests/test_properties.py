@@ -7,6 +7,10 @@ cluster over randomized crash schedules.
 import math
 
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need the optional "
+                    "hypothesis dependency (see requirements-dev.txt)")
 from hypothesis import HealthCheck, given, settings
 from hypothesis import strategies as st
 

@@ -4,58 +4,43 @@ layer and the training/serving substrate."""
 import numpy as np
 import pytest
 
-from repro.core import ClusterConfig, NezhaCluster
-from repro.core.baselines import BaselineConfig, MultiPaxos
+pytestmark = pytest.mark.slow   # whole-system e2e runs; quick tier skips these
+
+from repro.core import ClusterConfig, make_cluster
+from repro.core.baselines import BaselineConfig
+from repro.sim.workload import Workload, WorkloadDriver
 
 
-def _drive_openloop(cl, rate_per_client, duration, seed=0):
-    rng = np.random.default_rng(seed)
-    for c in cl.clients:
-        t = 0.02
-        while t < duration:
-            t += rng.exponential(1.0 / rate_per_client)
-            cl.scheduler.schedule_at(
-                t, (lambda cc, kk: (lambda: cc.submit(keys=(kk,))))(
-                    c, int(rng.integers(1_000_000))))
-    cl.run_for(duration + 0.1)
+def _openloop(rate_per_client, duration, seed=0):
+    return Workload(mode="open", rate_per_client=rate_per_client,
+                    duration=duration, warmup=0.02, read_ratio=0.0, skew=0.0,
+                    seed=seed)
 
 
 def test_nezha_beats_multipaxos_in_throughput():
     """The paper's headline: Nezha >= 1.9x Multi-Paxos throughput."""
     dur, rate = 0.15, 20000
-    nz = NezhaCluster(ClusterConfig(f=1, n_proxies=3, n_clients=10, seed=0))
-    nz.start()
-    _drive_openloop(nz, rate, dur)
-    nez_thr = nz.summary()["committed"] / dur
-
-    mp = MultiPaxos(BaselineConfig(f=1, n_clients=10, seed=0))
-    rng = np.random.default_rng(0)
-    for cid in range(10):
-        t = 0.02
-        while t < dur:
-            t += rng.exponential(1.0 / rate)
-            mp.scheduler.schedule_at(
-                t, (lambda c, k: (lambda: mp.submit(c, k, False)))(
-                    cid, int(rng.integers(1_000_000))))
-    mp.run_for(dur + 0.1)
-    mp_thr = mp.summary()["committed"] / dur
-    assert nez_thr > 1.5 * mp_thr, f"nezha {nez_thr:.0f} vs multipaxos {mp_thr:.0f}"
+    w = _openloop(rate, dur)
+    nz = WorkloadDriver(w).run(
+        make_cluster("nezha", ClusterConfig(f=1, n_proxies=3, n_clients=10, seed=0)))
+    mp = WorkloadDriver(w).run(
+        make_cluster("multipaxos", BaselineConfig(f=1, n_clients=10, seed=0)))
+    assert nz["throughput"] > 1.5 * mp["throughput"], \
+        f"nezha {nz['throughput']:.0f} vs multipaxos {mp['throughput']:.0f}"
 
 
 def test_fast_path_is_the_common_case():
     """DOM makes the fast path dominant (S9: 80%+ with commutativity)."""
-    cl = NezhaCluster(ClusterConfig(f=1, n_proxies=2, n_clients=10, seed=1))
-    cl.start()
-    _drive_openloop(cl, 2000, 0.2)
-    assert cl.summary()["fast_commit_ratio"] > 0.75
+    s = WorkloadDriver(_openloop(2000, 0.2, seed=1)).run(
+        make_cluster("nezha", ClusterConfig(f=1, n_proxies=2, n_clients=10, seed=1)))
+    assert s["fast_commit_ratio"] > 0.75
 
 
 def test_commit_latency_microseconds_scale():
     """Nezha commits in ~1 wide-area RTT (sub-millisecond in-zone)."""
-    cl = NezhaCluster(ClusterConfig(f=1, n_proxies=2, n_clients=4, seed=2))
-    cl.start()
-    _drive_openloop(cl, 1000, 0.2)
-    assert cl.summary()["median_latency"] < 600e-6
+    s = WorkloadDriver(_openloop(1000, 0.2, seed=2)).run(
+        make_cluster("nezha", ClusterConfig(f=1, n_proxies=2, n_clients=4, seed=2)))
+    assert s["median_latency"] < 600e-6
 
 
 def test_consensus_backed_lm_service_failover():
