@@ -13,6 +13,18 @@ from repro.core.replica import ReplicaParams
 from repro.core.vectorized import dom_reordering, multicast_reordering
 from repro.sim.network import CloudNetwork, NetworkParams
 
+# Compute tier for the vectorized backend (set by benchmarks/run.py --tier);
+# None keeps each benchmark's default (numpy).
+DEFAULT_TIER: str | None = None
+
+
+def vec_cluster_name(tier: str | None = None) -> str:
+    """Registry name of the vectorized backend at the selected tier."""
+    tier = tier if tier is not None else DEFAULT_TIER
+    if tier in (None, "numpy"):
+        return "nezha-vectorized"
+    return f"nezha-vectorized-{tier}"
+
 
 # ---------------------------------------------------------------------------
 # Figures 1-2: cloud reordering vs send rate / #senders
@@ -134,15 +146,47 @@ def backend_crosscheck(quick=True) -> list[dict]:
     rows = []
     dur = 0.2 if quick else 0.5
     rates = [1000, 5000] if quick else [1000, 2000, 5000, 10000]
-    print("Backend cross-check: event vs vectorized Nezha, same Workload")
+    vec = vec_cluster_name()
+    print(f"Backend cross-check: event vs vectorized ({vec}) Nezha, same Workload")
     for rate in rates:
         w = Workload(mode="open", rate_per_client=rate, duration=dur, seed=0)
         cfg = CommonConfig(f=1, n_clients=10, seed=0)
-        for name in ["nezha", "nezha-vectorized"]:
+        for name in ["nezha", vec]:
             s = WorkloadDriver(w).run(make_cluster(name, cfg))
             s.update(fig="xcheck", rate=rate, cluster=name)
             rows.append(s)
             print("  " + fmt_row(f"{name}@{rate}", s))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Tier sweep: the same workload through every compute tier of the staged DOM
+# engine (numpy-chunked / fused-jit / Pallas kernel), open and closed loop.
+# The throughput column is simulated load; wall is host time per tier -- the
+# actual speed comparison (the jit/pallas tiers target TPU; off-TPU the
+# pallas tier runs the kernel in interpret mode and is expected to lose).
+# ---------------------------------------------------------------------------
+def tier_sweep(quick=True) -> list[dict]:
+    import time as _time
+
+    from repro.core import CommonConfig
+    from repro.sim.workload import Workload, WorkloadDriver
+
+    tiers = [DEFAULT_TIER] if DEFAULT_TIER else ["numpy", "jit", "pallas"]
+    rows = []
+    dur = 0.15 if quick else 0.4
+    rate = 2000 if quick else 5000
+    print(f"Tier sweep: staged DOM engine, tiers={tiers}")
+    for mode in ("open", "closed"):
+        w = Workload(mode=mode, rate_per_client=rate, duration=dur, seed=0)
+        for t in tiers:
+            cl = make_cluster(vec_cluster_name(t),
+                              CommonConfig(f=1, n_clients=10, seed=0))
+            t0 = _time.time()
+            s = WorkloadDriver(w).run(cl)
+            s.update(fig="tier", mode=mode, wall_s=_time.time() - t0)
+            rows.append(s)
+            print(f"  tier={t:6s} {fmt_row(f'{mode}', s)} wall={s['wall_s']:.2f}s")
     return rows
 
 

@@ -97,6 +97,7 @@ def main() -> None:
         "appendix_c": figs.appendix_c_workloads,
         "appendix_d": figs.appendix_d_clock,
         "appendix_g": figs.appendix_g_primitives,
+        "tiers": figs.tier_sweep,
         "kernels": lambda quick: bench_kernels(quick),
         "roofline": lambda quick: bench_roofline(),
     })
@@ -104,7 +105,12 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--tier", default=None, choices=["numpy", "jit", "pallas"],
+                    help="compute tier for the vectorized backend (staged DOM "
+                         "engine); default keeps each benchmark's own choice "
+                         "and the tier sweep runs all three")
     args = ap.parse_args()
+    figs.DEFAULT_TIER = args.tier
     quick = not args.full
     names = list(ALL) if not args.only else args.only.split(",")
 
@@ -128,6 +134,9 @@ def main() -> None:
         all_rows[name] = rows
         print(f"  [{name}: {wall:.1f}s wall]")
 
+    # Vectorized-backend rows carry their own "tier" key from summary();
+    # _meta records the run-wide selection for reproducibility.
+    all_rows["_meta"] = {"tier": args.tier or "default", "full": args.full}
     os.makedirs("results", exist_ok=True)
     with open("results/benchmarks.json", "w") as f:
         json.dump(all_rows, f, indent=1, default=str)

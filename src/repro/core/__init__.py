@@ -12,6 +12,7 @@ and drive them with `repro.sim.workload.WorkloadDriver`.
 from repro.core.clock import Clock, ClockParams, SyncService
 from repro.core.cluster import SUMMARY_REQUIRED_KEYS, Cluster, CommonConfig
 from repro.core.dom import DomParams, DomReceiver, DomSender, EarlyBuffer, LateBuffer, OwdEstimator
+from repro.core.engine import DomEngine, PendingBuffer, TIERS, make_tier
 from repro.core.hashing import IncrementalHash, PerKeyHashTable
 from repro.core.messages import OpType, Request, Status
 from repro.core.protocol import ClusterConfig, NezhaCluster
@@ -28,6 +29,7 @@ __all__ = [
     "OpType", "Request", "Status",
     "ClusterConfig", "NezhaCluster",
     "VectorizedConfig", "VectorizedNezhaCluster",
+    "DomEngine", "PendingBuffer", "TIERS", "make_tier",
     "make_cluster", "available_clusters",
     "QuorumTracker", "fast_quorum_size", "slow_quorum_size", "leader_of_view",
     "KVStore", "NullApp", "Replica", "ReplicaParams", "StateMachine",

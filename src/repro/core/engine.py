@@ -1,0 +1,542 @@
+"""Staged DOM engine: the vectorized Nezha data plane as composable stages.
+
+The monolithic `_process_batch` of the original vectorized backend is split
+into five explicit stages, run in order over an `EpochState`:
+
+  SampleStage   bulk per-epoch network sampling (client->proxy, proxy->replica
+                multicast, replica->proxy replies, proxy->client delivery --
+                reply paths sampled per *actual* submitting client node);
+  StampStage    proxy stamping + DOM deadline bounding (sliding-window OWD
+                percentile pool carried across epochs + clock-error margin,
+                clamped to D);
+  DomStage      DOM early-buffer admission + release schedule;
+  CommitStage   fast/slow commit classification (prefix hash-consistency vs
+                the leader, per-key-class commutativity, quorum arithmetic);
+  DeliverStage  commit delivery at the client (+ per-epoch view-change
+                penalty) and latency accounting.
+
+Stages that run array programs dispatch through a pluggable **compute tier**:
+
+  numpy    `dom_release_schedule_chunked` -- chunked numpy orchestration with
+           a watermark carry, jit inner scan per chunk (the CPU default);
+  jit      one fused `dom_release_schedule` lax.scan over the whole (padded)
+           epoch batch -- the XLA path;
+  pallas   admission via the jit scan, release/deadline ordering routed
+           through the `repro.kernels.ops.dom_release` bitonic-sort TPU
+           kernel (interpret mode off-TPU). Deadline keys are compared in
+           float32 inside the kernel, so ties closer than ~1e-7 relative may
+           order differently from the float64 tiers; continuous-time
+           deadlines collide with probability ~0.
+
+Epoch batches are padded to power-of-two buckets before tier dispatch so jit
+recompilation is bounded by O(log N) distinct shapes per run instead of one
+per epoch size.
+
+`classify_commits` is the tier-independent commit classifier; the legacy
+`repro.core.vectorized.nezha_commit_times` wraps it for callers that want the
+one-shot (admission + classification) form.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Union
+
+import numpy as np
+
+from repro.core.quorum import fast_quorum_size, slow_quorum_size
+from repro.core.vectorized import dom_release_schedule, dom_release_schedule_chunked
+
+# ---------------------------------------------------------------------------
+# Pending-submission buffer (structured, amortized growth)
+# ---------------------------------------------------------------------------
+PENDING_DTYPE = np.dtype([
+    ("t", np.float64),       # next attempt time (sim s)
+    ("t0", np.float64),      # original submission time (latency baseline)
+    ("cid", np.int64),       # submitting client id
+    ("rid", np.int64),       # per-client request id
+    ("kcls", np.int64),      # interned commutativity class (-1 = global)
+    ("tries", np.int64),     # completed attempts (retry model)
+])
+
+
+class PendingBuffer:
+    """Growable structured array of pending submissions.
+
+    Replaces the Python list-of-tuples buffer: appends are O(1) amortized and
+    `pop_due` is a vectorized mask + stable time-sort instead of two list
+    comprehensions over every pending request.
+    """
+
+    def __init__(self, capacity: int = 1024):
+        self._buf = np.empty(max(capacity, 1), dtype=PENDING_DTYPE)
+        self._n = 0
+
+    def __len__(self) -> int:
+        return self._n
+
+    def _reserve(self, need: int) -> None:
+        if self._buf.size < need:
+            cap = self._buf.size
+            while cap < need:
+                cap *= 2
+            grown = np.empty(cap, dtype=PENDING_DTYPE)
+            grown[: self._n] = self._buf[: self._n]
+            self._buf = grown
+
+    def append(self, t: float, cid: int, rid: int, kcls: int,
+               t0: Optional[float] = None, tries: int = 0) -> None:
+        self._reserve(self._n + 1)
+        self._buf[self._n] = (t, t if t0 is None else t0, cid, rid, kcls, tries)
+        self._n += 1
+
+    def extend(self, rows: np.ndarray) -> None:
+        """Bulk re-enqueue of PENDING_DTYPE rows (the retry path)."""
+        self._reserve(self._n + rows.size)
+        self._buf[self._n: self._n + rows.size] = rows
+        self._n += rows.size
+
+    def min_time(self) -> float:
+        if self._n == 0:
+            return np.inf
+        return float(self._buf["t"][: self._n].min())
+
+    def pop_due(self, horizon: float) -> np.ndarray:
+        """Remove and return all entries with t <= horizon, time-sorted."""
+        view = self._buf[: self._n]
+        due_mask = view["t"] <= horizon
+        if not due_mask.any():
+            return np.empty(0, dtype=PENDING_DTYPE)
+        due = np.sort(view[due_mask], order="t", kind="stable")
+        rest = view[~due_mask].copy()
+        self._n = rest.size
+        if self._buf.size < rest.size:       # pragma: no cover - cannot shrink
+            self._buf = np.empty(rest.size, dtype=PENDING_DTYPE)
+        self._buf[: self._n] = rest
+        return due
+
+
+# ---------------------------------------------------------------------------
+# Compute tiers
+# ---------------------------------------------------------------------------
+def _pow2_bucket(n: int) -> int:
+    return 1 << max(0, int(n - 1).bit_length()) if n > 1 else 1
+
+
+class ComputeTier:
+    """Backend for the DOM hot loops; see module docstring for the tiers."""
+
+    name = "abstract"
+    # Pad epoch batches to pow2 buckets before release_schedule? True for
+    # jit-compiled tiers (bounds recompilation to O(log N) shapes per run);
+    # pointless scan work for the numpy tier.
+    pad_batches = False
+
+    def release_schedule(self, deadlines: np.ndarray,
+                         arrivals: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """Early-buffer admission + release times: ([N,R] bool, [N,R] f64)."""
+        raise NotImplementedError
+
+    def deadline_order(self, deadlines: np.ndarray) -> np.ndarray:
+        """Message indices sorted by deadline (the release/ordering sort)."""
+        return np.argsort(deadlines, kind="stable")
+
+
+class NumpyTier(ComputeTier):
+    """Chunked numpy orchestration (watermark carry across chunks)."""
+
+    name = "numpy"
+
+    def __init__(self, chunk: int = 2048):
+        self.chunk = chunk
+
+    def release_schedule(self, deadlines, arrivals):
+        adm, rel = dom_release_schedule_chunked(
+            np.asarray(deadlines, np.float64), np.asarray(arrivals, np.float64),
+            chunk=self.chunk)
+        return np.asarray(adm), np.asarray(rel)
+
+
+class JitTier(ComputeTier):
+    """One fused lax.scan over the whole epoch batch."""
+
+    name = "jit"
+    pad_batches = True
+
+    def release_schedule(self, deadlines, arrivals):
+        import jax.numpy as jnp
+
+        adm, _ = dom_release_schedule(jnp.asarray(deadlines),
+                                      jnp.asarray(arrivals))
+        adm = np.asarray(adm)
+        # Recompute release times in float64: the jit scan's release output is
+        # float32 under JAX's default precision, and a ~10ns rounding of
+        # max(deadline, arrival) can flip a near-boundary fast/slow
+        # classification relative to the numpy tier.
+        d = np.asarray(deadlines, np.float64)
+        a = np.asarray(arrivals, np.float64)
+        rel = np.where(adm, np.maximum(d[:, None], a), np.inf)
+        return adm, rel
+
+
+class PallasTier(JitTier):
+    """Jit admission scan + Pallas bitonic-sort release ordering.
+
+    The deadline sort is the O(N log^2 N) hot op of a DOM receiver at rate;
+    it routes through `repro.kernels.ops.dom_release` (TPU kernel, interpret
+    mode off-TPU). Admission is inherently a sequential scan and shares the
+    jit tier's implementation.
+    """
+
+    name = "pallas"
+
+    def deadline_order(self, deadlines):
+        from repro.kernels.ops import dom_deadline_order
+
+        return dom_deadline_order(deadlines, use_pallas=True)
+
+
+TIERS: dict[str, type] = {"numpy": NumpyTier, "jit": JitTier, "pallas": PallasTier}
+
+
+def make_tier(tier: Union[str, ComputeTier]) -> ComputeTier:
+    if isinstance(tier, ComputeTier):
+        return tier
+    try:
+        return TIERS[tier]()
+    except KeyError:
+        raise KeyError(f"unknown compute tier {tier!r}; available: {', '.join(TIERS)}")
+
+
+# ---------------------------------------------------------------------------
+# Commit classification (tier-independent)
+# ---------------------------------------------------------------------------
+def classify_commits(
+    deadlines: np.ndarray,          # [N] request deadlines (proxy-stamped)
+    arrivals: np.ndarray,           # [N, R] request arrival at each replica
+    admitted: np.ndarray,           # [N, R] early-buffer admission
+    release: np.ndarray,            # [N, R] release times (inf if not admitted)
+    reply_owd: np.ndarray,          # [N, R] replica->proxy reply delay
+    leader: int,
+    f: int,
+    mod_owd: Optional[np.ndarray] = None,   # [N, R] leader->follower log-mod delay
+    leader_batch_delay: float = 50e-6,
+    key_ids: Optional[np.ndarray] = None,   # [N] commutativity class per request
+    order: Optional[np.ndarray] = None,     # [N] deadline-sorted indices (tier)
+) -> dict:
+    """Classify each request's commit path and commit time at the proxy.
+
+    Fast path: request admitted at leader + enough followers with *identical
+    log prefixes*. In steady state, hash-consistency at request m's release
+    equals "the set of admitted non-commutative requests with smaller
+    deadline is identical" -- we approximate set-identity by requiring the
+    follower to have admitted m AND every smaller-deadline request the leader
+    admitted that m's reply hash covers.
+
+    `key_ids` enables the paper's commutativity relaxation (S8.2) without
+    per-class Python loops: requests only hash-conflict *within* their key
+    class, so the prefix-disagreement count is segmented per class instead of
+    global. Omit it for the no-commutativity model (every request conflicts
+    with every other).
+
+    `order`, when given, is the deadline sort produced by a compute tier (the
+    Pallas tier emits it from the bitonic kernel); requests that no replica
+    admitted never influence prefix disagreement, so their position in a
+    tier's order is immaterial.
+
+    Returns dict with commit_time[N], fast[N], committed[N].
+    """
+    N, R = arrivals.shape
+    admitted = np.asarray(admitted)
+    release = np.asarray(release)
+
+    # --- hash consistency: prefix-set equality per replica vs leader -------
+    if order is None:
+        order = np.argsort(deadlines, kind="stable")
+    else:
+        order = np.asarray(order, np.int64)
+    if key_ids is not None and N > 0:
+        # Per key class (S8.2): regroup the deadline order by class (stable),
+        # giving the (class, deadline) lexicographic order. A request's reply
+        # hash covers only the smaller-deadline requests in ITS class, so
+        # disagreements in other classes cannot break its fast path.
+        ks_all = np.asarray(key_ids)
+        order = order[np.argsort(ks_all[order], kind="stable")]
+    adm_sorted = admitted[order]                       # [N, R] in (class,) deadline order
+    lead_adm = adm_sorted[:, leader]
+    # A replica's prefix (strictly before position i) matches the leader's iff
+    # the cumulative count of disagreements with the leader is 0.
+    disagree = adm_sorted != lead_adm[:, None]
+    cum_disagree = np.cumsum(disagree, axis=0) - disagree  # exclusive prefix
+    if key_ids is not None and N > 0:
+        # Segmented cumsum: subtract each class's running total at its start.
+        ks = np.asarray(key_ids)[order]
+        starts = np.r_[0, np.flatnonzero(ks[1:] != ks[:-1]) + 1]
+        seg_of = np.cumsum(np.r_[0, (ks[1:] != ks[:-1]).astype(np.int64)])
+        cum_disagree = cum_disagree - cum_disagree[starts][seg_of]
+    prefix_match = cum_disagree == 0                       # [N, R]
+    # Back to original order.
+    inv = np.argsort(order, kind="stable")
+    prefix_match = prefix_match[inv]
+
+    # --- replies ------------------------------------------------------------
+    fast_reply_t = np.where(admitted, release + reply_owd, np.inf)   # [N, R]
+    fast_hash_ok = admitted & prefix_match & admitted[:, [leader]]
+
+    # Fast quorum: leader + (fq-1) matching followers, by reply arrival time.
+    fq = fast_quorum_size(f)
+    ok_t = np.where(fast_hash_ok, fast_reply_t, np.inf)
+    ok_sorted = np.sort(ok_t, axis=1)
+    fast_commit_t = np.where(
+        np.isfinite(ok_t[:, leader]),
+        ok_sorted[:, fq - 1] if fq - 1 < R else np.inf,
+        np.inf,
+    )
+    fast_commit_t = np.maximum(fast_commit_t, ok_t[:, leader])
+
+    # --- slow path ------------------------------------------------------------
+    # Leader appends everything eventually: late requests get re-deadlined and
+    # released ~immediately at the leader.
+    leader_t = np.where(admitted[:, leader], release[:, leader], arrivals[:, leader])
+    leader_t = np.where(np.isfinite(arrivals[:, leader]), leader_t, np.inf)
+    if mod_owd is None:
+        mod_owd = reply_owd  # symmetric paths by default
+    # log-modification reaches follower; follower syncs; sends slow-reply.
+    sync_t = leader_t[:, None] + leader_batch_delay + mod_owd          # [N, R]
+    # Follower can only sync m after receiving it (or fetching: +2 hops).
+    # Crashed replicas are modeled by inf reply_owd; exclude them from the
+    # fetch-delay estimate so live replicas keep a finite fetch path.
+    fin_reply = reply_owd[np.isfinite(reply_owd)]
+    fetch = 3 * float(fin_reply.mean()) if fin_reply.size else np.inf
+    have_t = np.where(np.isfinite(arrivals), arrivals, leader_t[:, None] + fetch)
+    slow_ready = np.maximum(sync_t, have_t)
+    slow_reply_t = slow_ready + reply_owd
+    slow_reply_t[:, leader] = leader_t + reply_owd[:, leader]          # leader fast-reply
+    sq = slow_quorum_size(f)
+    slow_sorted = np.sort(slow_reply_t, axis=1)
+    slow_commit_t = np.maximum(slow_sorted[:, sq - 1], slow_reply_t[:, leader])
+
+    commit_t = np.minimum(fast_commit_t, slow_commit_t)
+    fast = fast_commit_t <= slow_commit_t
+    committed = np.isfinite(commit_t)
+    return {
+        "commit_time": commit_t,
+        "fast": fast & committed,
+        "committed": committed,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Epoch pipeline
+# ---------------------------------------------------------------------------
+@dataclass
+class EpochState:
+    """Mutable per-epoch blackboard the stages fill in, in order."""
+
+    # inputs
+    t: np.ndarray                       # [N] attempt times (this submission)
+    t0: np.ndarray                      # [N] original submit times (latency)
+    cid: np.ndarray                     # [N] client ids
+    rid: np.ndarray                     # [N] per-client request ids
+    kcls: Optional[np.ndarray]          # [N] commutativity classes (or None)
+    alive: np.ndarray                   # [R] replica liveness this epoch
+    leader: int                         # leader this epoch
+    view_penalty: float = 0.0           # view-change latency charged this epoch
+    # SampleStage
+    proxy_nodes: Optional[np.ndarray] = None
+    c2p: Optional[np.ndarray] = None    # [N] client->proxy OWD (inf = dropped)
+    p2c: Optional[np.ndarray] = None    # [N] proxy->client reply OWD
+    owd_pr: Optional[np.ndarray] = None     # [N, R] proxy->replica OWD
+    drop_pr: Optional[np.ndarray] = None    # [N, R] multicast drops
+    reply_owd: Optional[np.ndarray] = None  # [N, R] replica->proxy reply OWD
+    # StampStage
+    bound: float = 0.0                  # DOM latency bound this epoch
+    stamp: Optional[np.ndarray] = None  # [N] proxy stamp times
+    deadlines: Optional[np.ndarray] = None  # [N]
+    arrivals: Optional[np.ndarray] = None   # [N, R]
+    # DomStage
+    admitted: Optional[np.ndarray] = None   # [N, R]
+    release: Optional[np.ndarray] = None    # [N, R]
+    # CommitStage
+    commit_time: Optional[np.ndarray] = None  # [N] commit at proxy
+    fast: Optional[np.ndarray] = None
+    committed: Optional[np.ndarray] = None
+    # DeliverStage
+    commit_at_client: Optional[np.ndarray] = None  # [N]
+    latency: Optional[np.ndarray] = None           # [N] (inf = uncommitted)
+
+
+class Stage:
+    name = "stage"
+
+    def run(self, s: EpochState, eng: "DomEngine") -> None:
+        raise NotImplementedError
+
+
+class SampleStage(Stage):
+    """Bulk network sampling for the epoch batch, one rng stream."""
+
+    name = "sample"
+
+    def run(self, s, eng):
+        cfg = eng.cfg
+        n = eng.n
+        N = s.t.size
+        s.proxy_nodes = eng.proxy_nodes(s.cid % cfg.n_proxies)
+        if cfg.co_locate_proxies:       # Nezha-Non-Proxy: no client<->proxy hops
+            s.c2p = np.zeros(N)
+            s.p2c = np.zeros(N)
+        else:
+            cnodes = eng.client_nodes(s.cid)
+            c2p, drop_cp = eng.net.sample_owd_pairs(cnodes, s.proxy_nodes)
+            # A lost message on either client leg leaves the attempt
+            # uncommitted at the client (inf latency); the cluster's retry
+            # model then re-issues it after client_timeout.
+            c2p[drop_cp] = np.inf
+            s.c2p = c2p
+            # Reply path sampled per actual submitting client node.
+            p2c, drop_pc = eng.net.sample_owd_pairs(s.proxy_nodes, cnodes)
+            p2c[drop_pc] = np.inf
+            s.p2c = p2c
+        replicas = list(range(n))
+        s.owd_pr, s.drop_pr = eng.net.sample_owd_matrix(s.proxy_nodes, N, replicas)
+        # replica -> proxy replies (symmetric path statistics)
+        s.reply_owd, _ = eng.net.sample_owd_matrix(s.proxy_nodes, N, replicas)
+
+
+class StampStage(Stage):
+    """Proxy stamping + DOM deadline bounding.
+
+    The bound is the percentile of a sliding pool of observed proxy->replica
+    OWDs carried across epochs (the sliding-window estimator's steady state)
+    plus the clock-error margin, clamped to [0, D].
+    """
+
+    name = "stamp"
+
+    def run(self, s, eng):
+        cfg = eng.cfg
+        s.stamp = s.t + s.c2p
+        pool = np.concatenate([eng.owd_pool, s.owd_pr.ravel()])
+        eng.owd_pool = pool[-cfg.dom.window * eng.n:]
+        sigma = cfg.clock.residual_sigma
+        bound = float(np.percentile(eng.owd_pool, cfg.dom.percentile)) \
+            + cfg.dom.beta * 2.0 * sigma
+        if not (0.0 < bound < cfg.dom.clamp_d):
+            bound = cfg.dom.clamp_d
+        s.bound = bound
+        s.deadlines = s.stamp + bound
+        arrivals = s.stamp[:, None] + s.owd_pr
+        arrivals[s.drop_pr] = np.inf
+        arrivals[:, ~s.alive] = np.inf      # crashed replicas never receive
+        s.arrivals = arrivals
+        s.reply_owd = s.reply_owd.copy()
+        s.reply_owd[:, ~s.alive] = np.inf   # ... and never reply
+
+
+class DomStage(Stage):
+    """DOM admission + release through the compute tier (pow2-padded)."""
+
+    name = "dom"
+
+    def run(self, s, eng):
+        N = s.deadlines.size
+        R = eng.n
+        n_pad = _pow2_bucket(N) if eng.tier.pad_batches else N
+        if n_pad != N:
+            # Pad lanes carry +inf deadline AND +inf arrival: never admitted,
+            # never a watermark -- invisible to the real rows.
+            d = np.full(n_pad, np.inf)
+            d[:N] = s.deadlines
+            a = np.full((n_pad, R), np.inf)
+            a[:N] = s.arrivals
+        else:
+            d, a = s.deadlines, s.arrivals
+        adm, rel = eng.tier.release_schedule(d, a)
+        s.admitted = np.asarray(adm)[:N]
+        s.release = np.asarray(rel)[:N]
+
+
+class CommitStage(Stage):
+    """Fast/slow classification; the deadline sort comes from the tier."""
+
+    name = "commit"
+
+    def run(self, s, eng):
+        cfg = eng.cfg
+        res = classify_commits(
+            s.deadlines, s.arrivals, s.admitted, s.release, s.reply_owd,
+            s.leader, cfg.f, leader_batch_delay=cfg.leader_batch_delay,
+            key_ids=s.kcls, order=eng.tier.deadline_order(s.deadlines))
+        s.commit_time = res["commit_time"]
+        s.fast = res["fast"]
+        s.committed = res["committed"]
+
+
+class DeliverStage(Stage):
+    """Reply delivery at the client + view-change penalty + latencies."""
+
+    name = "deliver"
+
+    def run(self, s, eng):
+        s.commit_at_client = s.commit_time + s.p2c + s.view_penalty
+        # Latency is measured from the ORIGINAL submission (t0): a retried
+        # request's earlier timed-out attempts are part of its latency.
+        lat = s.commit_at_client - s.t0
+        lat[~s.committed] = np.inf
+        s.latency = lat
+        s.committed = s.committed & np.isfinite(lat)
+
+
+DEFAULT_STAGES = (SampleStage, StampStage, DomStage, CommitStage, DeliverStage)
+
+
+class DomEngine:
+    """Runs the staged DOM data plane, one epoch batch at a time.
+
+    The engine owns the stage list and the compute tier; the cluster owns
+    time, the pending buffer, fault events, and result accumulation.
+    """
+
+    def __init__(self, cfg, net, n_replicas: int,
+                 tier: Union[str, ComputeTier] = "numpy",
+                 stages=None):
+        self.cfg = cfg
+        self.net = net
+        self.n = n_replicas
+        self.tier = make_tier(tier)
+        self.stages = [s() for s in (stages or DEFAULT_STAGES)]
+        self.owd_pool = np.zeros(0)     # sliding OWD sample pool (StampStage)
+
+    # -- node-id layout (single source; the cluster sizes the network from it)
+    def proxy_nodes(self, proxy_ids):
+        return self.n + proxy_ids
+
+    def client_nodes(self, client_ids):
+        return self.n + self.cfg.n_proxies + client_ids
+
+    def run_epoch(self, due: np.ndarray, alive: np.ndarray, leader: int,
+                  view_penalty: float = 0.0) -> EpochState:
+        """Push one structured batch (PENDING_DTYPE) through every stage."""
+        s = EpochState(
+            t=np.ascontiguousarray(due["t"]),
+            t0=np.ascontiguousarray(due["t0"]),
+            cid=np.ascontiguousarray(due["cid"]),
+            rid=np.ascontiguousarray(due["rid"]),
+            kcls=(np.ascontiguousarray(due["kcls"])
+                  if getattr(self.cfg, "commutative", False) else None),
+            alive=np.asarray(alive, bool),
+            leader=int(leader),
+            view_penalty=float(view_penalty),
+        )
+        for stage in self.stages:
+            stage.run(s, self)
+        return s
+
+
+__all__ = [
+    "PENDING_DTYPE", "PendingBuffer",
+    "ComputeTier", "NumpyTier", "JitTier", "PallasTier", "TIERS", "make_tier",
+    "classify_commits",
+    "EpochState", "Stage", "SampleStage", "StampStage", "DomStage",
+    "CommitStage", "DeliverStage", "DEFAULT_STAGES", "DomEngine",
+]

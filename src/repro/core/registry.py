@@ -9,7 +9,12 @@ Registered names
 ----------------
   nezha              exact event-driven Nezha (proxied, S5)
   nezha-nonproxy     Nezha-Non-Proxy (proxy logic on the client, S9.7)
-  nezha-vectorized   `VectorizedNezhaCluster` -- jit Monte-Carlo data plane
+  nezha-vectorized   `VectorizedNezhaCluster` -- staged DOM engine
+                     (numpy compute tier; pass VectorizedConfig(tier=...)
+                     or use the tier-pinned names below)
+  nezha-vectorized-jit      same engine, fused-jit DOM tier
+  nezha-vectorized-pallas   same engine, Pallas dom_release kernel tier
+                            (interpret mode off-TPU)
   multipaxos, raft, fastpaxos, nopaxos, nopaxos-optim, domino,
   toq-epaxos, unreplicated          -- the S9/S10 baselines
 
@@ -84,9 +89,21 @@ def _make_nonproxy(cfg: ClusterConfig, **kw) -> NezhaCluster:
     return NezhaCluster(cfg, **kw)
 
 
+def _make_vectorized_tier(tier: str) -> Callable[..., Cluster]:
+    def factory(cfg: VectorizedConfig, **kw) -> VectorizedNezhaCluster:
+        if cfg.tier != tier:
+            cfg = replace(cfg, tier=tier)
+        return VectorizedNezhaCluster(cfg, **kw)
+    return factory
+
+
 register_cluster("nezha", ClusterConfig, NezhaCluster)
 register_cluster("nezha-nonproxy", ClusterConfig, _make_nonproxy)
 register_cluster("nezha-vectorized", VectorizedConfig, VectorizedNezhaCluster)
+register_cluster("nezha-vectorized-jit", VectorizedConfig,
+                 _make_vectorized_tier("jit"))
+register_cluster("nezha-vectorized-pallas", VectorizedConfig,
+                 _make_vectorized_tier("pallas"))
 for _name, _cls in PROTOCOLS.items():
     register_cluster(_name, BaselineConfig, _cls)
 

@@ -17,20 +17,22 @@ Everything is jit-compatible; the same code paths serve (a) the paper-figure
 benchmarks and (b) the deadline-ordered gradient-aggregation planner in
 repro.parallel.collectives (it reuses `dom_release_schedule`).
 
+The staged epoch pipeline (admission tiers, commit classification, epoch
+closed loop, fault epochs) lives in `repro.core.engine`; this module keeps
+the DOM release-schedule primitives the tiers dispatch to, the reordering
+metrics, and the one-shot `nezha_commit_times` compatibility wrapper.
+
 Correspondence with the exact simulator is asserted in
-tests/test_vectorized.py on small instances.
+tests/test_properties.py on small instances.
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-
-from repro.core.quorum import fast_quorum_size, slow_quorum_size
 
 
 @dataclass
@@ -173,85 +175,23 @@ def nezha_commit_times(
     with every other).
 
     Returns dict with commit_time[N], fast[N], committed[N].
+
+    This is the one-shot compatibility form; the staged engine
+    (`repro.core.engine`) computes admission/release through a compute tier
+    and calls `classify_commits` directly.
     """
-    N, R = arrivals.shape
+    from repro.core.engine import classify_commits
+
     admitted, release = dom_release_schedule_chunked(deadlines, arrivals)
     admitted = np.asarray(admitted)
     release = np.asarray(release)
-
-    # --- hash consistency: prefix-set equality per replica vs leader -------
-    if key_ids is None:
-        # Global order: every request is non-commutative with every other.
-        order = np.argsort(deadlines, kind="stable")
-    else:
-        # Per key class (S8.2): a request's reply hash covers only the
-        # smaller-deadline requests in ITS class, so disagreements in other
-        # classes cannot break its fast path.
-        order = np.lexsort((deadlines, np.asarray(key_ids)))
-    adm_sorted = admitted[order]                       # [N, R] in (class,) deadline order
-    lead_adm = adm_sorted[:, leader]
-    # A replica's prefix (strictly before position i) matches the leader's iff
-    # the cumulative count of disagreements with the leader is 0.
-    disagree = adm_sorted != lead_adm[:, None]
-    cum_disagree = np.cumsum(disagree, axis=0) - disagree  # exclusive prefix
-    if key_ids is not None and N > 0:
-        # Segmented cumsum: subtract each class's running total at its start.
-        ks = np.asarray(key_ids)[order]
-        starts = np.r_[0, np.flatnonzero(ks[1:] != ks[:-1]) + 1]
-        seg_of = np.cumsum(np.r_[0, (ks[1:] != ks[:-1]).astype(np.int64)])
-        cum_disagree = cum_disagree - cum_disagree[starts][seg_of]
-    prefix_match = cum_disagree == 0                       # [N, R]
-    # Back to original order.
-    inv = np.argsort(order, kind="stable")
-    prefix_match = prefix_match[inv]
-
-    # --- replies ------------------------------------------------------------
-    fast_reply_t = np.where(admitted, release + reply_owd, np.inf)   # [N, R]
-    fast_hash_ok = admitted & prefix_match & admitted[:, [leader]]
-
-    # Fast quorum: leader + (fq-1) matching followers, by reply arrival time.
-    fq = fast_quorum_size(f)
-    ok_t = np.where(fast_hash_ok, fast_reply_t, np.inf)
-    ok_sorted = np.sort(ok_t, axis=1)
-    fast_commit_t = np.where(
-        np.isfinite(ok_t[:, leader]),
-        ok_sorted[:, fq - 1] if fq - 1 < R else np.inf,
-        np.inf,
-    )
-    fast_commit_t = np.maximum(fast_commit_t, ok_t[:, leader])
-
-    # --- slow path ------------------------------------------------------------
-    # Leader appends everything eventually: late requests get re-deadlined and
-    # released ~immediately at the leader.
-    leader_t = np.where(admitted[:, leader], release[:, leader], arrivals[:, leader])
-    leader_t = np.where(np.isfinite(arrivals[:, leader]), leader_t, np.inf)
-    if mod_owd is None:
-        mod_owd = reply_owd  # symmetric paths by default
-    # log-modification reaches follower; follower syncs; sends slow-reply.
-    sync_t = leader_t[:, None] + leader_batch_delay + mod_owd          # [N, R]
-    # Follower can only sync m after receiving it (or fetching: +2 hops).
-    # Crashed replicas are modeled by inf reply_owd; exclude them from the
-    # fetch-delay estimate so live replicas keep a finite fetch path.
-    fin_reply = reply_owd[np.isfinite(reply_owd)]
-    fetch = 3 * float(fin_reply.mean()) if fin_reply.size else np.inf
-    have_t = np.where(np.isfinite(arrivals), arrivals, leader_t[:, None] + fetch)
-    slow_ready = np.maximum(sync_t, have_t)
-    slow_reply_t = slow_ready + reply_owd
-    slow_reply_t[:, leader] = leader_t + reply_owd[:, leader]          # leader fast-reply
-    sq = slow_quorum_size(f)
-    slow_sorted = np.sort(slow_reply_t, axis=1)
-    slow_commit_t = np.maximum(slow_sorted[:, sq - 1], slow_reply_t[:, leader])
-
-    commit_t = np.minimum(fast_commit_t, slow_commit_t)
-    fast = fast_commit_t <= slow_commit_t
-    committed = np.isfinite(commit_t)
-    return {
-        "commit_time": commit_t,
-        "fast": fast & committed,
-        "committed": committed,
-        "admitted": admitted,
-        "release": release,
-    }
+    res = classify_commits(
+        deadlines, arrivals, admitted, release, reply_owd, leader, f,
+        mod_owd=mod_owd, leader_batch_delay=leader_batch_delay,
+        key_ids=key_ids)
+    res["admitted"] = admitted
+    res["release"] = release
+    return res
 
 
 # ---------------------------------------------------------------------------

@@ -1,29 +1,42 @@
-"""`VectorizedNezhaCluster`: the jit Monte-Carlo data plane behind the
-unified `Cluster` API.
+"""`VectorizedNezhaCluster`: the staged DOM engine behind the unified
+`Cluster` API.
 
 The exact event-driven `NezhaCluster` pays Python-interpreter cost per
 message; million-request sweeps (Figs 1-3, 8, 10, 11 at scale) want the
-vectorized formulation in `repro.core.vectorized` instead. This backend
-makes that path a drop-in `Cluster`: submissions are buffered with their
-timestamps, and each `run_for()` flushes the pending batch through
-`dom_release_schedule` / `nezha_commit_times` (one jit-backed array program
-instead of ~10 scheduled events per request).
+vectorized formulation instead. This backend drives the staged engine in
+`repro.core.engine` -- bulk network sampling, proxy stamping/deadline
+bounding, DOM admission+release, commit classification, client delivery --
+with each hot loop dispatching through a pluggable compute tier
+(``numpy`` chunked, ``jit`` fused scan, or ``pallas`` routing the
+`repro.kernels.ops.dom_release` TPU kernel, interpret mode off-TPU).
 
-Modeling notes (steady-state data plane, S4-S6):
-  * Per-(request, replica) arrivals are bulk-sampled from the same
-    `CloudNetwork` statistical model the event simulator uses.
-  * The DOM latency bound is the batch percentile of observed proxy->replica
-    OWDs plus the clock-error margin (the sliding-window estimator's
-    steady-state value), clamped to `dom.clamp_d`.
-  * Reply paths are sampled independently with symmetric statistics.
-  * Replica crashes are modeled by infinite arrival times; the leader is the
-    lowest-id alive replica. View-change dynamics, retries, and CPU
-    queueing are event-backend-only fidelity -- this backend trades them for
-    throughput on huge request counts.
+Time advances in **epochs** (``epoch_duration``): each epoch flushes the
+pending submissions due by its end through the engine, fires ``on_commit``
+callbacks in commit order, and folds commit-triggered resubmissions (closed
+loop) back into the pending buffer -- requests resubmitted inside an epoch
+are batched into that epoch's next generation, so `supports_closed_loop` is
+True and `WorkloadDriver` drives open and closed loops identically.
 
-Closed-loop driving needs per-commit callbacks interleaved with the event
-loop, which a batch backend cannot provide: `supports_closed_loop` is False
-and the `WorkloadDriver` raises a clear error instead of guessing.
+Fault epochs: `crash`/`relaunch` (or the scheduled `crash_at`/`relaunch_at`)
+record timestamped events; epoch boundaries additionally split at event
+times, so the liveness set and the leader (lowest-id alive replica) are
+constant *within* an epoch but change across them. An epoch whose leader
+differs from the previous one charges ``view_change_latency`` to its commits
+(leader re-election downtime), replacing the old whole-batch frozen-leader
+model.
+
+Modeling notes (steady-state data plane, S4-S6): per-(request, replica)
+arrivals are bulk-sampled per epoch from the same `CloudNetwork` statistical
+model the event simulator uses; the DOM latency bound is a sliding pool
+percentile of observed proxy->replica OWDs plus the clock-error margin,
+clamped to `dom.clamp_d`; CPU queueing is event-backend-only fidelity.
+Uncommitted attempts (drops, outages, lost quorums) follow the event
+backend's client-retry model: re-issued ``client_timeout`` after they were
+sent (latency keeps the original submit baseline), up to ``max_retries`` --
+so closed-loop lanes survive drops and outages instead of dying silently.
+Closed-loop throughput is epoch-faithful only down to one network round
+trip: a resubmission whose commit lands after the epoch end waits for the
+next epoch.
 """
 from __future__ import annotations
 
@@ -34,6 +47,7 @@ import numpy as np
 
 from repro.core.cluster import CommonConfig, Cluster, summarize_commits
 from repro.core.dom import DomParams
+from repro.core.engine import DomEngine, PendingBuffer
 from repro.core.quorum import n_replicas
 from repro.sim.network import CloudNetwork
 
@@ -47,49 +61,73 @@ class VectorizedConfig(CommonConfig):
     dom: DomParams = field(default_factory=DomParams)
     commutative: bool = True            # S8.2: hash-conflict per key class only
     leader_batch_delay: float = 50e-6   # leader log-mod batching (slow path)
+    tier: str = "numpy"                 # compute tier: numpy | jit | pallas
+    epoch_duration: float = 10e-3       # batching granularity of the data plane
+    view_change_latency: float = 2e-3   # commit stall charged on leader change
+    max_retries: int = 16               # client retry cap per request
 
 
 class VectorizedNezhaCluster(Cluster):
-    """Nezha's steady-state data plane as a batched array program."""
+    """Nezha's steady-state data plane as a staged, epoch-driven engine."""
 
     backend = "vectorized"
-    supports_closed_loop = False
+    supports_closed_loop = True
 
     def __init__(self, cfg: VectorizedConfig, sm_factory=None):
         # sm_factory accepted for constructor compatibility; the vectorized
         # backend models the null application only (no command execution).
+        if cfg.epoch_duration <= 0:
+            raise ValueError("epoch_duration must be > 0")
         self.cfg = cfg
         self.f = cfg.f
         self.n = n_replicas(cfg.f)
         total = self.n + cfg.n_proxies + cfg.n_clients
         self.net = CloudNetwork(total, cfg.net, seed=cfg.seed)
-        self.rng = np.random.default_rng(cfg.seed + 23)
+        self.engine = DomEngine(cfg, self.net, self.n, tier=cfg.tier)
         self._alive = np.ones(self.n, dtype=bool)
         self._now = 0.0
         self._next_rid = [0] * cfg.n_clients
-        # pending submissions: (time, client_id, request_id, key_class)
-        self._pending: list[tuple[float, int, int, int]] = []
-        # accumulated results across batches
+        self._pending = PendingBuffer()
+        # Stable key->class interning: commutativity classes must reproduce
+        # across runs/processes (builtin hash() varies with PYTHONHASHSEED).
+        self._key_classes: dict[tuple, int] = {}
+        # timestamped fault events: (time, rid, alive_after)
+        self._fault_events: list[tuple[float, int, bool]] = []
+        self._last_leader: int = 0
+        self.epoch_leaders: list[int] = []   # -1 marks a total-outage epoch
+        # accumulated results across epochs
         self._latencies: list[np.ndarray] = []
         self._n_requests = 0
         self._n_fast = 0
         self._batches = 0
+        self._epochs = 0
+        self._n_view_changes = 0
 
     @property
     def protocol(self) -> str:
         return "nezha-nonproxy" if self.cfg.co_locate_proxies else "nezha"
 
-    # -- node-id helpers (same layout as the event backend) ---------------------
-    def _proxy_node(self, proxy_id: int) -> int:
-        return self.n + proxy_id
-
-    def _client_node(self, client_id: int) -> int:
-        return self.n + self.cfg.n_proxies + client_id
-
     # -- Cluster API -------------------------------------------------------------
     @property
     def now(self) -> float:
         return self._now
+
+    @property
+    def leader_id(self) -> int:
+        """Current leader: lowest-id alive replica (last known in outage)."""
+        if self._alive.any():
+            return int(np.argmax(self._alive))
+        return self._last_leader
+
+    def _key_class(self, keys: tuple) -> int:
+        if not keys:
+            return -1               # keyless requests share the global class
+        kt = tuple(keys)
+        cls = self._key_classes.get(kt)
+        if cls is None:
+            cls = len(self._key_classes)
+            self._key_classes[kt] = cls
+        return cls
 
     def submit(self, client_id: int = 0, request_id: Optional[int] = None,
                keys: tuple = (), op=None, command=None) -> tuple[int, int]:
@@ -100,91 +138,102 @@ class VectorizedNezhaCluster(Cluster):
                   op=None, command=None) -> tuple[int, int]:
         rid = self._next_rid[client_id]
         self._next_rid[client_id] = rid + 1
-        # Commutativity class: requests hash-conflict only within one class
-        # (S8.2). Keyless requests share the global class -1.
-        kcls = hash(tuple(keys)) if keys else -1
-        self._pending.append((t, client_id, rid, kcls))
+        self._pending.append(t, client_id, rid, self._key_class(keys))
+        self._n_requests += 1          # counted once; retries are not requests
         return (client_id, rid)
 
-    def run_for(self, duration: float) -> None:
-        horizon = self._now + duration
-        due = [p for p in self._pending if p[0] <= horizon]
-        self._pending = [p for p in self._pending if p[0] > horizon]
-        self._now = horizon
-        if due:
-            self._process_batch(due)
-
+    # -- fault events ------------------------------------------------------------
     def crash(self, rid: int) -> None:
-        self._alive[rid] = False
+        self.crash_at(self._now, rid)
 
     def relaunch(self, rid: int) -> None:
-        self._alive[rid] = True
+        self.relaunch_at(self._now, rid)
 
-    # -- the batched data plane -----------------------------------------------
-    def _process_batch(self, due: list[tuple[float, int, int]]) -> None:
-        from repro.core.vectorized import nezha_commit_times
+    def crash_at(self, t: float, rid: int) -> None:
+        """Schedule replica ``rid`` to crash at sim time ``t`` (>= now)."""
+        self._add_fault(t, rid, alive=False)
 
-        cfg = self.cfg
-        due.sort()
-        times = np.asarray([t for t, _, _, _ in due])
-        cids = np.asarray([c for _, c, _, _ in due], dtype=np.int64)
-        key_ids = (np.asarray([k for _, _, _, k in due], dtype=np.int64)
-                   if cfg.commutative else None)
-        N = len(due)
-        self._n_requests += N
-        self._batches += 1
-        if not self._alive.any():
-            return  # total outage: nothing commits
-        leader = int(np.argmax(self._alive))
+    def relaunch_at(self, t: float, rid: int) -> None:
+        self._add_fault(t, rid, alive=True)
 
-        proxies = cids % cfg.n_proxies
-        proxy_nodes = self.n + proxies
-        replica_ids = list(range(self.n))
+    def _add_fault(self, t: float, rid: int, alive: bool) -> None:
+        if not (0 <= rid < self.n):
+            raise ValueError(f"replica id {rid} out of range [0, {self.n})")
+        self._fault_events.append((float(t), int(rid), alive))
+        self._fault_events.sort(key=lambda e: e[0])
+        self._apply_faults(self._now)
 
-        # client -> proxy hop (skipped in non-proxy mode: co-located)
-        if cfg.co_locate_proxies:
-            c2p = np.zeros(N)
-            p2c = np.zeros(N)
-        else:
-            cnodes = self.n + cfg.n_proxies + cids
-            owd_cp, drop_cp = self.net.sample_owd_matrix(
-                cnodes, N, [self._proxy_node(p) for p in range(cfg.n_proxies)])
-            c2p = owd_cp[np.arange(N), proxies]
-            # Lost client->proxy messages never get stamped (no retry model).
-            c2p[drop_cp[np.arange(N), proxies]] = np.inf
-            owd_pc, _ = self.net.sample_owd_matrix(
-                proxy_nodes, N, [self._client_node(0)])   # one representative column
-            p2c = owd_pc[:, 0]
-        stamp = times + c2p
+    def _apply_faults(self, up_to: float) -> None:
+        while self._fault_events and self._fault_events[0][0] <= up_to:
+            _, rid, alive = self._fault_events.pop(0)
+            self._alive[rid] = alive
 
-        # proxy -> replica multicast
-        owd_pr, drop_pr = self.net.sample_owd_matrix(proxy_nodes, N, replica_ids)
-        arrivals = stamp[:, None] + owd_pr
-        arrivals[drop_pr] = np.inf
-        arrivals[:, ~self._alive] = np.inf
+    def _next_fault_time(self) -> float:
+        return self._fault_events[0][0] if self._fault_events else np.inf
 
-        # DOM latency bound: percentile of observed OWDs + clock margin,
-        # clamped to [0, D] -- the sliding-window estimator's steady state.
-        sigma = cfg.clock.residual_sigma
-        bound = float(np.percentile(owd_pr, cfg.dom.percentile)) \
-            + cfg.dom.beta * 2.0 * sigma
-        if not (0.0 < bound < cfg.dom.clamp_d):
-            bound = cfg.dom.clamp_d
-        deadlines = stamp + bound
+    # -- the epoch loop ----------------------------------------------------------
+    def run_for(self, duration: float) -> None:
+        horizon = self._now + duration
+        ep = self.cfg.epoch_duration
+        while self._now < horizon:
+            self._apply_faults(self._now)
+            # _apply_faults consumed every event at or before now, so both
+            # candidates are strictly ahead and the loop always advances.
+            epoch_end = min(horizon, self._now + ep, self._next_fault_time())
+            leader = int(np.argmax(self._alive)) if self._alive.any() else -1
+            penalty = 0.0
+            if leader >= 0 and leader != self._last_leader:
+                penalty = self.cfg.view_change_latency
+                self._n_view_changes += 1
+            self._run_epoch_batches(epoch_end, leader, penalty)
+            if leader >= 0:
+                self._last_leader = leader
+            self.epoch_leaders.append(leader)
+            self._epochs += 1
+            self._now = epoch_end
 
-        # replica -> proxy replies (symmetric path statistics); crashed
-        # replicas never reply, so neither quorum can count them.
-        reply_owd, _ = self.net.sample_owd_matrix(proxy_nodes, N, replica_ids)
-        reply_owd[:, ~self._alive] = np.inf
+    def _retry(self, failed: np.ndarray) -> None:
+        """Client retry model: an uncommitted attempt (drop, outage, lost
+        quorum) is re-issued ``client_timeout`` after it was sent, keeping
+        its original t0 for latency. Attempts past ``max_retries`` are
+        abandoned (one inf latency records the permanently failed request)."""
+        failed = failed.copy()
+        failed["tries"] += 1
+        given_up = failed["tries"] > self.cfg.max_retries
+        if given_up.any():
+            self._latencies.append(np.full(int(given_up.sum()), np.inf))
+            failed = failed[~given_up]
+        failed["t"] += self.cfg.client_timeout
+        self._pending.extend(failed)
 
-        res = nezha_commit_times(deadlines, arrivals, reply_owd, leader,
-                                 self.f, leader_batch_delay=cfg.leader_batch_delay,
-                                 key_ids=key_ids)
-        commit_at_client = res["commit_time"] + p2c
-        lat = commit_at_client - times
-        lat[~res["committed"]] = np.inf
-        self._latencies.append(lat)
-        self._n_fast += int(np.sum(res["fast"] & res["committed"]))
+    def _run_epoch_batches(self, epoch_end: float, leader: int,
+                           penalty: float) -> None:
+        """Flush pending work due by ``epoch_end``; commit-triggered
+        resubmissions landing inside the epoch run as further generations."""
+        while True:
+            due = self._pending.pop_due(epoch_end)
+            if due.size == 0:
+                return
+            self._batches += 1
+            if leader < 0:
+                # total outage: nothing is stamped this epoch; clients retry
+                self._retry(due)
+                continue
+            s = self.engine.run_epoch(due, self._alive, leader, penalty)
+            self._latencies.append(s.latency[s.committed])
+            self._n_fast += int(np.sum(s.fast & s.committed))
+            if not s.committed.all():
+                self._retry(due[~s.committed])
+            if self.on_commit is not None and s.committed.any():
+                idx = np.flatnonzero(s.committed)
+                idx = idx[np.argsort(s.commit_at_client[idx], kind="stable")]
+                t_save = self._now
+                for i in idx:
+                    # callbacks observe the commit's client-side time, so a
+                    # closed-loop resubmission is stamped when the reply lands
+                    self._now = float(s.commit_at_client[i])
+                    self.on_commit(int(s.cid[i]), int(s.rid[i]))
+                self._now = t_save
 
     def summary(self) -> dict:
         lat = (np.concatenate(self._latencies) if self._latencies
@@ -192,7 +241,8 @@ class VectorizedNezhaCluster(Cluster):
         return summarize_commits(
             self.protocol, "vectorized", lat,
             n_requests=self._n_requests, n_fast=self._n_fast,
-            batches=self._batches,
+            batches=self._batches, epochs=self._epochs,
+            tier=self.engine.tier.name, view_changes=self._n_view_changes,
         )
 
 

@@ -97,7 +97,9 @@ def dom_release_pallas(deadlines, admitted, clock_now, *, interpret=False):
         interpret=interpret,
     )(deadlines.astype(jnp.float32), admitted.astype(jnp.int8),
       clock_now.reshape(1).astype(jnp.float32))
-    return order[:n] if n_pad == n else order, count[0]
+    # Padded lanes are never released (admitted=0), so they sort to the tail
+    # as -1 markers; slicing to n restores the caller's shape contract.
+    return order[:n], count[0]
 
 
 __all__ = ["dom_release_pallas"]

@@ -59,6 +59,42 @@ def dom_release_ref_order(deadlines, admitted, clock_now):
     return jnp.where(seq < n_rel, order, -1), n_rel
 
 
+def dom_deadline_order(deadlines, *, use_pallas=None):
+    """Full deadline sort of a message batch via the dom_release kernel.
+
+    This is the pallas compute tier's ordering primitive (repro.core.engine):
+    with every message admitted and the clock at +inf, the early-buffer drain
+    degenerates to the plain deadline sort the commit classifier needs.
+    Deadlines are shifted by their finite minimum before the float32 kernel
+    compare, so the usable precision is relative to the batch's time *span*,
+    not its absolute epoch. Ties within float32 resolution may order
+    arbitrarily (the bitonic network is not a stable sort); non-finite
+    deadlines (dropped stamps) are mapped to a finite sentinel above every
+    real key -- they sort to the tail in unspecified relative order, but
+    stay strictly below the kernel's own +inf pow2-padding lanes, so the
+    result is always a permutation of [0, n). Returns int64 message
+    indices, deadline-sorted.
+    """
+    import numpy as np
+
+    d = np.asarray(deadlines, np.float64)
+    n = d.size
+    if n == 0:
+        return np.zeros(0, np.int64)
+    fin = np.isfinite(d)
+    if fin.any():
+        shift = float(d[fin].min())
+        span = float(d[fin].max()) - shift
+    else:
+        shift, span = 0.0, 0.0
+    sentinel = 2.0 * span + 1.0
+    dj = jnp.asarray(np.where(fin, d - shift, sentinel), jnp.float32)
+    order, _ = dom_release(dj, jnp.ones(n, jnp.int8),
+                           jnp.asarray(np.inf, jnp.float32),
+                           use_pallas=use_pallas)
+    return np.asarray(order, dtype=np.int64)
+
+
 def inchash(deadline_ns, client_id, request_id, *, use_pallas=None):
     if use_pallas is None:
         use_pallas = _on_tpu()
@@ -68,4 +104,5 @@ def inchash(deadline_ns, client_id, request_id, *, use_pallas=None):
     return _ref.inchash_ref(deadline_ns, client_id, request_id)
 
 
-__all__ = ["attention", "ssd_scan", "dom_release", "dom_release_ref_order", "inchash"]
+__all__ = ["attention", "ssd_scan", "dom_release", "dom_release_ref_order",
+           "dom_deadline_order", "inchash"]

@@ -118,6 +118,29 @@ class CloudNetwork:
         dropped = self.rng.random((n_msgs, n_dsts)) < p.drop_prob
         return owd, dropped
 
+    def sample_owd_pairs(
+        self, srcs: np.ndarray, dsts: np.ndarray
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Paired bulk sampling: one OWD per message i for srcs[i] -> dsts[i].
+
+        Unlike `sample_owd_matrix` (every message to every dst), each message
+        here has its own destination -- e.g. proxy->client replies, where the
+        reply goes to the *actual* submitting client. Returns
+        (owd[n] seconds, dropped[n] bool). Same statistical model and
+        bulk-mode caveats as `sample_owd_matrix`.
+        """
+        p = self.params
+        srcs = np.asarray(srcs)
+        dsts = np.asarray(dsts)
+        n = srcs.size
+        owd = np.full(n, p.base_owd)
+        owd += self._path_offset[srcs, dsts]
+        owd += self.rng.lognormal(p.lognorm_mu, p.lognorm_sigma, size=n)
+        bursts = self.rng.random(n) < p.burst_prob
+        owd += np.where(bursts, self.rng.exponential(p.burst_scale, size=n), 0.0)
+        dropped = self.rng.random(n) < p.drop_prob
+        return owd, dropped
+
 
 # ---------------------------------------------------------------------------
 # Reordering metric (S3): LIS-based reordering score.

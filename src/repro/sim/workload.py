@@ -14,6 +14,14 @@ Open-loop: requests arrive per a Poisson process regardless of replies -- the
 `Workload` (mode, rate, duration, zipf skew, read ratio), runs against any
 `Cluster` -- Nezha, every baseline, and the vectorized backend -- through the
 unified submit/submit_at/run_for/summary surface.
+
+Closed loop works on batch backends too: the staged vectorized engine fires
+``on_commit`` while flushing each epoch with ``cluster.now`` set to the
+commit's client-side time, so the driver's resubmission lands at the right
+timestamp and is batched into the epoch's next generation (commit-triggered
+resubmission batched per epoch). Fidelity caveat: a resubmission whose
+commit falls past the epoch end waits for the next epoch, so closed-loop
+throughput is exact only down to one network round trip per epoch.
 """
 from __future__ import annotations
 
@@ -185,8 +193,8 @@ class WorkloadDriver:
         elif w.mode == "closed":
             if not cluster.supports_closed_loop:
                 raise ValueError(
-                    f"{type(cluster).__name__} is a batch backend and cannot "
-                    "run closed-loop workloads; use mode='open'")
+                    f"{type(cluster).__name__} cannot run closed-loop "
+                    "workloads; use mode='open'")
 
             def on_commit(cid, rid):
                 if cluster.now < w.duration:

@@ -1,0 +1,321 @@
+"""Staged DOM engine: tier parity, epoch closed loop, fault epochs, and the
+structured data-plane plumbing (pending buffer, key interning, paired reply
+sampling)."""
+import numpy as np
+import pytest
+
+from repro.core import CommonConfig, make_cluster
+from repro.core.engine import (
+    PENDING_DTYPE,
+    DomEngine,
+    JitTier,
+    NumpyTier,
+    PallasTier,
+    PendingBuffer,
+    make_tier,
+)
+from repro.core.vectorized_cluster import VectorizedConfig
+from repro.sim.network import CloudNetwork, NetworkParams
+from repro.sim.workload import Workload, WorkloadDriver
+
+RNG = np.random.default_rng(11)
+
+
+def _instance(n=200, r=3, seed=0):
+    """A realistic (deadlines, arrivals) DOM instance with distinct,
+    float32-separable deadlines (>=1us spacing over a ~ms span)."""
+    rng = np.random.default_rng(seed)
+    send = np.sort(rng.uniform(0, 5e-3, n))
+    send += np.arange(n) * 1e-6              # enforce distinct spacing
+    deadlines = send + 120e-6
+    arrivals = send[:, None] + rng.lognormal(np.log(60e-6), 0.6, (n, r))
+    arrivals[rng.random((n, r)) < 0.02] = np.inf   # a few drops
+    return deadlines, arrivals
+
+
+# ---------------------------------------------------------------------------
+# tier parity
+# ---------------------------------------------------------------------------
+def test_numpy_jit_tier_parity():
+    deadlines, arrivals = _instance(seed=1)
+    a_np = NumpyTier(chunk=64).release_schedule(deadlines, arrivals)
+    a_jit = JitTier().release_schedule(deadlines, arrivals)
+    np.testing.assert_array_equal(a_np[0], a_jit[0])        # admission
+    np.testing.assert_allclose(a_np[1], a_jit[1])           # release times
+    np.testing.assert_array_equal(
+        NumpyTier().deadline_order(deadlines), JitTier().deadline_order(deadlines))
+
+
+@pytest.mark.pallas
+def test_pallas_tier_parity():
+    """Acceptance: all three tiers produce identical admission/release
+    schedules and release (deadline) orders on the same instance."""
+    deadlines, arrivals = _instance(seed=2)
+    ref_adm, ref_rel = NumpyTier().release_schedule(deadlines, arrivals)
+    pal = PallasTier()
+    adm, rel = pal.release_schedule(deadlines, arrivals)
+    np.testing.assert_array_equal(ref_adm, adm)
+    np.testing.assert_allclose(ref_rel, rel)
+    np.testing.assert_array_equal(
+        NumpyTier().deadline_order(deadlines), pal.deadline_order(deadlines))
+
+
+@pytest.mark.pallas
+def test_pallas_tier_through_cluster_matches_numpy():
+    """Same seed + workload through all three tier registry entries. The jit
+    tier must match the numpy tier bit-for-bit; the pallas tier compares
+    deadlines in float32 inside the bitonic kernel, so sub-resolution
+    deadline ties may flip an occasional fast/slow classification -- allow a
+    small tolerance there."""
+    w = Workload(mode="open", rate_per_client=500.0, duration=0.08,
+                 warmup=0.01, drain=0.05, seed=0)
+    outs = {}
+    for name in ("nezha-vectorized", "nezha-vectorized-jit",
+                 "nezha-vectorized-pallas"):
+        outs[name] = WorkloadDriver(w).run(
+            make_cluster(name, CommonConfig(f=1, n_clients=2, seed=0)))
+    base = outs["nezha-vectorized"]
+    assert base["tier"] == "numpy"
+    jit = outs["nezha-vectorized-jit"]
+    assert jit["committed"] == base["committed"]
+    assert jit["fast_commit_ratio"] == base["fast_commit_ratio"]
+    np.testing.assert_allclose(jit["median_latency"], base["median_latency"],
+                               rtol=1e-12)
+    pal = outs["nezha-vectorized-pallas"]
+    assert pal["tier"] == "pallas"
+    assert pal["committed"] == base["committed"]
+    assert abs(pal["fast_commit_ratio"] - base["fast_commit_ratio"]) < 0.05
+    np.testing.assert_allclose(pal["median_latency"], base["median_latency"],
+                               rtol=0.05)
+
+
+def test_make_tier_rejects_unknown():
+    with pytest.raises(KeyError, match="unknown compute tier"):
+        make_tier("gpu")
+    t = NumpyTier()
+    assert make_tier(t) is t
+
+
+# ---------------------------------------------------------------------------
+# pending buffer + key interning
+# ---------------------------------------------------------------------------
+def test_pending_buffer_grows_and_pops_in_time_order():
+    buf = PendingBuffer(capacity=2)
+    ts = RNG.uniform(0, 1.0, 100)
+    for i, t in enumerate(ts):
+        buf.append(t, i % 5, i, i % 3)
+    assert len(buf) == 100
+    due = buf.pop_due(0.5)
+    assert due.dtype == PENDING_DTYPE
+    assert (due["t"] <= 0.5).all()
+    assert (np.diff(due["t"]) >= 0).all()           # time-sorted
+    assert len(buf) == 100 - due.size
+    assert buf.min_time() > 0.5
+    rest = buf.pop_due(np.inf)
+    assert due.size + rest.size == 100
+    assert buf.pop_due(np.inf).size == 0 and len(buf) == 0
+    assert buf.min_time() == np.inf
+
+
+def test_key_classes_are_interned_not_hashed():
+    """Satellite fix: commutativity classes must be stable per cluster
+    (insertion-order interning), not builtin-hash dependent."""
+    cl = make_cluster("nezha-vectorized", CommonConfig(f=1, n_clients=1))
+    cl.submit_at(0.0, 0, keys=(42,))
+    cl.submit_at(0.0, 0, keys=(7, 9))
+    cl.submit_at(0.0, 0, keys=(42,))
+    cl.submit_at(0.0, 0)                            # keyless -> global class
+    assert cl._key_classes == {(42,): 0, (7, 9): 1}
+    due = cl._pending.pop_due(np.inf)
+    np.testing.assert_array_equal(due["kcls"], [0, 1, 0, -1])
+
+
+def test_same_seed_same_summary():
+    """Seeds reproduce: two identical runs give identical summaries."""
+    w = Workload(mode="open", rate_per_client=800.0, duration=0.08, seed=3)
+    runs = [WorkloadDriver(w).run(
+        make_cluster("nezha-vectorized", CommonConfig(f=1, n_clients=3, seed=5)))
+        for _ in range(2)]
+    assert runs[0] == runs[1]
+
+
+# ---------------------------------------------------------------------------
+# per-epoch network sampling
+# ---------------------------------------------------------------------------
+def test_sample_owd_pairs_uses_per_pair_paths():
+    """Satellite fix: paired sampling must use each (src, dst) path's own
+    persistent offset (the proxy->actual-client reply path), not one
+    representative column."""
+    params = NetworkParams(lognorm_sigma=1e-9, burst_prob=0.0, drop_prob=0.0,
+                           path_offset_sigma=50e-6)
+    net = CloudNetwork(6, params, seed=0)
+    srcs = np.array([0, 1, 2, 0, 1])
+    dsts = np.array([3, 4, 5, 4, 3])
+    owd, dropped = net.sample_owd_pairs(srcs, dsts)
+    assert owd.shape == (5,) and dropped.shape == (5,)
+    assert not dropped.any()
+    want = params.base_owd + net._path_offset[srcs, dsts] \
+        + np.exp(params.lognorm_mu)
+    np.testing.assert_allclose(owd, want, rtol=1e-3)
+
+
+def test_engine_epoch_pipeline_smoke():
+    cfg = VectorizedConfig(f=1, n_clients=4, seed=0)
+    net = CloudNetwork(3 + cfg.n_proxies + cfg.n_clients, cfg.net, seed=0)
+    eng = DomEngine(cfg, net, 3, tier="numpy")
+    due = np.zeros(50, PENDING_DTYPE)
+    due["t"] = np.sort(RNG.uniform(0, 5e-3, 50))
+    due["t0"] = due["t"]
+    due["cid"] = RNG.integers(0, 4, 50)
+    due["rid"] = np.arange(50)
+    due["kcls"] = RNG.integers(0, 5, 50)
+    s = eng.run_epoch(due, np.ones(3, bool), leader=0)
+    assert s.committed.sum() > 45
+    lat = s.latency[s.committed]
+    assert (lat > 0).all() and np.isfinite(lat).all()
+    assert 0.0 < s.bound <= cfg.dom.clamp_d
+    # stage names document the pipeline
+    assert [st.name for st in eng.stages] == [
+        "sample", "stamp", "dom", "commit", "deliver"]
+
+
+# ---------------------------------------------------------------------------
+# closed-loop epoch approximation vs the exact event backend
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_closed_loop_event_vs_vectorized_parity():
+    """Satellite: closed-loop fast-ratio and p50 latency agree between the
+    exact event simulator and the epoch approximation on a small instance."""
+    cfg = CommonConfig(f=1, n_clients=2, seed=0)
+    w = Workload(mode="closed", duration=0.06, drain=0.05, seed=0)
+    ev = WorkloadDriver(w).run(make_cluster("nezha", cfg))
+    vec = WorkloadDriver(w).run(make_cluster("nezha-vectorized", cfg))
+    assert vec["committed"] > 0 and ev["committed"] > 0
+    assert 0.4 < vec["median_latency"] / ev["median_latency"] < 2.5
+    assert abs(vec["fast_commit_ratio"] - ev["fast_commit_ratio"]) < 0.3
+
+
+# ---------------------------------------------------------------------------
+# fault epochs
+# ---------------------------------------------------------------------------
+def test_crash_mid_run_changes_leader_in_subsequent_epochs():
+    """Acceptance: a crash mid-run re-elects the leader for later epochs and
+    the run keeps committing (slow path) with a view-change penalty."""
+    cl = make_cluster("nezha-vectorized", CommonConfig(f=1, n_clients=2, seed=0))
+    cl.start()
+    for i in range(200):
+        cl.submit_at(i * 5e-4, i % 2, keys=(i % 7,))
+    cl.crash_at(0.05, 0)                  # the leader dies mid-run
+    cl.run_for(0.12)
+    s = cl.summary()
+    assert cl.leader_id == 1
+    assert s["view_changes"] == 1
+    assert s["committed"] == 200          # f=1 tolerates one failure
+    leaders = np.asarray(cl.epoch_leaders)
+    switch = np.flatnonzero(np.diff(leaders))
+    assert switch.size == 1               # exactly one leader change...
+    assert set(leaders[: switch[0] + 1]) == {0}
+    assert set(leaders[switch[0] + 1:]) == {1}   # ...and it sticks
+
+
+def test_view_change_penalty_hits_post_crash_epoch_latency():
+    cfg = VectorizedConfig(f=1, n_clients=1, seed=0, view_change_latency=5e-3)
+    pre = make_cluster("nezha-vectorized", cfg)
+    post = make_cluster("nezha-vectorized", cfg)
+    for cl in (pre, post):
+        for i in range(40):
+            cl.submit_at(0.05 + i * 1e-4, 0, keys=(i,))
+    post.crash_at(0.05, 0)                # leader change right before batch
+    pre.run_for(0.1)
+    post.run_for(0.1)
+    p50_pre = pre.summary()["median_latency"]
+    p50_post = post.summary()["median_latency"]
+    assert p50_post > p50_pre + 4e-3      # the 5ms penalty shows up
+
+
+def test_relaunch_restores_original_leader():
+    cl = make_cluster("nezha-vectorized", CommonConfig(f=1, n_clients=1, seed=0))
+    cl.crash(0)
+    assert cl.leader_id == 1
+    cl.run_for(0.02)
+    cl.relaunch(0)
+    cl.run_for(0.02)
+    assert cl.leader_id == 0
+    assert cl.summary()["view_changes"] == 2      # 0->1, then 1->0
+    with pytest.raises(ValueError, match="out of range"):
+        cl.crash(7)
+
+
+@pytest.mark.pallas
+def test_deadline_order_with_nonfinite_is_a_permutation():
+    """Dropped stamps (inf deadlines) must not collide with the kernel's own
+    pow2-padding lanes: the order must remain a permutation of [0, n)."""
+    from repro.kernels.ops import dom_deadline_order
+
+    d = np.array([1e-3, 2e-3, 3e-3, np.inf, 4e-3])   # n=5 -> padded to 8
+    for use_pallas in (False, True):
+        order = dom_deadline_order(d, use_pallas=use_pallas)
+        assert sorted(order.tolist()) == [0, 1, 2, 3, 4]
+        np.testing.assert_array_equal(order[:4], [0, 1, 2, 4])  # finite first
+    assert dom_deadline_order(np.full(3, np.inf)).size == 3
+
+
+def test_client_retry_revives_failed_attempts():
+    """Satellite of the closed-loop fix: an attempt lost to a drop or outage
+    is re-issued client_timeout later with its original latency baseline,
+    so lanes survive instead of dying silently."""
+    from repro.core.vectorized_cluster import VectorizedConfig
+
+    cfg = VectorizedConfig(f=1, n_clients=1, seed=0, client_timeout=20e-3)
+    cl = make_cluster("nezha-vectorized", cfg)
+    cl.submit_at(1e-3, 0, keys=(1,))
+    cl.crash(1)
+    cl.crash(2)                 # quorum gone: every attempt fails
+    cl.run_for(0.05)
+    assert cl.summary()["committed"] == 0
+    assert len(cl._pending) == 1                    # still retrying
+    cl.relaunch(1)
+    cl.run_for(0.1)
+    s = cl.summary()
+    assert s["committed"] == 1 and s["n_requests"] == 1   # retries aren't new
+    # latency spans the outage: >= one full retry timeout
+    assert s["median_latency"] > cfg.client_timeout
+
+
+def test_nonpositive_epoch_duration_rejected():
+    from repro.core.vectorized_cluster import VectorizedConfig
+
+    with pytest.raises(ValueError, match="epoch_duration"):
+        make_cluster("nezha-vectorized", VectorizedConfig(epoch_duration=0.0))
+
+
+def test_retry_cap_abandons_request():
+    from repro.core.vectorized_cluster import VectorizedConfig
+
+    cfg = VectorizedConfig(f=1, n_clients=1, seed=0, client_timeout=5e-3,
+                           max_retries=3)
+    cl = make_cluster("nezha-vectorized", cfg)
+    for rid in range(1, 3):
+        cl.crash(rid)           # permanent quorum loss
+    cl.submit_at(0.0, 0, keys=(1,))
+    cl.run_for(0.2)
+    assert len(cl._pending) == 0                    # gave up
+    s = cl.summary()
+    assert s["committed"] == 0 and s["n_requests"] == 1
+
+
+def test_total_outage_epochs_commit_nothing():
+    cl = make_cluster("nezha-vectorized", CommonConfig(f=1, n_clients=1, seed=0))
+    for rid in range(3):
+        cl.crash(rid)
+    for i in range(20):
+        cl.submit_at(i * 1e-3, 0, keys=(i,))
+    cl.run_for(0.05)
+    assert cl.summary()["committed"] == 0
+    assert set(cl.epoch_leaders) == {-1}
+    cl.relaunch(0)
+    cl.relaunch(1)
+    for i in range(20):
+        cl.submit_at(0.05 + i * 1e-3, 0, keys=(i,))
+    cl.run_for(0.05)
+    assert cl.summary()["committed"] > 0          # quorum back -> commits again

@@ -4,6 +4,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+# Everything here drives Pallas kernels (interpret mode off-TPU); skip with
+# `-m "not pallas"` on hosts without TPU/interpret support.
+pytestmark = pytest.mark.pallas
+
 from repro.kernels import ref
 from repro.kernels.dom_release import dom_release_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
