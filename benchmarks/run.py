@@ -4,8 +4,11 @@
   PYTHONPATH=src python -m benchmarks.run --full     # longer sweeps
   PYTHONPATH=src python -m benchmarks.run --only fig8,roofline
 
-Prints ``name,us_per_call,derived`` CSV lines at the end, plus per-figure
-tables, and dumps results/benchmarks.json.
+Prints ``name,wall_s,rows`` CSV lines at the end (whole-benchmark wall time
+in seconds -- per-op timings live inside each benchmark's own rows), plus
+per-figure tables, and dumps results/benchmarks.json.  The `dom_scale`
+benchmark additionally writes results/BENCH_dom_scale.json for perf
+trajectory tracking.
 """
 from __future__ import annotations
 
@@ -75,6 +78,12 @@ def bench_kernels(quick=True) -> list[dict]:
     return rows
 
 
+def _bench_dom_scale(quick=True) -> list[dict]:
+    from benchmarks.dom_scale import dom_scale
+
+    return dom_scale(quick)
+
+
 ALL = {}
 
 
@@ -98,6 +107,7 @@ def main() -> None:
         "appendix_d": figs.appendix_d_clock,
         "appendix_g": figs.appendix_g_primitives,
         "tiers": figs.tier_sweep,
+        "dom_scale": _bench_dom_scale,
         "kernels": lambda quick: bench_kernels(quick),
         "roofline": lambda quick: bench_roofline(),
     })
@@ -141,9 +151,11 @@ def main() -> None:
     with open("results/benchmarks.json", "w") as f:
         json.dump(all_rows, f, indent=1, default=str)
 
-    print("\nname,us_per_call,derived")
+    # Label honestly: this is whole-benchmark wall time, not a per-call cost
+    # (per-op timings are inside each benchmark's rows).
+    print("\nname,wall_s,rows")
     for name, wall in timing:
-        print(f"{name},{wall*1e6:.0f},{len(all_rows.get(name) or [])} rows")
+        print(f"{name},{wall:.2f},{len(all_rows.get(name) or [])}")
 
 
 if __name__ == "__main__":

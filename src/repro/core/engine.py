@@ -15,24 +15,45 @@ into five explicit stages, run in order over an `EpochState`:
   DeliverStage  commit delivery at the client (+ per-epoch view-change
                 penalty) and latency accounting.
 
-Stages that run array programs dispatch through a pluggable **compute tier**:
+Stages that run array programs dispatch through a pluggable **compute tier**.
+Admission in every tier is the O(N log N) event-ordered watermark scan
+(`repro.core.vectorized`, one sort + one prefix-max pass per receiver --
+the O(N^2) `dom_release_schedule` lax.scan survives only as the
+property-test oracle):
 
-  numpy    `dom_release_schedule_chunked` -- chunked numpy orchestration with
-           a watermark carry, jit inner scan per chunk (the CPU default);
-  jit      one fused `dom_release_schedule` lax.scan over the whole (padded)
-           epoch batch -- the XLA path;
-  pallas   admission via the jit scan, release/deadline ordering routed
-           through the `repro.kernels.ops.dom_release` bitonic-sort TPU
-           kernel (interpret mode off-TPU). Deadline keys are compared in
-           float32 inside the kernel, so ties closer than ~1e-7 relative may
-           order differently from the float64 tiers; continuous-time
-           deadlines collide with probability ~0.
+  numpy    `dom_release_schedule_watermark` -- lexsort + maximum.accumulate
+           in float64 numpy (the CPU default);
+  jit      the same watermark admission as one jitted float64 program, and
+           the whole stamp->dom->commit epoch fused into a single device
+           dispatch (see below);
+  pallas   fused epochs like jit, but admission runs in the
+           `repro.kernels.dom_admit` bitonic-event-sort + prefix-max kernel
+           and release ordering in the `repro.kernels.ops.dom_release`
+           bitonic kernel (interpret mode off-TPU). Event times are compared
+           in float32 inside both kernels, so ties closer than ~2^-23 of the
+           batch's time span may order differently from the float64 tiers
+           and can flip a boundary admission/classification; continuous-time
+           instances collide with probability ~0.
+
+**Fused single-dispatch epochs**: tiers with ``fused = True`` (jit, pallas)
+replace the Stamp/Dom/Commit stages with one `FusedEpochStage` whose body is
+a single jitted program -- deadline bounding, watermark admission, release
+times, and the quorum arithmetic of `classify_commits` as jnp ops over the
+pow2-padded batch, traced under float64 (`jax.experimental.enable_x64`) so
+the release/commit boundary no longer needs the host-side float64 recompute
+the old per-stage jit path did. Per epoch the host keeps only what is
+inherently sequential-stateful: network sampling, the sliding OWD pool
+percentile (the `bound` scalar), and the mean-reply fetch estimate, all
+passed in as scalars. The numpy tier keeps the five-stage pipeline as the
+readable staged reference; `FusedEpochStage` is regression-tested
+bit-for-bit against it.
 
 Epoch batches are padded to power-of-two buckets before tier dispatch so jit
 recompilation is bounded by O(log N) distinct shapes per run instead of one
 per epoch size.
 
-`classify_commits` is the tier-independent commit classifier; the legacy
+`classify_commits` is the tier-independent commit classifier (quorum order
+statistics via O(R) `np.partition`, not full sorts); the legacy
 `repro.core.vectorized.nezha_commit_times` wraps it for callers that want the
 one-shot (admission + classification) form.
 """
@@ -44,7 +65,10 @@ from typing import Optional, Union
 import numpy as np
 
 from repro.core.quorum import fast_quorum_size, slow_quorum_size
-from repro.core.vectorized import dom_release_schedule, dom_release_schedule_chunked
+from repro.core.vectorized import (
+    dom_admit_watermark_jnp,
+    dom_release_schedule_watermark,
+)
 
 # ---------------------------------------------------------------------------
 # Pending-submission buffer (structured, amortized growth)
@@ -128,8 +152,11 @@ class ComputeTier:
     name = "abstract"
     # Pad epoch batches to pow2 buckets before release_schedule? True for
     # jit-compiled tiers (bounds recompilation to O(log N) shapes per run);
-    # pointless scan work for the numpy tier.
+    # pointless extra work for the numpy tier.
     pad_batches = False
+    # Fused tiers run stamp->dom->commit as ONE jitted device dispatch per
+    # epoch generation (FusedEpochStage) instead of the staged numpy path.
+    fused = False
 
     def release_schedule(self, deadlines: np.ndarray,
                          arrivals: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
@@ -140,59 +167,104 @@ class ComputeTier:
         """Message indices sorted by deadline (the release/ordering sort)."""
         return np.argsort(deadlines, kind="stable")
 
+    # -- traceable hooks consumed by the fused epoch program -----------------
+    def admit_traced(self, deadlines, arrivals):
+        """jnp admission [N],[N,R] -> [N,R] bool inside the fused program."""
+        raise NotImplementedError
+
+    def order_traced(self, deadlines):
+        """jnp deadline order [N] -> [N] inside the fused program."""
+        raise NotImplementedError
+
+    def epoch_step(self, f: int, use_kcls: bool):
+        """The fused stamp->dom->commit program (jitted, cached per shape)."""
+        cache = self.__dict__.setdefault("_fused_cache", {})
+        key = (f, use_kcls)
+        if key not in cache:
+            cache[key] = _build_fused_step(self, f, use_kcls)
+        return cache[key]
+
 
 class NumpyTier(ComputeTier):
-    """Chunked numpy orchestration (watermark carry across chunks)."""
+    """Float64 numpy watermark admission (lexsort + maximum.accumulate)."""
 
     name = "numpy"
 
     def __init__(self, chunk: int = 2048):
+        # `chunk` kept for construction compatibility; the watermark path
+        # needs no chunk/halo tuning.
         self.chunk = chunk
 
     def release_schedule(self, deadlines, arrivals):
-        adm, rel = dom_release_schedule_chunked(
-            np.asarray(deadlines, np.float64), np.asarray(arrivals, np.float64),
-            chunk=self.chunk)
-        return np.asarray(adm), np.asarray(rel)
+        return dom_release_schedule_watermark(deadlines, arrivals)
 
 
 class JitTier(ComputeTier):
-    """One fused lax.scan over the whole epoch batch."""
+    """Watermark admission as one jitted float64 program; fused epochs."""
 
     name = "jit"
     pad_batches = True
+    fused = True
 
     def release_schedule(self, deadlines, arrivals):
         import jax.numpy as jnp
+        from jax.experimental import enable_x64
 
-        adm, _ = dom_release_schedule(jnp.asarray(deadlines),
-                                      jnp.asarray(arrivals))
-        adm = np.asarray(adm)
-        # Recompute release times in float64: the jit scan's release output is
-        # float32 under JAX's default precision, and a ~10ns rounding of
-        # max(deadline, arrival) can flip a near-boundary fast/slow
-        # classification relative to the numpy tier.
-        d = np.asarray(deadlines, np.float64)
-        a = np.asarray(arrivals, np.float64)
-        rel = np.where(adm, np.maximum(d[:, None], a), np.inf)
-        return adm, rel
+        from repro.core.vectorized import _watermark_schedule_jit
+
+        # Traced under x64 so admission AND release are float64 end to end;
+        # no host-side boundary recompute needed.
+        with enable_x64():
+            adm, rel = _watermark_schedule_jit(
+                jnp.asarray(np.asarray(deadlines, np.float64)),
+                jnp.asarray(np.asarray(arrivals, np.float64)))
+            return np.asarray(adm), np.asarray(rel)
+
+    def admit_traced(self, deadlines, arrivals):
+        return dom_admit_watermark_jnp(deadlines, arrivals)
+
+    def order_traced(self, deadlines):
+        import jax.numpy as jnp
+
+        return jnp.argsort(deadlines, stable=True)
 
 
 class PallasTier(JitTier):
-    """Jit admission scan + Pallas bitonic-sort release ordering.
+    """Fused epochs with admission + ordering on-device via Pallas kernels.
 
-    The deadline sort is the O(N log^2 N) hot op of a DOM receiver at rate;
-    it routes through `repro.kernels.ops.dom_release` (TPU kernel, interpret
-    mode off-TPU). Admission is inherently a sequential scan and shares the
-    jit tier's implementation.
+    Admission runs in `repro.kernels.dom_admit` (bitonic event sort fused
+    with the watermark prefix-max, one grid program per receiver); the
+    release/deadline ordering runs in the `repro.kernels.ops.dom_release`
+    bitonic kernel. Interpret mode off-TPU. Both compare times in float32
+    (span-relative after a shift by the batch minimum) -- the documented
+    sub-resolution-tie caveat.
     """
 
     name = "pallas"
+
+    def release_schedule(self, deadlines, arrivals):
+        from repro.kernels.ops import dom_admit
+
+        d = np.asarray(deadlines, np.float64)
+        a = np.asarray(arrivals, np.float64)
+        adm = dom_admit(d, a, use_pallas=True)
+        rel = np.where(adm, np.maximum(d[:, None], a), np.inf)
+        return adm, rel
 
     def deadline_order(self, deadlines):
         from repro.kernels.ops import dom_deadline_order
 
         return dom_deadline_order(deadlines, use_pallas=True)
+
+    def admit_traced(self, deadlines, arrivals):
+        from repro.kernels.ops import dom_admit_traced
+
+        return dom_admit_traced(deadlines, arrivals, use_pallas=True)
+
+    def order_traced(self, deadlines):
+        from repro.kernels.ops import dom_deadline_order_traced
+
+        return dom_deadline_order_traced(deadlines, use_pallas=True)
 
 
 TIERS: dict[str, type] = {"numpy": NumpyTier, "jit": JitTier, "pallas": PallasTier}
@@ -283,14 +355,13 @@ def classify_commits(
     fast_hash_ok = admitted & prefix_match & admitted[:, [leader]]
 
     # Fast quorum: leader + (fq-1) matching followers, by reply arrival time.
+    # Only the (fq-1)-th order statistic is consumed, so an O(R) partition
+    # replaces the full row sort.
     fq = fast_quorum_size(f)
     ok_t = np.where(fast_hash_ok, fast_reply_t, np.inf)
-    ok_sorted = np.sort(ok_t, axis=1)
-    fast_commit_t = np.where(
-        np.isfinite(ok_t[:, leader]),
-        ok_sorted[:, fq - 1] if fq - 1 < R else np.inf,
-        np.inf,
-    )
+    ok_kth = (np.partition(ok_t, fq - 1, axis=1)[:, fq - 1]
+              if fq - 1 < R else np.full(N, np.inf))
+    fast_commit_t = np.where(np.isfinite(ok_t[:, leader]), ok_kth, np.inf)
     fast_commit_t = np.maximum(fast_commit_t, ok_t[:, leader])
 
     # --- slow path ------------------------------------------------------------
@@ -312,8 +383,8 @@ def classify_commits(
     slow_reply_t = slow_ready + reply_owd
     slow_reply_t[:, leader] = leader_t + reply_owd[:, leader]          # leader fast-reply
     sq = slow_quorum_size(f)
-    slow_sorted = np.sort(slow_reply_t, axis=1)
-    slow_commit_t = np.maximum(slow_sorted[:, sq - 1], slow_reply_t[:, leader])
+    slow_kth = np.partition(slow_reply_t, sq - 1, axis=1)[:, sq - 1]
+    slow_commit_t = np.maximum(slow_kth, slow_reply_t[:, leader])
 
     commit_t = np.minimum(fast_commit_t, slow_commit_t)
     fast = fast_commit_t <= slow_commit_t
@@ -323,6 +394,93 @@ def classify_commits(
         "fast": fast & committed,
         "committed": committed,
     }
+
+
+# ---------------------------------------------------------------------------
+# Fused epoch program (single device dispatch per epoch generation)
+# ---------------------------------------------------------------------------
+def _build_fused_step(tier: ComputeTier, f: int, use_kcls: bool):
+    """Jit the stamp->dom->commit pipeline as one program for ``tier``.
+
+    A jnp mirror of StampStage + DomStage + `classify_commits`, traced under
+    float64 (the caller enters `enable_x64`), eliminating the per-stage
+    host<->device ping-pong. Host-stateful scalars (the sliding-pool
+    percentile ``bound`` and the mean-reply ``fetch`` estimate) are inputs,
+    so the program is pure. Mirrors the numpy op order exactly -- the
+    jit-tier output is regression-tested bit-for-bit against the staged
+    path (tests/test_engine.py).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    fq = fast_quorum_size(f)
+    sq = slow_quorum_size(f)
+
+    @jax.jit
+    def step(t, c2p, owd_pr, drop_pr, reply_owd, alive, kcls, leader,
+             bound, fetch, batch_delay):
+        N, R = owd_pr.shape
+        # --- stamp: proxy stamping + deadline bounding ---------------------
+        stamp = t + c2p
+        deadlines = stamp + bound
+        arrivals = jnp.where(drop_pr | ~alive[None, :], jnp.inf,
+                             stamp[:, None] + owd_pr)
+        reply = jnp.where(alive[None, :], reply_owd, jnp.inf)
+        # --- dom: watermark admission + release ----------------------------
+        admitted = tier.admit_traced(deadlines, arrivals)
+        release = jnp.where(admitted,
+                            jnp.maximum(deadlines[:, None], arrivals),
+                            jnp.inf)
+        # --- commit: prefix hash-consistency vs the leader ------------------
+        order = tier.order_traced(deadlines)
+        if use_kcls:
+            order = order[jnp.argsort(kcls[order], stable=True)]
+        adm_sorted = admitted[order]
+        lead_adm_sorted = adm_sorted[:, leader]
+        disagree = adm_sorted != lead_adm_sorted[:, None]
+        cum_disagree = jnp.cumsum(disagree, axis=0) - disagree
+        if use_kcls:
+            ks = kcls[order]
+            is_start = jnp.concatenate(
+                [jnp.ones((1,), bool), ks[1:] != ks[:-1]])
+            start_pos = jax.lax.cummax(
+                jnp.where(is_start, jnp.arange(N), 0))
+            cum_disagree = cum_disagree - cum_disagree[start_pos]
+        prefix_match = cum_disagree == 0
+        inv = jnp.zeros((N,), order.dtype).at[order].set(
+            jnp.arange(N, dtype=order.dtype))
+        prefix_match = prefix_match[inv]
+        # --- fast quorum ----------------------------------------------------
+        lead_admitted = admitted[:, leader]
+        fast_reply_t = jnp.where(admitted, release + reply, jnp.inf)
+        fast_hash_ok = admitted & prefix_match & lead_admitted[:, None]
+        ok_t = jnp.where(fast_hash_ok, fast_reply_t, jnp.inf)
+        ok_lead = ok_t[:, leader]
+        ok_kth = (jnp.sort(ok_t, axis=1)[:, fq - 1] if fq - 1 < R
+                  else jnp.full((N,), jnp.inf))
+        fast_commit_t = jnp.where(jnp.isfinite(ok_lead), ok_kth, jnp.inf)
+        fast_commit_t = jnp.maximum(fast_commit_t, ok_lead)
+        # --- slow path ------------------------------------------------------
+        arr_lead = arrivals[:, leader]
+        leader_t = jnp.where(lead_admitted, release[:, leader], arr_lead)
+        leader_t = jnp.where(jnp.isfinite(arr_lead), leader_t, jnp.inf)
+        sync_t = leader_t[:, None] + batch_delay + reply
+        have_t = jnp.where(jnp.isfinite(arrivals), arrivals,
+                           leader_t[:, None] + fetch)
+        slow_reply_t = jnp.maximum(sync_t, have_t) + reply
+        lead_col = jnp.arange(R)[None, :] == leader
+        slow_reply_t = jnp.where(lead_col, leader_t[:, None] + reply,
+                                 slow_reply_t)
+        slow_kth = jnp.sort(slow_reply_t, axis=1)[:, sq - 1]
+        slow_commit_t = jnp.maximum(slow_kth, leader_t + reply[:, leader])
+        # --- verdicts -------------------------------------------------------
+        commit_t = jnp.minimum(fast_commit_t, slow_commit_t)
+        fast = fast_commit_t <= slow_commit_t
+        committed = jnp.isfinite(commit_t)
+        return (stamp, deadlines, arrivals, admitted, release,
+                commit_t, fast & committed, committed)
+
+    return step
 
 
 # ---------------------------------------------------------------------------
@@ -408,21 +566,16 @@ class StampStage(Stage):
 
     The bound is the percentile of a sliding pool of observed proxy->replica
     OWDs carried across epochs (the sliding-window estimator's steady state)
-    plus the clock-error margin, clamped to [0, D].
+    plus the clock-error margin, clamped to [0, D]; `DomEngine.update_bound`
+    owns the pool and computes the percentile via an O(pool) partition,
+    skipping the recompute entirely when the pool is unchanged.
     """
 
     name = "stamp"
 
     def run(self, s, eng):
-        cfg = eng.cfg
         s.stamp = s.t + s.c2p
-        pool = np.concatenate([eng.owd_pool, s.owd_pr.ravel()])
-        eng.owd_pool = pool[-cfg.dom.window * eng.n:]
-        sigma = cfg.clock.residual_sigma
-        bound = float(np.percentile(eng.owd_pool, cfg.dom.percentile)) \
-            + cfg.dom.beta * 2.0 * sigma
-        if not (0.0 < bound < cfg.dom.clamp_d):
-            bound = cfg.dom.clamp_d
+        bound = eng.update_bound(s.owd_pr)
         s.bound = bound
         s.deadlines = s.stamp + bound
         arrivals = s.stamp[:, None] + s.owd_pr
@@ -454,6 +607,60 @@ class DomStage(Stage):
         adm, rel = eng.tier.release_schedule(d, a)
         s.admitted = np.asarray(adm)[:N]
         s.release = np.asarray(rel)[:N]
+
+
+class FusedEpochStage(Stage):
+    """Stamp->dom->commit as ONE jitted device dispatch (fused tiers).
+
+    Replaces StampStage+DomStage+CommitStage when ``tier.fused``: the whole
+    data plane between network sampling and client delivery runs as a
+    single float64-traced program over the pow2-padded batch (see
+    `_build_fused_step`). The host contributes only the sequential-stateful
+    scalars: the sliding-pool percentile bound and the mean-reply fetch
+    estimate, both computed exactly as the staged path does.
+    """
+
+    name = "fused"
+
+    def run(self, s, eng):
+        from jax.experimental import enable_x64
+
+        cfg = eng.cfg
+        bound = eng.update_bound(s.owd_pr)
+        s.bound = bound
+        N = s.t.size
+        R = eng.n
+        # fetch estimate from the alive-masked reply delays (pre-padding),
+        # exactly the multiset classify_commits would reduce on host
+        rep = s.reply_owd.copy()
+        rep[:, ~s.alive] = np.inf
+        fin_reply = rep[np.isfinite(rep)]
+        fetch = 3 * float(fin_reply.mean()) if fin_reply.size else np.inf
+        n_pad = _pow2_bucket(N) if eng.tier.pad_batches else N
+        # Pad lanes: +inf attempt time -> +inf stamp/deadline/arrival, never
+        # admitted, never committed -- invisible to the real rows.
+        t = np.full(n_pad, np.inf)
+        t[:N] = s.t
+        c2p = np.zeros(n_pad)
+        c2p[:N] = s.c2p
+        owd = np.zeros((n_pad, R))
+        owd[:N] = s.owd_pr
+        drop = np.ones((n_pad, R), dtype=bool)
+        drop[:N] = s.drop_pr
+        reply = np.zeros((n_pad, R))
+        reply[:N] = s.reply_owd
+        kcls = np.full(n_pad, -1, np.int64)
+        if s.kcls is not None:
+            kcls[:N] = s.kcls
+        step = eng.tier.epoch_step(cfg.f, use_kcls=s.kcls is not None)
+        with enable_x64():
+            out = step(t, c2p, owd, drop, reply,
+                       np.asarray(s.alive, bool), kcls, s.leader,
+                       float(bound), fetch, float(cfg.leader_batch_delay))
+            out = [np.asarray(o)[:N] for o in out]
+        (s.stamp, s.deadlines, s.arrivals, s.admitted, s.release,
+         s.commit_time, s.fast, s.committed) = out
+        s.reply_owd = rep
 
 
 class CommitStage(Stage):
@@ -488,6 +695,28 @@ class DeliverStage(Stage):
 
 
 DEFAULT_STAGES = (SampleStage, StampStage, DomStage, CommitStage, DeliverStage)
+FUSED_STAGES = (SampleStage, FusedEpochStage, DeliverStage)
+
+
+def _partition_percentile(a: np.ndarray, q: float) -> float:
+    """np.percentile(a, q) (linear interpolation) via O(n) np.partition.
+
+    Only two order statistics are consumed, so selecting them beats the
+    full sort np.percentile does; the interpolation mirrors numpy's _lerp
+    (including the monotonicity-preserving form switch at t >= 0.5) so the
+    value is bit-identical.
+    """
+    pos = q / 100.0 * (a.size - 1)
+    lo = int(np.floor(pos))
+    hi = int(np.ceil(pos))
+    part = np.partition(a, [lo, hi])
+    lo_v, hi_v = float(part[lo]), float(part[hi])
+    t = pos - lo
+    if t == 0.0 or lo_v == hi_v:
+        return lo_v
+    if t < 0.5:
+        return lo_v + t * (hi_v - lo_v)
+    return hi_v - (hi_v - lo_v) * (1.0 - t)
 
 
 class DomEngine:
@@ -495,6 +724,9 @@ class DomEngine:
 
     The engine owns the stage list and the compute tier; the cluster owns
     time, the pending buffer, fault events, and result accumulation.
+    Fused tiers (jit, pallas) default to the three-stage single-dispatch
+    pipeline (sample -> fused -> deliver); the numpy tier keeps the
+    five-stage reference path.
     """
 
     def __init__(self, cfg, net, n_replicas: int,
@@ -504,8 +736,37 @@ class DomEngine:
         self.net = net
         self.n = n_replicas
         self.tier = make_tier(tier)
-        self.stages = [s() for s in (stages or DEFAULT_STAGES)]
+        if stages is None:
+            stages = FUSED_STAGES if self.tier.fused else DEFAULT_STAGES
+        self.stages = [s() for s in stages]
         self.owd_pool = np.zeros(0)     # sliding OWD sample pool (StampStage)
+        self._bound_cache: Optional[float] = None
+
+    def update_bound(self, owd_new: np.ndarray) -> float:
+        """Fold new OWD samples into the sliding pool; return the DOM bound.
+
+        The percentile is recomputed only when the pool actually changed
+        (partition-based selection, O(pool)); an unchanged pool reuses the
+        cached bound.
+        """
+        cfg = self.cfg
+        new = np.ravel(owd_new)
+        if new.size:
+            pool = np.concatenate([self.owd_pool, new])
+            self.owd_pool = pool[-cfg.dom.window * self.n:]
+            self._bound_cache = None
+        if self._bound_cache is None:
+            if self.owd_pool.size == 0:
+                bound = cfg.dom.clamp_d
+            else:
+                sigma = cfg.clock.residual_sigma
+                bound = _partition_percentile(self.owd_pool,
+                                              cfg.dom.percentile) \
+                    + cfg.dom.beta * 2.0 * sigma
+                if not (0.0 < bound < cfg.dom.clamp_d):
+                    bound = cfg.dom.clamp_d
+            self._bound_cache = float(bound)
+        return self._bound_cache
 
     # -- node-id layout (single source; the cluster sizes the network from it)
     def proxy_nodes(self, proxy_ids):
@@ -538,5 +799,6 @@ __all__ = [
     "ComputeTier", "NumpyTier", "JitTier", "PallasTier", "TIERS", "make_tier",
     "classify_commits",
     "EpochState", "Stage", "SampleStage", "StampStage", "DomStage",
-    "CommitStage", "DeliverStage", "DEFAULT_STAGES", "DomEngine",
+    "CommitStage", "DeliverStage", "FusedEpochStage",
+    "DEFAULT_STAGES", "FUSED_STAGES", "DomEngine",
 ]

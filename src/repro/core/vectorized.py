@@ -6,12 +6,30 @@ requests. This module reformulates the *steady-state data plane* of the
 protocol as pure array programs:
 
   given per-(request, replica) arrival times, clock offsets and deadlines,
-  compute -- entirely with jnp ops --
-    * early-buffer admission (running-max eligibility over deadline order),
+  compute -- entirely with array ops --
+    * early-buffer admission (event-ordered watermark scan, O(N log N)),
     * release times (max(deadline, arrival) under admission),
     * fast/slow commit classification and commit latencies,
     * reordering scores (LIS via O(n log n) patience counts is replaced by
       a rank-based pairwise estimator for differentiability-free speed).
+
+Admission comes in two roles:
+
+  oracle      `dom_release_schedule` -- the original O(N^2) lax.scan that
+              replays the early-buffer semantics literally.  Kept ONLY as
+              the property-test oracle and for tiny instances; every
+              production path below is checked against it.
+  production  the watermark formulation (`dom_admit_watermark_np`,
+              `dom_admit_watermark_jnp`, and the fused Pallas kernel in
+              repro.kernels.dom_admit).  Key fact: a message j is released
+              by time t iff admitted(j) and max(d_j, a_j) <= t, so when
+              messages are processed in candidate-release order max(d, a)
+              the released-deadline watermark is a monotone scalar.  A
+              rejected message's deadline never exceeds the watermark that
+              rejected it, so the watermark is a plain prefix max over ALL
+              deadlines in event order -- admission is one sort plus one
+              O(N) pass (O(N log N) total, down from O(N^2) work and
+              O(N^2) memory traffic in the scan).
 
 Everything is jit-compatible; the same code paths serve (a) the paper-figure
 benchmarks and (b) the deadline-ordered gradient-aggregation planner in
@@ -102,9 +120,130 @@ def dom_release_schedule(deadlines: jnp.ndarray, arrivals: jnp.ndarray) -> tuple
     return admitted, release
 
 
+# ---------------------------------------------------------------------------
+# Watermark admission (production path, O(N log N))
+# ---------------------------------------------------------------------------
+# Early-buffer admission replayed as a 2N-event stream per receiver:
+#
+#   test event    at a_i  -- decide admission of i against the watermark;
+#   update event  at r_i = max(d_i, a_i) -- i's candidate release raises the
+#                 watermark to max(W, d_i).
+#
+# Watermark updates are UNCONDITIONAL: an admitted message releases at r_i by
+# definition, and a rejected message satisfies d_i <= W already, so folding
+# its deadline into the running max changes nothing.  That removes the
+# admitted-set carry entirely -- the watermark is a prefix max of deadlines
+# in event order.
+#
+# Event order (ties matter; this mirrors the exact scan's stable arrival
+# processing, in which a release at time t counts against an arrival at t):
+#   key = (time, class, message, kind) with
+#     class    0 for an in-flight release (d > a, fires at d), 1 for arrival
+#              events (tests, and at-arrival releases where d <= a);
+#     message  the original index -- for tied arrival times this equals the
+#              stable arrival rank, interleaving each at-arrival release
+#              right after its own admission test;
+#     kind     test (0) before the same message's at-arrival update (1).
+# The composite (class, message, kind) packs into one integer aux key, so
+# the sort is a two-key lexsort.  Non-finite deadlines are admitted but
+# masked out of the watermark (they never release), matching the oracle.
+def _admit_events_aux(n: int, dtype=np.int64):
+    """aux keys for [test events | update events] given per-update class."""
+    idx = np.arange(n, dtype=dtype)
+    test_aux = (n + idx) * 2
+    return idx, test_aux
+
+
+def dom_admit_watermark_np(deadlines: np.ndarray,
+                           arrivals: np.ndarray) -> np.ndarray:
+    """Event-ordered watermark admission (numpy). [N],[N,R] -> [N,R] bool."""
+    d = np.asarray(deadlines, np.float64)
+    a = np.asarray(arrivals, np.float64)
+    N, R = a.shape
+    admitted = np.zeros((N, R), dtype=bool)
+    if N == 0:
+        return admitted
+    idx, test_aux = _admit_events_aux(N)
+    contrib = np.where(np.isfinite(d), d, -np.inf)
+    no_upd = np.full(N, -np.inf)
+    for r in range(R):
+        ar = a[:, r]
+        times = np.concatenate([ar, np.maximum(d, ar)])
+        cls = np.where(d > ar, 0, N)            # class * N, pre-scaled
+        aux = np.concatenate([test_aux, (cls + idx) * 2 + 1])
+        order = np.lexsort((aux, times))
+        runmax = np.maximum.accumulate(
+            np.concatenate([no_upd, contrib])[order])
+        excl = np.concatenate([[-np.inf], runmax[:-1]])
+        is_test = order < N
+        m = order[is_test]
+        admitted[m, r] = (d[m] > excl[is_test]) & np.isfinite(ar[m])
+    return admitted
+
+
+def dom_release_schedule_watermark(deadlines: np.ndarray,
+                                   arrivals: np.ndarray
+                                   ) -> tuple[np.ndarray, np.ndarray]:
+    """O(N log N) admission + release times, numpy (the NumpyTier hot path).
+
+    Exact w.r.t. `dom_release_schedule` (property-tested, including
+    duplicate deadlines, late arrivals and dropped receivers) without the
+    chunk+halo machinery the old chunked path needed.
+    """
+    d = np.asarray(deadlines, np.float64)
+    a = np.asarray(arrivals, np.float64)
+    admitted = dom_admit_watermark_np(d, a)
+    release = np.where(admitted, np.maximum(d[:, None], a), np.inf)
+    return admitted, release
+
+
+def dom_admit_watermark_jnp(deadlines: jnp.ndarray,
+                            arrivals: jnp.ndarray) -> jnp.ndarray:
+    """Traceable watermark admission: [N],[N,R] -> [N,R] bool.
+
+    Same event construction as `dom_admit_watermark_np`, with the sequential
+    O(N^2) scan carry replaced by sort + cummax (O(1) carried state).  Runs
+    at whatever precision the caller traces it at -- the engine's fused
+    epoch step traces it under float64 for exact numpy-tier parity.
+    """
+    d = deadlines
+    N = d.shape[0]
+    idx = jnp.arange(N)
+    contrib = jnp.where(jnp.isfinite(d), d, -jnp.inf)
+    no_upd = jnp.full((N,), -jnp.inf, d.dtype)
+
+    def one_receiver(ar):
+        times = jnp.concatenate([ar, jnp.maximum(d, ar)])
+        cls = jnp.where(d > ar, 0, N)
+        aux = jnp.concatenate([(N + idx) * 2, (cls + idx) * 2 + 1])
+        order = jnp.lexsort((aux, times))
+        runmax = jax.lax.cummax(jnp.concatenate([no_upd, contrib])[order])
+        excl = jnp.concatenate([jnp.full((1,), -jnp.inf, d.dtype),
+                                runmax[:-1]])
+        is_test = order < N
+        m = jnp.where(is_test, order, N)        # N = out-of-bounds, dropped
+        ok = is_test & (d[jnp.minimum(m, N - 1)] > excl) \
+            & jnp.isfinite(ar[jnp.minimum(m, N - 1)])
+        return jnp.zeros((N,), bool).at[m].set(ok, mode="drop")
+
+    return jax.vmap(one_receiver, in_axes=1, out_axes=1)(arrivals)
+
+
+@jax.jit
+def _watermark_schedule_jit(deadlines, arrivals):
+    admitted = dom_admit_watermark_jnp(deadlines, arrivals)
+    release = jnp.where(admitted, jnp.maximum(deadlines[:, None], arrivals),
+                        jnp.inf)
+    return admitted, release
+
+
 def dom_release_schedule_chunked(deadlines: np.ndarray, arrivals: np.ndarray,
                                  chunk: int = 2048) -> tuple[np.ndarray, np.ndarray]:
-    """Chunked (deadline-sorted) variant for large N.
+    """Chunked (deadline-sorted) variant for large N.  LEGACY.
+
+    Superseded by `dom_release_schedule_watermark` (O(N log N), no chunk
+    tuning, no halo blow-up under heavy reordering); kept as the pre-PR
+    baseline the `dom_scale` benchmark measures speedups against.
 
     Each chunk is processed exactly, extended by a *halo* of later-deadline
     messages whose deadlines fall within the maximum observed arrival
@@ -182,7 +321,7 @@ def nezha_commit_times(
     """
     from repro.core.engine import classify_commits
 
-    admitted, release = dom_release_schedule_chunked(deadlines, arrivals)
+    admitted, release = dom_release_schedule_watermark(deadlines, arrivals)
     admitted = np.asarray(admitted)
     release = np.asarray(release)
     res = classify_commits(
@@ -230,7 +369,7 @@ def multicast_reordering(owd: np.ndarray, send_times: np.ndarray) -> float:
 def dom_reordering(owd: np.ndarray, send_times: np.ndarray, deadlines: np.ndarray) -> float:
     """Fig 3: reordering of the *released* sequences under DOM."""
     arrivals = send_times[:, None] + owd
-    admitted, release = dom_release_schedule_chunked(deadlines, arrivals)
+    admitted, release = dom_release_schedule_watermark(deadlines, arrivals)
     both = admitted[:, 0] & admitted[:, 1]
     r1, r2 = release[both, 0], release[both, 1]
     order1 = np.argsort(r1, kind="stable")
@@ -244,6 +383,9 @@ __all__ = [
     "VecDomParams",
     "dom_release_schedule",
     "dom_release_schedule_chunked",
+    "dom_release_schedule_watermark",
+    "dom_admit_watermark_np",
+    "dom_admit_watermark_jnp",
     "nezha_commit_times",
     "multicast_reordering",
     "dom_reordering",

@@ -40,6 +40,7 @@ next epoch.
 """
 from __future__ import annotations
 
+import bisect
 from dataclasses import dataclass, field
 from typing import Optional
 
@@ -159,8 +160,10 @@ class VectorizedNezhaCluster(Cluster):
     def _add_fault(self, t: float, rid: int, alive: bool) -> None:
         if not (0 <= rid < self.n):
             raise ValueError(f"replica id {rid} out of range [0, {self.n})")
-        self._fault_events.append((float(t), int(rid), alive))
-        self._fault_events.sort(key=lambda e: e[0])
+        # insort_right keeps same-time events in insertion order, as the old
+        # stable whole-list re-sort did, at O(log n) compares + one shift.
+        bisect.insort(self._fault_events, (float(t), int(rid), alive),
+                      key=lambda e: e[0])
         self._apply_faults(self._now)
 
     def _apply_faults(self, up_to: float) -> None:

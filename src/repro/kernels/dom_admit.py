@@ -1,0 +1,155 @@
+"""Pallas TPU kernel: fused DOM early-buffer admission (event watermark).
+
+The production admission algorithm (repro.core.vectorized, watermark
+formulation) is sort + prefix-max: replay each receiver's 2N-event stream
+(test at arrival a_i, watermark update at candidate release max(d_i, a_i))
+in (time, aux) order and admit i iff d_i exceeds the running deadline
+prefix-max just before its test event.  This kernel fuses the whole thing
+on-device per receiver:
+
+  bitonic event sort  ->  log-step prefix max  ->  bitonic unsort
+
+so the pallas compute tier runs admission without borrowing the jit scan.
+The bitonic network maps onto the VPU as log^2(2n) compare-exchange sweeps
+of static permutations (reshape/swap, no data-dependent gathers); the
+prefix max is log(2n) shifted-max sweeps.
+
+Fidelity caveat: event times are compared in float32 inside the kernel
+(keys are shifted by the batch minimum host-side, so precision is relative
+to the batch's time *span*).  Ties closer than ~span * 2^-23 may order
+differently from the float64 tiers and flip an admission on the boundary;
+continuous-time instances collide with probability ~0, and exactly
+representable ties (e.g. duplicated deadlines) are broken by the same
+integer aux key as the float64 paths, hence identically.
+
+Oracle: repro.core.vectorized.dom_admit_watermark_np (itself property-
+tested against the exact O(N^2) scan and the event-driven EarlyBuffer).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _compare_exchange_multi(keys, vals, stride, direction_up):
+    """One bitonic stage over lexicographic `keys`, permuting `vals` along.
+
+    Same static reshape/swap permutation as repro.kernels.dom_release, but
+    with a (primary, secondary, ...) key tuple compared lexicographically
+    and an arbitrary tuple of carried value arrays.
+    """
+    n = keys[0].shape[0]
+    g = n // (2 * stride)
+    du = direction_up.reshape(g, 1)
+    split = [k.reshape(g, 2, stride) for k in keys]
+    # lexicographic a > b over the key tuple
+    swap = None
+    eq = None
+    for k2 in split:
+        a_k, b_k = k2[:, 0], k2[:, 1]
+        gt_k = a_k > b_k
+        swap = gt_k if swap is None else swap | (eq & gt_k)
+        eq = (a_k == b_k) if eq is None else eq & (a_k == b_k)
+
+    def permute(x2):
+        a_x, b_x = x2[:, 0], x2[:, 1]
+        lo = jnp.where(swap, b_x, a_x)
+        hi = jnp.where(swap, a_x, b_x)
+        new_a = jnp.where(du, lo, hi)
+        new_b = jnp.where(du, hi, lo)
+        return jnp.stack([new_a, new_b], axis=1).reshape(n)
+
+    keys = tuple(permute(k2) for k2 in split)
+    vals = tuple(permute(v.reshape(g, 2, stride)) for v in vals)
+    return keys, vals
+
+
+def _bitonic_sort_multi(keys, vals):
+    """Ascending bitonic sort by lexicographic keys; n a power of two."""
+    n = keys[0].shape[0]
+    stages = int(n).bit_length() - 1
+    idx = jax.lax.iota(jnp.int32, n)
+    for k in range(1, stages + 1):
+        for j in range(k - 1, -1, -1):
+            stride = 1 << j
+            group_idx = idx.reshape(n // (2 * stride), 2 * stride)[:, 0]
+            direction_up = ((group_idx >> k) & 1) == 0
+            keys, vals = _compare_exchange_multi(keys, vals, stride,
+                                                 direction_up)
+    return keys, vals
+
+
+def _prefix_max(x):
+    """Inclusive prefix max over [m] lanes, log(m) shifted-max sweeps."""
+    m = x.shape[0]
+    s = 1
+    while s < m:
+        shifted = jnp.concatenate([jnp.full((s,), -jnp.inf, x.dtype), x[:-s]])
+        x = jnp.maximum(x, shifted)
+        s *= 2
+    return x
+
+
+def _dom_admit_kernel(deadline_ref, arrival_ref, admitted_ref):
+    n = deadline_ref.shape[0]
+    d = deadline_ref[...].astype(jnp.float32)
+    a = arrival_ref[...].reshape(n).astype(jnp.float32)
+    idx = jax.lax.iota(jnp.int32, n)
+
+    # 2n events: [tests | updates].  aux = (class*n + msg)*2 + kind packs the
+    # (class, message, kind) tie-break into one int; see core.vectorized.
+    times = jnp.concatenate([a, jnp.maximum(d, a)])
+    cls = jnp.where(d > a, 0, n).astype(jnp.int32)
+    aux = jnp.concatenate([(n + idx) * 2, (cls + idx) * 2 + 1])
+    contrib = jnp.concatenate([jnp.full((n,), -jnp.inf, jnp.float32),
+                               jnp.where(d < jnp.inf, d, -jnp.inf)])
+    dval = jnp.concatenate([d, d])
+
+    (t_s, aux_s), (contrib_s, dval_s) = _bitonic_sort_multi(
+        (times, aux), (contrib, dval))
+
+    excl = jnp.concatenate([jnp.full((1,), -jnp.inf, jnp.float32),
+                            _prefix_max(contrib_s)[:-1]])
+    is_test = (aux_s & 1) == 0
+    adm = (is_test & (dval_s > excl) & (t_s < jnp.inf)).astype(jnp.int32)
+
+    # unsort: tests back to lanes [0, n), updates parked at [n, 2n)
+    half = aux_s >> 1
+    msg = jnp.where(half >= n, half - n, half)
+    key2 = jnp.where(is_test, msg, n + msg)
+    _, (adm_by_msg,) = _bitonic_sort_multi((key2,), (adm,))
+    admitted_ref[...] = adm_by_msg[:n].reshape(admitted_ref.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def dom_admit_pallas(deadlines, arrivals, *, interpret=False):
+    """deadlines [n] f32, arrivals [R, n] f32 (+inf = dropped).
+
+    Returns admitted [R, n] bool.  n is padded to a power of two internally
+    (pad lanes carry +inf deadline and arrival: never admitted, never a
+    watermark).  The grid iterates receivers; each program runs one
+    receiver's full event network in VMEM.
+    """
+    R, n = arrivals.shape
+    n_pad = 1 << (int(n - 1).bit_length() if n > 1 else 0)
+    if n_pad != n:
+        deadlines = jnp.pad(deadlines, (0, n_pad - n),
+                            constant_values=jnp.inf)
+        arrivals = jnp.pad(arrivals, ((0, 0), (0, n_pad - n)),
+                           constant_values=jnp.inf)
+    admitted = pl.pallas_call(
+        _dom_admit_kernel,
+        grid=(R,),
+        in_specs=[pl.BlockSpec((n_pad,), lambda r: (0,)),
+                  pl.BlockSpec((1, n_pad), lambda r: (r, 0))],
+        out_specs=pl.BlockSpec((1, n_pad), lambda r: (r, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, n_pad), jnp.int32),
+        interpret=interpret,
+    )(deadlines.astype(jnp.float32), arrivals.astype(jnp.float32))
+    return admitted[:, :n] != 0
+
+
+__all__ = ["dom_admit_pallas"]

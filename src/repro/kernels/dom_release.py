@@ -67,7 +67,8 @@ def _dom_release_kernel(deadline_ref, admitted_ref, clock_ref, order_ref, count_
     keys = jnp.where(released, d, jnp.inf)
     vals = jax.lax.iota(jnp.int32, d.shape[0])
     keys_s, vals_s = _bitonic_sort(keys, vals)
-    n_rel = jnp.sum(released.astype(jnp.int32))
+    # dtype-pinned: under an enable_x64 trace the sum would promote to int64
+    n_rel = jnp.sum(released.astype(jnp.int32)).astype(jnp.int32)
     seq = jax.lax.iota(jnp.int32, d.shape[0])
     order_ref[...] = jnp.where(seq < n_rel, vals_s, -1)
     count_ref[0] = n_rel

@@ -10,6 +10,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref as _ref
+from repro.kernels.dom_admit import dom_admit_pallas
 from repro.kernels.dom_release import dom_release_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.inchash import inchash_pallas
@@ -38,6 +39,58 @@ def ssd_scan(x, dt, A, B, C, *, chunk=128, use_pallas=None):
         return ssd_scan_pallas(x, dt, A, B, C, chunk=chunk,
                                interpret=not _on_tpu())
     return _ref.ssd_scan_ref(x, dt, A, B, C)
+
+
+def dom_admit_traced(deadlines, arrivals, *, use_pallas=True):
+    """Traceable early-buffer admission: [N] x [N, R] -> [N, R] bool.
+
+    The jnp mirror of the host-level `dom_admit`: shifts event times by
+    their finite minimum (so float32 kernel precision is relative to the
+    batch's time span, not its absolute epoch) and runs the fused
+    `dom_admit_pallas` bitonic-watermark kernel, one grid program per
+    receiver.  Composable inside jit -- the engine's fused epoch step for
+    the pallas tier calls this directly.
+    """
+    d, a = deadlines, arrivals
+    fin_d, fin_a = jnp.isfinite(d), jnp.isfinite(a)
+    mn = jnp.minimum(jnp.min(jnp.where(fin_d, d, jnp.inf), initial=jnp.inf),
+                     jnp.min(jnp.where(fin_a, a, jnp.inf), initial=jnp.inf))
+    shift = jnp.where(jnp.isfinite(mn), mn, 0.0)
+    dj = jnp.where(fin_d, d - shift, jnp.inf).astype(jnp.float32)
+    aj = jnp.where(fin_a, a - shift, jnp.inf).astype(jnp.float32)
+    if use_pallas:
+        return dom_admit_pallas(dj, aj.T, interpret=not _on_tpu()).T
+    from repro.core.vectorized import dom_admit_watermark_jnp
+
+    return dom_admit_watermark_jnp(dj, aj)
+
+
+def dom_admit(deadlines, arrivals, *, use_pallas=None):
+    """Early-buffer admission via the fused watermark kernel (host entry).
+
+    Off-kernel the float64 numpy watermark path is the reference; with
+    `use_pallas` the bitonic event sort + prefix-max kernel runs admission
+    on-device (interpret mode off-TPU).  See repro.kernels.dom_admit for
+    the float32 tie caveat.
+    """
+    import numpy as np
+
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    d = np.asarray(deadlines, np.float64)
+    a = np.asarray(arrivals, np.float64)
+    if not use_pallas:
+        from repro.core.vectorized import dom_admit_watermark_np
+
+        return dom_admit_watermark_np(d, a)
+    # shift in float64 on host; the kernel sees span-relative float32 keys
+    fin_d, fin_a = np.isfinite(d), np.isfinite(a)
+    vals = np.concatenate([d[fin_d], a[fin_a].ravel()])
+    shift = float(vals.min()) if vals.size else 0.0
+    dj = jnp.asarray(np.where(fin_d, d - shift, np.inf), jnp.float32)
+    aj = jnp.asarray(np.where(fin_a, a - shift, np.inf).T, jnp.float32)
+    adm = dom_admit_pallas(dj, aj, interpret=not _on_tpu())
+    return np.asarray(adm).T
 
 
 def dom_release(deadlines, admitted, clock_now, *, use_pallas=None):
@@ -95,6 +148,29 @@ def dom_deadline_order(deadlines, *, use_pallas=None):
     return np.asarray(order, dtype=np.int64)
 
 
+def dom_deadline_order_traced(deadlines, *, use_pallas=True):
+    """Traceable mirror of `dom_deadline_order` for the fused epoch step.
+
+    Same shift-by-finite-min + sentinel mapping, but expressed in jnp so it
+    composes inside the jitted epoch program; off the pallas path it falls
+    back to a plain stable argsort.
+    """
+    d = deadlines
+    if not use_pallas:
+        return jnp.argsort(d, stable=True)
+    fin = jnp.isfinite(d)
+    mn = jnp.min(jnp.where(fin, d, jnp.inf), initial=jnp.inf)
+    mx = jnp.max(jnp.where(fin, d, -jnp.inf), initial=-jnp.inf)
+    shift = jnp.where(jnp.isfinite(mn), mn, 0.0)
+    span = jnp.where(jnp.isfinite(mn), mx - mn, 0.0)
+    sentinel = (2.0 * span + 1.0).astype(jnp.float32)
+    dj = jnp.where(fin, (d - shift).astype(jnp.float32), sentinel)
+    order, _ = dom_release_pallas(dj, jnp.ones(d.shape[0], jnp.int8),
+                                  jnp.full((), jnp.inf, jnp.float32),
+                                  interpret=not _on_tpu())
+    return order
+
+
 def inchash(deadline_ns, client_id, request_id, *, use_pallas=None):
     if use_pallas is None:
         use_pallas = _on_tpu()
@@ -105,4 +181,5 @@ def inchash(deadline_ns, client_id, request_id, *, use_pallas=None):
 
 
 __all__ = ["attention", "ssd_scan", "dom_release", "dom_release_ref_order",
-           "dom_deadline_order", "inchash"]
+           "dom_deadline_order", "dom_deadline_order_traced",
+           "dom_admit", "dom_admit_traced", "inchash"]

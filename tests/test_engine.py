@@ -33,9 +33,81 @@ def _instance(n=200, r=3, seed=0):
     return deadlines, arrivals
 
 
+def _adversarial_instance(style, n, r, seed):
+    """DOM instances the watermark admission must survive exactly: late
+    arrivals beyond the deadline, duplicate deadlines, inf-dropped arrivals,
+    all-dropped receivers.  Grid-valued styles (k/64) are float32-exact so
+    the Pallas kernel's f32 compares cannot round, only tie-break."""
+    rng = np.random.default_rng(seed)
+    if style == "late":            # arrivals up to 2x span past the deadline
+        d = np.sort(rng.uniform(0, 1, n))
+        a = d[:, None] + rng.uniform(0.0, 2.0, (n, r))
+    elif style == "dup-deadlines":  # heavy deadline collisions, f32-exact
+        d = rng.integers(0, 8, n) / 64.0
+        a = rng.integers(0, 24, (n, r)) / 64.0
+    elif style == "drops":          # inf arrivals + one all-dropped receiver
+        d = rng.integers(0, 16, n) / 64.0
+        a = (d[:, None] * 64 + rng.integers(-8, 16, (n, r))) / 64.0
+        a[rng.random((n, r)) < 0.25] = np.inf
+        a[:, 0] = np.inf
+    else:                           # inf deadlines mixed in ("inf-deadlines")
+        d = rng.integers(0, 8, n) / 64.0
+        d[rng.random(n) < 0.15] = np.inf
+        a = rng.integers(0, 16, (n, r)) / 64.0
+    return d, a
+
+
+def _exact_oracle_admission(d, a):
+    """The retained O(N^2) scan oracle, traced in float64."""
+    import jax.numpy as jnp
+    from jax.experimental import enable_x64
+
+    from repro.core.vectorized import dom_release_schedule
+
+    with enable_x64():
+        adm, _ = dom_release_schedule(jnp.asarray(d, jnp.float64),
+                                      jnp.asarray(a, jnp.float64))
+        return np.asarray(adm)
+
+
 # ---------------------------------------------------------------------------
 # tier parity
 # ---------------------------------------------------------------------------
+ADVERSARIAL = ["late", "dup-deadlines", "drops", "inf-deadlines"]
+
+
+@pytest.mark.parametrize("style", ADVERSARIAL)
+def test_watermark_tiers_match_exact_oracle_adversarial(style):
+    """Tentpole acceptance: the O(N log N) watermark admission (numpy + jit
+    tiers) equals the retained O(N^2) scan oracle on adversarial cases."""
+    for seed in range(5):
+        d, a = _adversarial_instance(style, n=31, r=3, seed=seed)
+        want = _exact_oracle_admission(d, a)
+        adm_np, rel_np = NumpyTier().release_schedule(d, a)
+        adm_jit, rel_jit = JitTier().release_schedule(d, a)
+        np.testing.assert_array_equal(want, adm_np, err_msg=f"numpy {style}")
+        np.testing.assert_array_equal(want, adm_jit, err_msg=f"jit {style}")
+        np.testing.assert_array_equal(rel_np, rel_jit)
+        # release = max(deadline, arrival) under admission, inf otherwise
+        np.testing.assert_array_equal(
+            rel_np, np.where(adm_np, np.maximum(d[:, None], a), np.inf))
+
+
+@pytest.mark.pallas
+@pytest.mark.parametrize("style", ADVERSARIAL)
+def test_watermark_pallas_matches_oracle_adversarial(style):
+    """The fused dom_admit kernel agrees too: grid-valued adversarial
+    instances are f32-exact, so even duplicate-deadline tie-breaks must
+    match the float64 tiers (same integer aux key)."""
+    if style == "late":     # continuous values: sub-f32-resolution pairs
+        pytest.skip("continuous instance; covered by the cluster-level test")
+    for seed in range(3):
+        d, a = _adversarial_instance(style, n=21, r=3, seed=seed)
+        want = _exact_oracle_admission(d, a)
+        adm, _ = PallasTier().release_schedule(d, a)
+        np.testing.assert_array_equal(want, adm, err_msg=f"pallas {style}")
+
+
 def test_numpy_jit_tier_parity():
     deadlines, arrivals = _instance(seed=1)
     a_np = NumpyTier(chunk=64).release_schedule(deadlines, arrivals)
@@ -157,6 +229,60 @@ def test_sample_owd_pairs_uses_per_pair_paths():
     want = params.base_owd + net._path_offset[srcs, dsts] \
         + np.exp(params.lognorm_mu)
     np.testing.assert_allclose(owd, want, rtol=1e-3)
+
+
+def _epoch_batch(n, n_clients=4, seed=11, kcls_n=5):
+    rng = np.random.default_rng(seed)
+    due = np.zeros(n, PENDING_DTYPE)
+    due["t"] = np.sort(rng.uniform(0, 5e-3, n))
+    due["t0"] = due["t"]
+    due["cid"] = rng.integers(0, n_clients, n)
+    due["rid"] = np.arange(n)
+    due["kcls"] = rng.integers(0, kcls_n, n)
+    return due
+
+
+def _run_one_epoch(tier, due, cfg, alive=None, leader=0, net_seed=0):
+    net = CloudNetwork(3 + cfg.n_proxies + cfg.n_clients, cfg.net, seed=net_seed)
+    eng = DomEngine(cfg, net, 3, tier=tier)
+    alive = np.ones(3, bool) if alive is None else alive
+    return eng, eng.run_epoch(due.copy(), alive, leader=leader)
+
+
+def test_fused_epoch_step_matches_staged_numpy_bitwise():
+    """Satellite acceptance: the fused single-dispatch epoch program (jit
+    tier) reproduces the staged numpy pipeline BIT-FOR-BIT -- including the
+    float64-sensitive fast/slow boundary -- because it is traced under x64
+    with the identical op order."""
+    cfg = VectorizedConfig(f=1, n_clients=4, seed=0)
+    due = _epoch_batch(50)
+    eng_np, s_np = _run_one_epoch("numpy", due, cfg)
+    eng_jit, s_jit = _run_one_epoch("jit", due, cfg)
+    assert [st.name for st in eng_np.stages] == [
+        "sample", "stamp", "dom", "commit", "deliver"]
+    assert [st.name for st in eng_jit.stages] == ["sample", "fused", "deliver"]
+    # both fast- and slow-path commits must be exercised for the boundary
+    # comparison to mean anything
+    assert 0 < int(np.sum(s_np.fast)) < int(np.sum(s_np.committed))
+    for field in ("stamp", "deadlines", "arrivals", "admitted", "release",
+                  "commit_time", "fast", "committed", "latency"):
+        np.testing.assert_array_equal(
+            getattr(s_np, field), getattr(s_jit, field), err_msg=field)
+    assert s_np.bound == s_jit.bound
+
+
+def test_fused_epoch_step_with_crashed_replica_matches_staged():
+    """Fused path under partial outage: alive-masking, the slow-path fetch
+    estimate and leader re-election inputs all live inside the fused
+    program; they must still match the staged path exactly."""
+    cfg = VectorizedConfig(f=1, n_clients=4, seed=0)
+    due = _epoch_batch(40, seed=7)
+    alive = np.array([False, True, True])
+    _, s_np = _run_one_epoch("numpy", due, cfg, alive=alive, leader=1)
+    _, s_jit = _run_one_epoch("jit", due, cfg, alive=alive, leader=1)
+    for field in ("admitted", "release", "commit_time", "fast", "committed"):
+        np.testing.assert_array_equal(
+            getattr(s_np, field), getattr(s_jit, field), err_msg=field)
 
 
 def test_engine_epoch_pipeline_smoke():

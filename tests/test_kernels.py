@@ -9,6 +9,7 @@ import pytest
 pytestmark = pytest.mark.pallas
 
 from repro.kernels import ref
+from repro.kernels.dom_admit import dom_admit_pallas
 from repro.kernels.dom_release import dom_release_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.inchash import inchash_pallas
@@ -91,6 +92,54 @@ def test_dom_release_released_are_sorted():
     rel = np.asarray(deadlines)[np.asarray(order[:k])]
     assert (np.diff(rel) >= 0).all()
     assert (rel <= 0.5).all()
+
+
+# ---------------------------------------------------------------------------
+# dom admit (fused bitonic event sort + watermark prefix-max)
+# ---------------------------------------------------------------------------
+def _admit_oracle(deadlines, arrivals):
+    from repro.core.vectorized import dom_admit_watermark_np
+
+    return dom_admit_watermark_np(np.asarray(deadlines, np.float64),
+                                  np.asarray(arrivals, np.float64))
+
+
+@pytest.mark.parametrize("n,R", [(8, 1), (33, 3), (64, 2), (100, 3), (256, 5)])
+def test_dom_admit_kernel(n, R):
+    """Kernel admission == float64 watermark oracle on f32-exact grids
+    (values k/64: duplicate deadlines and arrival ties are compared
+    without rounding, so the integer aux tie-break must line up)."""
+    d = RNG.integers(0, 4 * 64, n) / 64.0
+    a = RNG.integers(0, 6 * 64, (n, R)) / 64.0
+    a[RNG.random((n, R)) < 0.15] = np.inf
+    got = dom_admit_pallas(jnp.asarray(d, jnp.float32),
+                           jnp.asarray(a.T, jnp.float32), interpret=True)
+    np.testing.assert_array_equal(np.asarray(got).T, _admit_oracle(d, a))
+
+
+def test_dom_admit_kernel_realistic_owd():
+    """A realistic OWD spread (distinct, well-separated event times)."""
+    n = 128
+    send = np.sort(RNG.uniform(0, 5e-3, n)) + np.arange(n) * 1e-6
+    d = send + 120e-6
+    a = send[:, None] + RNG.lognormal(np.log(60e-6), 0.6, (n, 3))
+    a[RNG.random((n, 3)) < 0.02] = np.inf
+    shift = send[0]
+    got = dom_admit_pallas(jnp.asarray(d - shift, jnp.float32),
+                           jnp.asarray((a - shift).T, jnp.float32),
+                           interpret=True)
+    np.testing.assert_array_equal(np.asarray(got).T, _admit_oracle(d, a))
+
+
+def test_dom_admit_kernel_all_dropped_receiver():
+    d = np.arange(12) / 8.0
+    a = np.full((12, 2), np.inf)
+    a[:, 1] = (np.arange(12) + 2) / 8.0
+    got = dom_admit_pallas(jnp.asarray(d, jnp.float32),
+                           jnp.asarray(a.T, jnp.float32), interpret=True)
+    got = np.asarray(got).T
+    assert not got[:, 0].any()                  # dropped receiver admits none
+    np.testing.assert_array_equal(got, _admit_oracle(d, a))
 
 
 # ---------------------------------------------------------------------------

@@ -113,6 +113,103 @@ def test_chunked_release_matches_exact_realistic(n, seed):
 
 
 # ---------------------------------------------------------------------------
+# watermark admission (the O(N log N) production path) vs the exact oracle
+# ---------------------------------------------------------------------------
+def _adversarial_dom_instance(n, r, seed, grid, drop_p, late_scale,
+                              inf_deadline_p, kill_receiver):
+    """Adversarial DOM instances: duplicate deadlines (coarse f32-exact
+    grid), arrivals far beyond the deadline, inf-dropped arrivals, whole
+    receivers dropped, inf deadlines."""
+    rng = np.random.default_rng(seed)
+    if grid:
+        deadlines = rng.integers(0, 8, n) / 64.0
+        arrivals = rng.integers(0, 24, (n, r)) / 64.0
+    else:
+        deadlines = np.sort(rng.uniform(0, 1.0, n))
+        arrivals = deadlines[:, None] + rng.uniform(-0.2, late_scale, (n, r))
+    if inf_deadline_p:
+        deadlines = deadlines.copy()
+        deadlines[rng.random(n) < inf_deadline_p] = np.inf
+    arrivals[rng.random((n, r)) < drop_p] = np.inf
+    if kill_receiver:
+        arrivals[:, rng.integers(0, r)] = np.inf
+    return deadlines, arrivals
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    n=st.integers(1, 48),
+    r=st.integers(1, 3),
+    seed=st.integers(0, 2**30),
+    grid=st.booleans(),
+    drop_p=st.sampled_from([0.0, 0.2, 0.6]),
+    late_scale=st.sampled_from([0.05, 0.5, 2.0]),
+    inf_deadline_p=st.sampled_from([0.0, 0.15]),
+    kill_receiver=st.booleans(),
+)
+def test_watermark_admission_matches_exact_oracle(n, r, seed, grid, drop_p,
+                                                  late_scale, inf_deadline_p,
+                                                  kill_receiver):
+    """The event-ordered watermark admission (numpy and jit tiers) equals
+    the retained O(N^2) `dom_release_schedule` oracle on adversarial cases:
+    late arrivals beyond the deadline, duplicate deadlines, inf-dropped
+    arrivals, and all-dropped receivers."""
+    import jax.numpy as jnp
+    from jax.experimental import enable_x64
+
+    from repro.core.vectorized import (
+        _watermark_schedule_jit,
+        dom_admit_watermark_np,
+        dom_release_schedule,
+    )
+
+    deadlines, arrivals = _adversarial_dom_instance(
+        n, r, seed, grid, drop_p, late_scale, inf_deadline_p, kill_receiver)
+    with enable_x64():
+        want = np.asarray(dom_release_schedule(
+            jnp.asarray(deadlines, jnp.float64),
+            jnp.asarray(arrivals, jnp.float64))[0])
+        got_jit = np.asarray(_watermark_schedule_jit(
+            jnp.asarray(deadlines, jnp.float64),
+            jnp.asarray(arrivals, jnp.float64))[0])
+    np.testing.assert_array_equal(want, dom_admit_watermark_np(deadlines, arrivals))
+    np.testing.assert_array_equal(want, got_jit)
+
+
+@pytest.mark.pallas
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 24),
+    r=st.integers(1, 3),
+    seed=st.integers(0, 2**30),
+    drop_p=st.sampled_from([0.0, 0.3]),
+    kill_receiver=st.booleans(),
+)
+def test_watermark_admission_pallas_matches_oracle(n, r, seed, drop_p,
+                                                   kill_receiver):
+    """All three tiers on one instance: the fused Pallas admit kernel must
+    agree with the oracle on f32-exact grid instances (duplicate deadlines
+    tie-break through the same integer aux key as the float64 paths)."""
+    import jax.numpy as jnp
+    from jax.experimental import enable_x64
+
+    from repro.core.vectorized import dom_release_schedule
+    from repro.kernels.ops import dom_admit
+
+    deadlines, arrivals = _adversarial_dom_instance(
+        n, r, seed, grid=True, drop_p=drop_p, late_scale=0.0,
+        inf_deadline_p=0.1, kill_receiver=kill_receiver)
+    with enable_x64():
+        want = np.asarray(dom_release_schedule(
+            jnp.asarray(deadlines, jnp.float64),
+            jnp.asarray(arrivals, jnp.float64))[0])
+    np.testing.assert_array_equal(want, dom_admit(deadlines, arrivals,
+                                                  use_pallas=False))
+    np.testing.assert_array_equal(want, dom_admit(deadlines, arrivals,
+                                                  use_pallas=True))
+
+
+# ---------------------------------------------------------------------------
 # hashing algebra
 # ---------------------------------------------------------------------------
 entry_tuples = st.lists(
