@@ -290,7 +290,7 @@ def fig12_proxy(quick=True) -> list[dict]:
             cl.run_for(dur + 0.05)
             s = cl.summary()
             thr = s["committed"] / dur
-            cpu = cl.fabric.cpu_utilization(cl._client_node(0))
+            cpu = cl.client_cpu_utilization(0)
             rows.append({"fig": "12", "n_replicas": n, "mode": name,
                          "client_throughput": thr, "client_cpu": cpu})
             print(f"  n={n} {name:9s}: one-client thr={thr:8.0f}/s "
@@ -371,59 +371,58 @@ def appendix_g_primitives(quick=True) -> list[dict]:
 
 
 # ---------------------------------------------------------------------------
-# Figure 13: WAN deployment (S9.8) -- proxies co-located with clients
+# Figure 13: WAN deployment (S9.8) -- the cataloged "wan" scenario: replicas
+# across regions, proxies co-located with clients, WAN-tuned DOM/timeouts.
+# One declarative spec runs every protocol (and every vectorized tier).
 # ---------------------------------------------------------------------------
 def fig13_wan(quick=True) -> list[dict]:
-    from repro.core.replica import ReplicaParams
-    from repro.sim.network import WAN_PARAMS
+    from dataclasses import replace
+
+    from repro.sim.scenario import get_scenario, run_scenario
 
     rows = []
-    dur = 1.5 if quick else 3.0
-    rate = 200
-    dom = DomParams(clamp_d=80e-3, initial_owd=40e-3, window=200)
-    print("Fig 13 (WAN): replicas across 3 regions, clients+proxies co-located")
-    cfg = ClusterConfig(f=1, n_proxies=2, n_clients=10, seed=0, net=WAN_PARAMS,
-                        dom=dom, replica=ReplicaParams(
-                            dom=dom, batch_interval=2e-3, status_interval=10e-3,
-                            commit_interval=50e-3, heartbeat_timeout=500e-3),
-                        client_timeout=400e-3,
-                        client_proxy_lan=150e-6)  # proxies in the client zone
-    s = drive("nezha", cfg, rate_per_client=rate, duration=dur)
-    s.update(fig="13", protocol="nezha")
-    rows.append(s)
-    print("  " + fmt_row("nezha(wan)", s))
-    for name in ["multipaxos", "nopaxos-optim", "toq-epaxos"]:
-        bcfg = BaselineConfig(f=1, n_clients=10, seed=0, net=WAN_PARAMS,
-                              client_timeout=400e-3)
-        s = drive(name, bcfg, rate_per_client=rate, duration=dur)
-        s.update(fig="13", protocol=name)
+    sc = get_scenario("wan")
+    if not quick:
+        sc = replace(sc, workload=replace(sc.workload, duration=3.0))
+    print("Fig 13 (WAN): scenario 'wan' -- " + sc.description)
+    for name in ["nezha", "multipaxos", "nopaxos-optim", "toq-epaxos"]:
+        s = run_scenario(name, sc).as_dict()
+        s.update(fig="13")
         rows.append(s)
-        print("  " + fmt_row(f"{name}(wan)", s))
+        print("  " + fmt_row(f"{s['protocol']}(wan)", s))
     return rows
 
 
 # ---------------------------------------------------------------------------
-# Figures 14-15: leader failure -- view-change time + throughput recovery
+# Figures 14-15: leader failure -- view-change time + throughput recovery.
+# Built on the cataloged "leader-crash" scenario: `make_scenario_cluster`
+# constructs the configured cluster with the Crash event pre-scheduled; the
+# benchmark keeps its custom probing loop for the recovery timeline.
 # ---------------------------------------------------------------------------
 def fig14_15_recovery(quick=True) -> list[dict]:
+    from dataclasses import replace
+
     from repro.core.messages import Status
+    from repro.sim.scenario import get_scenario, make_scenario_cluster
+    from repro.sim.workload import WorkloadDriver
 
     rows = []
-    print("Fig 14/15: leader crash at t=0.15; view change + recovery")
+    base = get_scenario("leader-crash")
+    crash_at = base.faults[0].t
+    print(f"Fig 14/15: scenario 'leader-crash' (crash at t={crash_at}); "
+          "view change + recovery")
     for rate in ([5000, 20000] if quick else [1000, 5000, 10000, 20000]):
-        cfg = ClusterConfig(f=1, n_proxies=2, n_clients=10, seed=0)
-        cl = make_cluster("nezha", cfg)
-        cl.start()
-        rng = np.random.default_rng(0)
         dur = 0.8
-        for cid in range(cl.n_clients):
-            t = 0.02
-            while t < dur:
-                t += rng.exponential(1.0 / rate)
-                cl.submit_at(t, cid, keys=(int(rng.integers(1_000_000)),))
-        cl.run_for(0.15)
-        cl.crash(0)
-        crash_t = cl.scheduler.now
+        sc = replace(base, workload=replace(
+            base.workload, rate_per_client=rate, duration=dur, warmup=0.02))
+        cl, sc, skipped = make_scenario_cluster("nezha", sc)
+        assert not skipped, "the event backend models crashes"
+        cl.start()
+        # the scenario's own declared workload (zipf keys, read/write mix),
+        # pre-scheduled so the probing loop below can step in small slices
+        WorkloadDriver(sc.workload).inject_open_loop(cl)
+        cl.run_for(crash_at + 1e-4)     # the scheduled Crash event fires
+        crash_t = crash_at
         # measure view-change completion: all survivors NORMAL in view >= 1
         vc_done = None
         while cl.scheduler.now < crash_t + 0.6:
@@ -525,42 +524,67 @@ def app_kv_exchange(quick=True) -> list[dict]:
 
 
 # ---------------------------------------------------------------------------
-# Appendix D: clock-fault robustness
+# Appendix D: clock-fault robustness -- the cataloged clock-skew scenarios
+# (typed `ClockFault` events; no more reaching into cluster clocks). The same
+# scenarios run on the vectorized tiers via run_scenario(..., tier=...).
 # ---------------------------------------------------------------------------
+APPENDIX_D_CASES = [
+    ("baseline", "intra-zone"),
+    ("leader-slow", "clock-skew-leader"),
+    ("leader-slow+cap", "clock-skew-leader-capped"),
+    ("follower-fast", "clock-skew-follower"),
+    ("proxy-fast", "clock-skew-proxy"),
+    ("proxy-fast+cap", "clock-skew-proxy-capped"),
+]
+
+
 def appendix_d_clock(quick=True) -> list[dict]:
+    from dataclasses import replace
+
+    from repro.sim.scenario import get_scenario, run_scenario
+
     rows = []
-    dur = 0.15 if quick else 0.3
-    rate = 2000
-    cases = [
-        ("baseline", None, (0, 0), 0.0),
-        ("leader-slow", 0, (-300e-6, 30e-6), 0.0),
-        ("leader-slow+cap", 0, (-300e-6, 30e-6), 50e-6),
-        ("follower-fast", 1, (300e-6, 30e-6), 0.0),
-        ("proxy-fast", "proxy", (300e-6, 30e-6), 0.0),
-        ("proxy-fast+cap", "proxy", (300e-6, 30e-6), 50e-6),
-    ]
-    print("Appendix D: latency under injected clock faults")
-    for name, who, (mu, sigma), cap in cases:
-        dom = DomParams()
-        cfg = ClusterConfig(f=1, n_proxies=2, n_clients=10, seed=0, dom=dom,
-                            replica=ReplicaParams(dom=dom, deadline_cap=cap))
-        cl = make_cluster("nezha", cfg)
-        if who == "proxy":
-            for p in range(cfg.n_proxies):
-                cl.clock_of_proxy(p).inject_fault(mu, sigma)
-        elif who is not None:
-            cl.clocks[who].inject_fault(mu, sigma)
-        cl.start()
-        rng = np.random.default_rng(0)
-        for cid in range(cl.n_clients):
-            t = 0.02
-            while t < dur:
-                t += rng.exponential(1.0 / rate)
-                cl.submit_at(t, cid, keys=(int(rng.integers(1_000_000)),))
-        cl.run_for(dur + 0.1)
-        s = cl.summary()
+    print("Appendix D: latency under injected clock faults (scenario catalog)")
+    for name, sc_name in APPENDIX_D_CASES:
+        sc = get_scenario(sc_name)
+        if not quick:
+            sc = replace(sc, workload=replace(sc.workload, duration=0.3))
+        s = run_scenario("nezha", sc).as_dict()
         s.update(fig="D", case=name)
         rows.append(s)
         print(f"  {name:18s} med={s.get('median_latency', float('nan'))*1e6:8.1f}us "
               f"fcr={s['fast_commit_ratio']:.2f} committed={s['committed']}")
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Scenario sweep: every cataloged scenario through the vectorized backend
+# (tier from --tier) -- the experiment surface in one table. This is also the
+# CI smoke: `python -m benchmarks.run --quick --only scenarios`.
+# ---------------------------------------------------------------------------
+def scenario_sweep(quick=True) -> list[dict]:
+    from dataclasses import replace
+
+    from repro.sim.scenario import available_scenarios, get_scenario, run_scenario
+
+    rows = []
+    tier = DEFAULT_TIER or "numpy"
+    names = available_scenarios()
+    if quick:
+        # CI smoke: one scenario per condition family.
+        names = ("intra-zone", "wan", "lossy", "leader-crash",
+                 "clock-skew-proxy")
+    print(f"Scenario sweep: nezha-vectorized[{tier}] x {len(names)} scenarios")
+    for sc_name in names:
+        sc = get_scenario(sc_name)
+        if quick and sc.workload.duration > 0.5:
+            sc = replace(sc, workload=replace(sc.workload, duration=0.5))
+        r = run_scenario("nezha-vectorized", sc, tier=tier)
+        s = r.as_dict()
+        s.update(fig="scenarios")
+        rows.append(s)
+        print(f"  {sc_name:26s} committed={r.committed:6d}/{r.n_requests:<6d} "
+              f"med={r.median_latency*1e6:9.1f}us fcr={r.fast_commit_ratio:.2f} "
+              f"vc={r.view_changes} skipped_faults={r.skipped_faults}")
+        assert r.committed > 0, f"scenario {sc_name} committed nothing"
     return rows

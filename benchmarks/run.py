@@ -107,6 +107,7 @@ def main() -> None:
         "appendix_d": figs.appendix_d_clock,
         "appendix_g": figs.appendix_g_primitives,
         "tiers": figs.tier_sweep,
+        "scenarios": figs.scenario_sweep,
         "dom_scale": _bench_dom_scale,
         "kernels": lambda quick: bench_kernels(quick),
         "roofline": lambda quick: bench_roofline(),
@@ -114,12 +115,17 @@ def main() -> None:
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--quick", action="store_true",
+                    help="explicit quick mode (the default; CI uses this "
+                         "spelling for its scenario smoke)")
     ap.add_argument("--only", default=None)
     ap.add_argument("--tier", default=None, choices=["numpy", "jit", "pallas"],
                     help="compute tier for the vectorized backend (staged DOM "
                          "engine); default keeps each benchmark's own choice "
                          "and the tier sweep runs all three")
     args = ap.parse_args()
+    if args.quick and args.full:
+        ap.error("--quick and --full are mutually exclusive")
     figs.DEFAULT_TIER = args.tier
     quick = not args.full
     names = list(ALL) if not args.only else args.only.split(",")

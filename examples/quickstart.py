@@ -1,6 +1,8 @@
 """Quickstart: the three layers of this framework in one script.
 
-1. DOM + Nezha consensus on a simulated cloud fabric (the paper's core).
+1. DOM + Nezha consensus on a simulated cloud fabric (the paper's core),
+   the unified protocol registry, and the declarative Scenario API
+   (environment + fault schedule + workload in one cataloged spec).
 2. A tiny LM trained for a few steps with the fault-tolerant trainer
    (checkpoints commit through the Nezha-replicated metadata log).
 3. A Pallas kernel validated against its oracle.
@@ -57,6 +59,23 @@ def demo_protocol_zoo():
               f"fast-path={s['fast_commit_ratio']:.0%}")
 
 
+def demo_scenarios():
+    from repro.sim.scenario import available_scenarios, run_scenario
+
+    print("== 1c. declarative scenarios: environment + faults + workload ==")
+    # A full paper experiment is two lines: pick a cataloged scenario, run it
+    # on any backend (here: a leader crash mid-run on the vectorized tier).
+    result = run_scenario("nezha-vectorized", "leader-crash")
+    print(f"   leader-crash: committed {result.committed}/{result.n_requests}, "
+          f"view changes {result.view_changes}, "
+          f"median {result.median_latency*1e6:.0f}us")
+    result = run_scenario("nezha", "clock-skew-proxy")
+    print(f"   clock-skew-proxy (event backend): "
+          f"median {result.median_latency*1e6:.0f}us, "
+          f"fast-path {result.fast_commit_ratio:.0%}")
+    print(f"   catalog: {', '.join(available_scenarios())}")
+
+
 def demo_training():
     from repro.launch.train import Trainer, TrainerConfig
 
@@ -88,6 +107,7 @@ def demo_kernel():
 if __name__ == "__main__":
     demo_consensus()
     demo_protocol_zoo()
+    demo_scenarios()
     demo_training()
     demo_kernel()
     print("quickstart OK")

@@ -149,6 +149,18 @@ class Cluster(abc.ABC):
         raise NotImplementedError(
             f"{type(self).__name__} does not model replica failures")
 
+    def schedule_fault(self, event) -> bool:
+        """Schedule a typed scenario fault event (repro.sim.scenario).
+
+        Events are duck-typed on ``event.kind`` ("crash", "relaunch",
+        "clock-fault", "clock-clear", "net-shift") so backends need no
+        dependency on the scenario module. Returns True if the event was
+        scheduled, False if this backend cannot model it -- `run_scenario`
+        skips-and-counts rather than failing mid-run, keeping one scenario
+        catalog runnable across every registry entry.
+        """
+        return False
+
     # -- results ----------------------------------------------------------------
     @abc.abstractmethod
     def summary(self) -> dict:
@@ -176,6 +188,53 @@ class EventCluster(Cluster):
 
     def run_for(self, duration: float) -> None:
         self.scheduler.run_for(duration)
+
+    def schedule_fault(self, event) -> bool:
+        """Event-backend fault application: schedule the event's effect at
+        its timestamp on the discrete-event scheduler.
+
+        Capability is checked *up front* (not at fire time): crash/relaunch
+        require the concrete class to override `crash`/`relaunch`; clock
+        faults require per-node clocks (`clock_of_replica`/`clock_of_proxy`,
+        which route to the documented `Clock.inject_fault` hook); net-shift
+        only needs the shared fabric and is supported everywhere.
+        """
+        kind = getattr(event, "kind", None)
+        if kind in ("crash", "relaunch"):
+            base = Cluster.crash if kind == "crash" else Cluster.relaunch
+            if getattr(type(self), kind) is base:       # not overridden
+                return False
+            if not (0 <= event.rid < self.n):           # fail at schedule time
+                raise ValueError(
+                    f"replica id {event.rid} out of range [0, {self.n})")
+            fn = self.crash if kind == "crash" else self.relaunch
+            self.scheduler.schedule_at(event.t, lambda: fn(event.rid),
+                                       tag="fault")
+            return True
+        if kind in ("clock-fault", "clock-clear"):
+            if not (hasattr(self, "clock_of_replica")
+                    and hasattr(self, "clock_of_proxy")):
+                return False
+            targets = event.targets(self.n, getattr(self.cfg, "n_proxies", 0))
+
+            def apply() -> None:
+                for role, idx in targets:
+                    clock = (self.clock_of_replica(idx) if role == "replica"
+                             else self.clock_of_proxy(idx))
+                    if kind == "clock-fault":
+                        clock.inject_fault(event.mu, event.sigma)
+                    else:
+                        clock.clear_fault()
+
+            self.scheduler.schedule_at(event.t, apply, tag="fault")
+            return True
+        if kind == "net-shift":
+            params = event.params       # resolve now: bad profiles must fail
+            self.scheduler.schedule_at(  # at schedule time, not mid-run
+                event.t, lambda: self.fabric.network.set_params(params),
+                tag="fault")
+            return True
+        return False
 
 
 __all__ = ["CommonConfig", "Cluster", "EventCluster",

@@ -176,12 +176,12 @@ class ComputeTier:
         """jnp deadline order [N] -> [N] inside the fused program."""
         raise NotImplementedError
 
-    def epoch_step(self, f: int, use_kcls: bool):
+    def epoch_step(self, f: int, use_kcls: bool, use_cap: bool = False):
         """The fused stamp->dom->commit program (jitted, cached per shape)."""
         cache = self.__dict__.setdefault("_fused_cache", {})
-        key = (f, use_kcls)
+        key = (f, use_kcls, use_cap)
         if key not in cache:
-            cache[key] = _build_fused_step(self, f, use_kcls)
+            cache[key] = _build_fused_step(self, f, use_kcls, use_cap)
         return cache[key]
 
 
@@ -294,6 +294,7 @@ def classify_commits(
     leader_batch_delay: float = 50e-6,
     key_ids: Optional[np.ndarray] = None,   # [N] commutativity class per request
     order: Optional[np.ndarray] = None,     # [N] deadline-sorted indices (tier)
+    force_slow: Optional[np.ndarray] = None,  # [N] fast path disallowed (cap)
 ) -> dict:
     """Classify each request's commit path and commit time at the proxy.
 
@@ -363,6 +364,10 @@ def classify_commits(
               if fq - 1 < R else np.full(N, np.inf))
     fast_commit_t = np.where(np.isfinite(ok_t[:, leader]), ok_kth, np.inf)
     fast_commit_t = np.maximum(fast_commit_t, ok_t[:, leader])
+    if force_slow is not None:
+        # Deadline-capped requests (SD.2.4): re-deadlined at the leader, so
+        # their hash never matches a fast quorum -- slow path only.
+        fast_commit_t = np.where(force_slow, np.inf, fast_commit_t)
 
     # --- slow path ------------------------------------------------------------
     # Leader appends everything eventually: late requests get re-deadlined and
@@ -399,7 +404,8 @@ def classify_commits(
 # ---------------------------------------------------------------------------
 # Fused epoch program (single device dispatch per epoch generation)
 # ---------------------------------------------------------------------------
-def _build_fused_step(tier: ComputeTier, f: int, use_kcls: bool):
+def _build_fused_step(tier: ComputeTier, f: int, use_kcls: bool,
+                      use_cap: bool = False):
     """Jit the stamp->dom->commit pipeline as one program for ``tier``.
 
     A jnp mirror of StampStage + DomStage + `classify_commits`, traced under
@@ -418,19 +424,39 @@ def _build_fused_step(tier: ComputeTier, f: int, use_kcls: bool):
 
     @jax.jit
     def step(t, c2p, owd_pr, drop_pr, reply_owd, alive, kcls, leader,
-             bound, fetch, batch_delay):
+             bound, fetch, batch_delay, cap, stamp_off=None, arr_off=None):
         N, R = owd_pr.shape
         # --- stamp: proxy stamping + deadline bounding ---------------------
+        # stamp_off: proxy clock-read error folded into the deadline value;
+        # arr_off: replica clock-read error shifting each receiver's local
+        # frame (admission compares + release instants). Clock-fault-free
+        # epochs omit both (None): the synced-clock program carries no
+        # offset operands at all, keeping the PR-3 hot path untaxed.
         stamp = t + c2p
         deadlines = stamp + bound
+        if stamp_off is not None:
+            deadlines = deadlines + stamp_off
         arrivals = jnp.where(drop_pr | ~alive[None, :], jnp.inf,
                              stamp[:, None] + owd_pr)
         reply = jnp.where(alive[None, :], reply_owd, jnp.inf)
-        # --- dom: watermark admission + release ----------------------------
-        admitted = tier.admit_traced(deadlines, arrivals)
+        # --- dom: watermark admission + release (receiver-local frames) ----
+        a_loc = arrivals if arr_off is None else arrivals + arr_off
+        admitted = tier.admit_traced(deadlines, a_loc)
         release = jnp.where(admitted,
-                            jnp.maximum(deadlines[:, None], arrivals),
+                            jnp.maximum(deadlines[:, None], a_loc),
                             jnp.inf)
+        if arr_off is not None:
+            release = release - arr_off
+        # --- deadline cap (SD.2.4): leader releases far-future deadlines
+        # at arrival; those requests are barred from the fast path. The
+        # program is specialized on use_cap (like use_kcls), so cap-free
+        # runs carry none of this masking work.
+        lead_col = jnp.arange(R)[None, :] == leader
+        if use_cap:
+            capped = jnp.isfinite(a_loc[:, leader]) \
+                & (deadlines > a_loc[:, leader] + cap)
+            admitted = admitted | (lead_col & capped[:, None])
+            release = jnp.where(lead_col & capped[:, None], arrivals, release)
         # --- commit: prefix hash-consistency vs the leader ------------------
         order = tier.order_traced(deadlines)
         if use_kcls:
@@ -460,6 +486,8 @@ def _build_fused_step(tier: ComputeTier, f: int, use_kcls: bool):
                   else jnp.full((N,), jnp.inf))
         fast_commit_t = jnp.where(jnp.isfinite(ok_lead), ok_kth, jnp.inf)
         fast_commit_t = jnp.maximum(fast_commit_t, ok_lead)
+        if use_cap:
+            fast_commit_t = jnp.where(capped, jnp.inf, fast_commit_t)
         # --- slow path ------------------------------------------------------
         arr_lead = arrivals[:, leader]
         leader_t = jnp.where(lead_admitted, release[:, leader], arr_lead)
@@ -468,7 +496,6 @@ def _build_fused_step(tier: ComputeTier, f: int, use_kcls: bool):
         have_t = jnp.where(jnp.isfinite(arrivals), arrivals,
                            leader_t[:, None] + fetch)
         slow_reply_t = jnp.maximum(sync_t, have_t) + reply
-        lead_col = jnp.arange(R)[None, :] == leader
         slow_reply_t = jnp.where(lead_col, leader_t[:, None] + reply,
                                  slow_reply_t)
         slow_kth = jnp.sort(slow_reply_t, axis=1)[:, sq - 1]
@@ -506,6 +533,13 @@ class EpochState:
     owd_pr: Optional[np.ndarray] = None     # [N, R] proxy->replica OWD
     drop_pr: Optional[np.ndarray] = None    # [N, R] multicast drops
     reply_owd: Optional[np.ndarray] = None  # [N, R] replica->proxy reply OWD
+    # Clock-fault offsets (scenario `ClockFault` events; None = synced).
+    # A faulty proxy clock shifts the deadline VALUE each of its messages
+    # carries; a faulty replica clock shifts when that replica *observes*
+    # arrivals/deadlines (its whole local frame), i.e. every admission
+    # comparison and release instant at that receiver.
+    clock_stamp_off: Optional[np.ndarray] = None  # [N] proxy-clock read error
+    clock_arr_off: Optional[np.ndarray] = None    # [N, R] replica-clock read error
     # StampStage
     bound: float = 0.0                  # DOM latency bound this epoch
     stamp: Optional[np.ndarray] = None  # [N] proxy stamp times
@@ -543,6 +577,11 @@ class SampleStage(Stage):
         if cfg.co_locate_proxies:       # Nezha-Non-Proxy: no client<->proxy hops
             s.c2p = np.zeros(N)
             s.p2c = np.zeros(N)
+        elif getattr(cfg, "client_proxy_lan", 0.0) > 0.0:
+            # WAN mode (S9.8): proxies live in the client's zone -- both
+            # client legs take the fixed LAN delay, not the WAN fabric.
+            s.c2p = np.full(N, cfg.client_proxy_lan)
+            s.p2c = np.full(N, cfg.client_proxy_lan)
         else:
             cnodes = eng.client_nodes(s.cid)
             c2p, drop_cp = eng.net.sample_owd_pairs(cnodes, s.proxy_nodes)
@@ -559,6 +598,17 @@ class SampleStage(Stage):
         s.owd_pr, s.drop_pr = eng.net.sample_owd_matrix(s.proxy_nodes, N, replicas)
         # replica -> proxy replies (symmetric path statistics)
         s.reply_owd, _ = eng.net.sample_owd_matrix(s.proxy_nodes, N, replicas)
+        # Clock-fault read errors (Appendix D): one N(mu, sigma) sample per
+        # proxy stamp and per (message, replica) observation, from a separate
+        # rng stream so fault-free runs stay bit-identical to before. Sampled
+        # here (not in StampStage) because the fused tiers skip StampStage.
+        if eng.clocks_faulty:
+            pids = np.asarray(s.cid) % cfg.n_proxies
+            s.clock_stamp_off = eng.rng.normal(eng.proxy_clock[pids, 0],
+                                               eng.proxy_clock[pids, 1])
+            s.clock_arr_off = eng.rng.normal(
+                eng.replica_clock[None, :, 0], eng.replica_clock[None, :, 1],
+                size=(N, n))
 
 
 class StampStage(Stage):
@@ -575,9 +625,13 @@ class StampStage(Stage):
 
     def run(self, s, eng):
         s.stamp = s.t + s.c2p
-        bound = eng.update_bound(s.owd_pr)
+        bound = eng.update_bound(eng.observed_owd_samples(s))
         s.bound = bound
         s.deadlines = s.stamp + bound
+        if s.clock_stamp_off is not None:
+            # The proxy stamps with its LOCAL clock: the deadline value each
+            # message carries absorbs the proxy's read error.
+            s.deadlines = s.deadlines + s.clock_stamp_off
         arrivals = s.stamp[:, None] + s.owd_pr
         arrivals[s.drop_pr] = np.inf
         arrivals[:, ~s.alive] = np.inf      # crashed replicas never receive
@@ -587,13 +641,22 @@ class StampStage(Stage):
 
 
 class DomStage(Stage):
-    """DOM admission + release through the compute tier (pow2-padded)."""
+    """DOM admission + release through the compute tier (pow2-padded).
+
+    Admission at receiver r happens in r's LOCAL clock frame: the early
+    buffer compares the carried deadline value against local reads. The
+    per-receiver watermark scan is frame-local, so shifting r's arrival
+    column by its clock-read error reproduces a skewed replica exactly;
+    release instants come back to true time by undoing the shift.
+    """
 
     name = "dom"
 
     def run(self, s, eng):
         N = s.deadlines.size
         R = eng.n
+        a_in = (s.arrivals if s.clock_arr_off is None
+                else s.arrivals + s.clock_arr_off)
         n_pad = _pow2_bucket(N) if eng.tier.pad_batches else N
         if n_pad != N:
             # Pad lanes carry +inf deadline AND +inf arrival: never admitted,
@@ -601,12 +664,15 @@ class DomStage(Stage):
             d = np.full(n_pad, np.inf)
             d[:N] = s.deadlines
             a = np.full((n_pad, R), np.inf)
-            a[:N] = s.arrivals
+            a[:N] = a_in
         else:
-            d, a = s.deadlines, s.arrivals
+            d, a = s.deadlines, a_in
         adm, rel = eng.tier.release_schedule(d, a)
         s.admitted = np.asarray(adm)[:N]
-        s.release = np.asarray(rel)[:N]
+        rel = np.asarray(rel)[:N]
+        if s.clock_arr_off is not None:
+            rel = rel - s.clock_arr_off      # local release -> true time
+        s.release = rel
 
 
 class FusedEpochStage(Stage):
@@ -626,7 +692,7 @@ class FusedEpochStage(Stage):
         from jax.experimental import enable_x64
 
         cfg = eng.cfg
-        bound = eng.update_bound(s.owd_pr)
+        bound = eng.update_bound(eng.observed_owd_samples(s))
         s.bound = bound
         N = s.t.size
         R = eng.n
@@ -652,11 +718,24 @@ class FusedEpochStage(Stage):
         kcls = np.full(n_pad, -1, np.int64)
         if s.kcls is not None:
             kcls[:N] = s.kcls
-        step = eng.tier.epoch_step(cfg.f, use_kcls=s.kcls is not None)
+        # clock-fault read errors: only faulty epochs carry the (dense)
+        # offset operands -- pad lanes stay zero; their inf attempt times
+        # keep them invisible either way
+        fault_kw = {}
+        if s.clock_stamp_off is not None:
+            stamp_off = np.zeros(n_pad)
+            stamp_off[:N] = s.clock_stamp_off
+            arr_off = np.zeros((n_pad, R))
+            arr_off[:N] = s.clock_arr_off
+            fault_kw = dict(stamp_off=stamp_off, arr_off=arr_off)
+        cap = float(getattr(cfg, "deadline_cap", 0.0) or 0.0)
+        step = eng.tier.epoch_step(cfg.f, use_kcls=s.kcls is not None,
+                                   use_cap=cap > 0.0)
         with enable_x64():
             out = step(t, c2p, owd, drop, reply,
                        np.asarray(s.alive, bool), kcls, s.leader,
-                       float(bound), fetch, float(cfg.leader_batch_delay))
+                       float(bound), fetch, float(cfg.leader_batch_delay),
+                       cap, **fault_kw)
             out = [np.asarray(o)[:N] for o in out]
         (s.stamp, s.deadlines, s.arrivals, s.admitted, s.release,
          s.commit_time, s.fast, s.committed) = out
@@ -670,13 +749,42 @@ class CommitStage(Stage):
 
     def run(self, s, eng):
         cfg = eng.cfg
+        force_slow = _apply_deadline_cap(s, eng)
         res = classify_commits(
             s.deadlines, s.arrivals, s.admitted, s.release, s.reply_owd,
             s.leader, cfg.f, leader_batch_delay=cfg.leader_batch_delay,
-            key_ids=s.kcls, order=eng.tier.deadline_order(s.deadlines))
+            key_ids=s.kcls, order=eng.tier.deadline_order(s.deadlines),
+            force_slow=force_slow)
         s.commit_time = res["commit_time"]
         s.fast = res["fast"]
         s.committed = res["committed"]
+
+
+def _apply_deadline_cap(s: EpochState, eng: "DomEngine") -> Optional[np.ndarray]:
+    """SD.2.4 deadline cap in the epoch approximation.
+
+    The event backend's leader pulls a deadline more than ``deadline_cap``
+    past its local arrival time back to ~the arrival instant; the request
+    then commits via the slow path (its re-deadlined position breaks hash
+    consistency with the followers). Here: release-at-arrival in the leader
+    column + a force-slow mask into `classify_commits`. Second-order effects
+    of the re-deadlining on OTHER requests' prefixes are not modeled.
+    Returns the capped mask (or None when the cap is off/never binds).
+    """
+    cap = float(getattr(eng.cfg, "deadline_cap", 0.0) or 0.0)
+    if cap <= 0.0:
+        return None
+    off_l = (s.clock_arr_off[:, s.leader]
+             if s.clock_arr_off is not None else 0.0)
+    a_loc_lead = s.arrivals[:, s.leader] + off_l
+    capped = np.isfinite(a_loc_lead) & (s.deadlines > a_loc_lead + cap)
+    if not capped.any():
+        return None
+    s.admitted = s.admitted.copy()
+    s.release = s.release.copy()
+    s.admitted[capped, s.leader] = True
+    s.release[capped, s.leader] = s.arrivals[capped, s.leader]
+    return capped
 
 
 class DeliverStage(Stage):
@@ -741,6 +849,43 @@ class DomEngine:
         self.stages = [s() for s in stages]
         self.owd_pool = np.zeros(0)     # sliding OWD sample pool (StampStage)
         self._bound_cache: Optional[float] = None
+        # Clock-fault state (scenario `ClockFault`/`ClockClear` events): per
+        # node, the (mu, sigma) of the N(mu, sigma) error added to every
+        # clock read. Separate rng stream so fault-free runs are untouched.
+        self.replica_clock = np.zeros((n_replicas, 2))
+        self.proxy_clock = np.zeros((getattr(cfg, "n_proxies", 1), 2))
+        self.rng = np.random.default_rng(getattr(cfg, "seed", 0) + 0xC10C)
+
+    # -- clock faults (Appendix D) -------------------------------------------
+    @property
+    def clocks_faulty(self) -> bool:
+        return bool(self.replica_clock.any() or self.proxy_clock.any())
+
+    def set_clock_fault(self, role: str, idx: int, mu: float,
+                        sigma: float) -> None:
+        """Install N(mu, sigma) read error on one node's clock (0, 0 clears).
+
+        ``role`` is "replica" or "proxy"; proxy indices wrap like
+        `NezhaCluster.clock_of_proxy` does (non-proxy mode reuses the
+        proxy-slot clocks)."""
+        if role == "replica":
+            if not (0 <= idx < self.n):
+                raise ValueError(f"replica id {idx} out of range [0, {self.n})")
+            self.replica_clock[idx] = (mu, sigma)
+        elif role == "proxy":
+            self.proxy_clock[idx % len(self.proxy_clock)] = (mu, sigma)
+        else:
+            raise ValueError(f"unknown clock role {role!r}")
+
+    def observed_owd_samples(self, s: "EpochState") -> np.ndarray:
+        """The OWD samples the proxies' estimators would OBSERVE: recv local
+        read minus send local read, i.e. true OWD perturbed by both ends'
+        clock errors. Faulty clocks poison the DOM bound pool exactly as the
+        event backend's sliding-window estimator is poisoned (negative /
+        inflated estimates fall back to the clamp, S4)."""
+        if s.clock_arr_off is None and s.clock_stamp_off is None:
+            return s.owd_pr
+        return s.owd_pr + s.clock_arr_off - s.clock_stamp_off[:, None]
 
     def update_bound(self, owd_new: np.ndarray) -> float:
         """Fold new OWD samples into the sliding pool; return the DOM bound.

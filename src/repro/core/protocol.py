@@ -273,6 +273,16 @@ class NezhaCluster(EventCluster):
         self._last_leader = leader_of_view(max(views), self.f)
         return self._last_leader
 
+    @property
+    def view_changes(self) -> int:
+        """Completed view changes so far (the highest view any replica holds;
+        view 0 is the initial configuration)."""
+        return max((r.view_id for r in self.replicas), default=0)
+
+    def client_cpu_utilization(self, client_id: int) -> float:
+        """CPU utilization of a client node (Fig 12's client-side cost)."""
+        return self.fabric.cpu_utilization(self._client_node(client_id))
+
     def committed_records(self):
         out = []
         for c in self.clients:
@@ -290,6 +300,7 @@ class NezhaCluster(EventCluster):
             events=self.scheduler.n_dispatched,
             messages=self.fabric.msg_count,
             leader_util=self.fabric.cpu_utilization(self.leader_id),
+            view_changes=self.view_changes,
         )
 
 

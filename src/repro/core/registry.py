@@ -56,6 +56,16 @@ def available_clusters() -> tuple[str, ...]:
     return tuple(_REGISTRY)
 
 
+def config_class(name: str) -> type:
+    """The config dataclass a registered cluster is constructed from --
+    the scenario layer builds environment-specific configs against it."""
+    entry = _REGISTRY.get(name)
+    if entry is None:
+        raise KeyError(
+            f"unknown cluster {name!r}; available: {', '.join(_REGISTRY)}")
+    return entry.config_cls
+
+
 def _coerce_config(config: Optional[CommonConfig], config_cls: type):
     if config is None:
         return config_cls()
@@ -74,12 +84,26 @@ def _coerce_config(config: Optional[CommonConfig], config_cls: type):
         f"expected {config_cls.__name__} or CommonConfig, got {type(config).__name__}")
 
 
-def make_cluster(name: str, config: Optional[CommonConfig] = None, **kw) -> Cluster:
-    """Construct any registered cluster behind the unified `Cluster` API."""
+def make_cluster(name: str, config: Optional[CommonConfig] = None, *,
+                 scenario=None, **kw) -> Cluster:
+    """Construct any registered cluster behind the unified `Cluster` API.
+
+    ``scenario`` (a `repro.sim.scenario.Scenario` or cataloged name) is the
+    declarative construction path: the config is built from the scenario's
+    environment + overrides via `repro.sim.scenario.build_config`. Note this
+    configures the cluster only -- `run_scenario` additionally schedules the
+    scenario's fault events and drives its workload.
+    """
     entry = _REGISTRY.get(name)
     if entry is None:
         raise KeyError(
             f"unknown cluster {name!r}; available: {', '.join(_REGISTRY)}")
+    if scenario is not None:
+        if config is not None:
+            raise TypeError("pass either config or scenario, not both")
+        from repro.sim.scenario import build_config
+
+        config = build_config(name, scenario)
     return entry.factory(_coerce_config(config, entry.config_cls), **kw)
 
 
@@ -108,4 +132,5 @@ for _name, _cls in PROTOCOLS.items():
     register_cluster(_name, BaselineConfig, _cls)
 
 
-__all__ = ["make_cluster", "register_cluster", "available_clusters", "ClusterEntry"]
+__all__ = ["make_cluster", "register_cluster", "available_clusters",
+           "config_class", "ClusterEntry"]

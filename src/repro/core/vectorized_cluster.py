@@ -59,6 +59,9 @@ class VectorizedConfig(CommonConfig):
 
     n_proxies: int = 1
     co_locate_proxies: bool = False     # Nezha-Non-Proxy: skip client<->proxy hops
+    client_proxy_lan: float = 0.0       # WAN mode (S9.8): proxies deploy in the
+    #   client's zone; client<->proxy hops take this fixed LAN delay instead
+    #   of the (WAN) fabric. 0 = disabled. Mirrors ClusterConfig's knob.
     dom: DomParams = field(default_factory=DomParams)
     commutative: bool = True            # S8.2: hash-conflict per key class only
     leader_batch_delay: float = 50e-6   # leader log-mod batching (slow path)
@@ -66,6 +69,9 @@ class VectorizedConfig(CommonConfig):
     epoch_duration: float = 10e-3       # batching granularity of the data plane
     view_change_latency: float = 2e-3   # commit stall charged on leader change
     max_retries: int = 16               # client retry cap per request
+    deadline_cap: float = 0.0           # SD.2.4: leader pulls deadlines more
+    #   than this past its local arrival back (0 = disabled); bounds holding
+    #   delay under bad clock sync at the cost of the fast path.
 
 
 class VectorizedNezhaCluster(Cluster):
@@ -92,8 +98,11 @@ class VectorizedNezhaCluster(Cluster):
         # Stable key->class interning: commutativity classes must reproduce
         # across runs/processes (builtin hash() varies with PYTHONHASHSEED).
         self._key_classes: dict[tuple, int] = {}
-        # timestamped fault events: (time, rid, alive_after)
-        self._fault_events: list[tuple[float, int, bool]] = []
+        # Timestamped fault events, applied at epoch boundaries. Payloads:
+        #   ("alive", rid, alive_after)            crash/relaunch
+        #   ("clock", role, idx, mu, sigma)        clock fault/clear
+        #   ("net", NetworkParams)                 network-regime shift
+        self._fault_events: list[tuple[float, tuple]] = []
         self._last_leader: int = 0
         self.epoch_leaders: list[int] = []   # -1 marks a total-outage epoch
         # accumulated results across epochs
@@ -160,19 +169,50 @@ class VectorizedNezhaCluster(Cluster):
     def _add_fault(self, t: float, rid: int, alive: bool) -> None:
         if not (0 <= rid < self.n):
             raise ValueError(f"replica id {rid} out of range [0, {self.n})")
+        self._add_event(t, ("alive", int(rid), alive))
+
+    def _add_event(self, t: float, payload: tuple) -> None:
         # insort_right keeps same-time events in insertion order, as the old
         # stable whole-list re-sort did, at O(log n) compares + one shift.
-        bisect.insort(self._fault_events, (float(t), int(rid), alive),
+        bisect.insort(self._fault_events, (float(t), payload),
                       key=lambda e: e[0])
         self._apply_faults(self._now)
 
     def _apply_faults(self, up_to: float) -> None:
         while self._fault_events and self._fault_events[0][0] <= up_to:
-            _, rid, alive = self._fault_events.pop(0)
-            self._alive[rid] = alive
+            _, payload = self._fault_events.pop(0)
+            if payload[0] == "alive":
+                self._alive[payload[1]] = payload[2]
+            elif payload[0] == "clock":
+                _, role, idx, mu, sigma = payload
+                self.engine.set_clock_fault(role, idx, mu, sigma)
+            elif payload[0] == "net":
+                self.net.set_params(payload[1])
 
     def _next_fault_time(self) -> float:
         return self._fault_events[0][0] if self._fault_events else np.inf
+
+    def schedule_fault(self, event) -> bool:
+        """Scenario fault-event application (see `Cluster.schedule_fault`).
+
+        Every event kind becomes an epoch-boundary event: the epoch loop
+        splits at its timestamp, so liveness, clock-error state, and the
+        network regime are constant within an epoch and change across them.
+        """
+        kind = getattr(event, "kind", None)
+        if kind in ("crash", "relaunch"):
+            self._add_fault(event.t, event.rid, alive=kind == "relaunch")
+            return True
+        if kind in ("clock-fault", "clock-clear"):
+            mu, sigma = ((event.mu, event.sigma) if kind == "clock-fault"
+                         else (0.0, 0.0))
+            for role, idx in event.targets(self.n, self.cfg.n_proxies):
+                self._add_event(event.t, ("clock", role, idx, mu, sigma))
+            return True
+        if kind == "net-shift":
+            self._add_event(event.t, ("net", event.params))
+            return True
+        return False
 
     # -- the epoch loop ----------------------------------------------------------
     def run_for(self, duration: float) -> None:

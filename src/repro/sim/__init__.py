@@ -7,7 +7,20 @@ shares the same statistical network model.
 """
 from repro.sim.events import Event, EventScheduler
 from repro.sim.network import CloudNetwork, NetworkParams, lis_length, reordering_score
-from repro.sim.workload import ClosedLoopWorkload, OpenLoopWorkload
+from repro.sim.scenario import (
+    Crash,
+    ClockClear,
+    ClockFault,
+    Environment,
+    NetShift,
+    Relaunch,
+    Scenario,
+    ScenarioResult,
+    available_scenarios,
+    get_scenario,
+    run_scenario,
+)
+from repro.sim.workload import ClosedLoopWorkload, OpenLoopWorkload, Workload
 
 __all__ = [
     "Event",
@@ -18,4 +31,16 @@ __all__ = [
     "reordering_score",
     "ClosedLoopWorkload",
     "OpenLoopWorkload",
+    "Workload",
+    "Environment",
+    "Scenario",
+    "ScenarioResult",
+    "Crash",
+    "Relaunch",
+    "ClockFault",
+    "ClockClear",
+    "NetShift",
+    "available_scenarios",
+    "get_scenario",
+    "run_scenario",
 ]

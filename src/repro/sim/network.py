@@ -36,11 +36,22 @@ class NetworkParams:
     path_offset_sigma: float = 8e-6    # per-(src,dst) persistent offset spread
 
     def scaled(self, factor: float) -> "NetworkParams":
-        """Return params with the variable components scaled (for WAN etc.)."""
+        """Return params with the variable components scaled (for WAN etc.).
+
+        Every *delay* component scales together: the fixed propagation term,
+        the lognormal median, burst excursions, AND the per-path persistent
+        offset spread -- the root cause of cross-path reordering (S3). An
+        earlier version left ``path_offset_sigma`` at its intra-zone value,
+        so scaled WAN-like profiles under-reordered at matched (rate x delay)
+        operating points; tests/test_scenario.py pins the scale invariance of
+        `reordering_score`. Probabilities (``burst_prob``, ``drop_prob``) are
+        rates per message, not delays, and are left alone.
+        """
         p = NetworkParams(**self.__dict__)
         p.base_owd *= factor
         p.lognorm_mu = float(np.log(np.exp(self.lognorm_mu) * factor))
         p.burst_scale *= factor
+        p.path_offset_sigma *= factor
         return p
 
 
@@ -76,6 +87,17 @@ class CloudNetwork:
         self._inflight = np.zeros((n_nodes, n_nodes), dtype=np.int64)
         self.n_sent = 0
         self.n_dropped = 0
+
+    def set_params(self, params: NetworkParams) -> None:
+        """Switch to a new statistical regime mid-run (scenario `NetShift`).
+
+        Per-path persistent offsets are re-drawn from the new spread --
+        a regime shift reroutes paths, it does not rescale the old routes.
+        """
+        self.params = params
+        self._path_offset = self.rng.normal(
+            0.0, params.path_offset_sigma, size=(self.n, self.n)
+        ).clip(min=0.0)
 
     # -- scalar API (event-driven simulator) --------------------------------
     def sample_owd(self, src: int, dst: int) -> Optional[float]:

@@ -1,0 +1,544 @@
+"""Scenario API: declarative environment + fault-schedule + workload specs.
+
+The paper's headline claim is that Nezha's edge survives hostile cloud
+conditions -- bursty reordering-prone paths (S3), WAN deployments (Fig 13),
+replica failure/recovery (Figs 14-15), and badly synchronized clocks
+(Appendix D). A `Scenario` captures one such condition declaratively:
+
+  environment   a named network profile (``gcp-intra-zone``, ``multi-zone``,
+                ``wan``, ``lossy``, ``congested``) plus a clock regime
+                (``synced``, ``drifty``, ``skewed``) and environment-specific
+                protocol tuning (e.g. WAN timeouts);
+  faults        a typed, timestamped schedule of `FaultEvent`s -- `Crash`,
+                `Relaunch`, `ClockFault`, `ClockClear`, `NetShift`;
+  workload      a `repro.sim.workload.Workload` (open/closed loop, rate,
+                duration, key skew, read ratio).
+
+One entry point runs any scenario on any registered backend:
+
+    from repro.sim.scenario import run_scenario
+    result = run_scenario("nezha-vectorized", "leader-crash", tier="jit")
+
+`run_scenario` builds the protocol's config from the scenario (environment
+fields + overrides that the protocol's config class actually declares),
+schedules the fault events through the unified `Cluster.schedule_fault`
+surface, drives the workload, and returns a `ScenarioResult` with one fixed
+summary schema across every backend and tier. Fault events a backend cannot
+model (e.g. replica crashes on the baselines) are skipped and counted in
+``ScenarioResult.skipped_faults`` instead of raising mid-run.
+
+The named catalog (`SCENARIOS`, `available_scenarios()`) covers the paper's
+experiment surface: intra-zone baselines, multi-zone/WAN/lossy/congested
+regimes, leader crash + recovery (Figs 14-15), and the Appendix D clock-fault
+cases (skewed leader / skewed proxies, capped and uncapped).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field, replace
+from typing import Any, Optional, Union
+
+import numpy as np
+
+from repro.core.clock import ClockParams
+from repro.sim.network import WAN_PARAMS, NetworkParams
+from repro.sim.workload import Workload, WorkloadDriver
+
+# ---------------------------------------------------------------------------
+# Environments: named network profiles x clock regimes
+# ---------------------------------------------------------------------------
+NET_PROFILES: dict[str, NetworkParams] = {
+    # Intra-zone Google Cloud (paper S9.1): the calibrated default fabric.
+    "gcp-intra-zone": NetworkParams(),
+    # Zones in one region: every delay component scaled together (S9.8's
+    # multi-zone placement); `scaled` now also scales the per-path offset
+    # spread, the root cause of cross-path reordering.
+    "multi-zone": NetworkParams().scaled(6.0),
+    # Cross-region WAN (Fig 13): tens-of-ms OWDs, ms-scale path spread.
+    "wan": WAN_PARAMS,
+    # Lossy fabric: two orders of magnitude more drops than intra-zone.
+    "lossy": NetworkParams(drop_prob=1e-2),
+    # Congested fabric: frequent burst excursions + strong queueing.
+    "congested": NetworkParams(burst_prob=0.25, burst_scale=500e-6,
+                               queue_us_per_inflight=1.5e-6),
+}
+
+CLOCK_REGIMES: dict[str, ClockParams] = {
+    # Huygens steady state (paper S2.1): tens-of-ns residuals.
+    "synced": ClockParams(),
+    # Rarely resynchronized crystals: drift dominates between corrections.
+    "drifty": ClockParams(drift_ppm_sigma=50.0, resync_interval=10.0),
+    # Badly synchronized clocks (Appendix D regime): us-scale residuals.
+    "skewed": ClockParams(residual_sigma=5e-6),
+}
+
+
+@dataclass(frozen=True)
+class Environment:
+    """Deployment conditions: fabric statistics + clock sync quality.
+
+    ``overrides`` carries environment-specific protocol tuning (timeouts,
+    DOM clamp, batching cadence...). Each override is applied to a protocol's
+    config only if that config class declares the field (directly, or on its
+    nested ``replica``/``dom`` params) -- so one environment parameterizes
+    Nezha, the baselines, and the vectorized tiers without leaking knobs
+    across families.
+    """
+
+    name: str
+    net_profile: str = "gcp-intra-zone"
+    clock_regime: str = "synced"
+    overrides: dict = field(default_factory=dict)
+    description: str = ""
+
+    @property
+    def net(self) -> NetworkParams:
+        return NET_PROFILES[self.net_profile]
+
+    @property
+    def clock(self) -> ClockParams:
+        return CLOCK_REGIMES[self.clock_regime]
+
+
+# WAN tuning mirrors Fig 13's deployment: proxies co-located with clients
+# (LAN hop), second-scale client timeout, ms-scale DOM clamp and batching.
+_WAN_DOM = dict(percentile=50.0, window=200, beta=3.0, clamp_d=80e-3,
+                initial_owd=40e-3)
+
+ENVIRONMENTS: dict[str, Environment] = {
+    e.name: e for e in (
+        Environment("gcp-intra-zone",
+                    description="calibrated intra-zone GCP fabric, synced clocks"),
+        Environment("multi-zone", net_profile="multi-zone",
+                    overrides=dict(client_timeout=40e-3),
+                    description="zones in one region: 6x delay + path spread"),
+        Environment("wan", net_profile="wan",
+                    overrides=dict(
+                        client_timeout=400e-3,
+                        dom=_WAN_DOM,
+                        batch_interval=2e-3, status_interval=10e-3,
+                        commit_interval=50e-3, heartbeat_timeout=500e-3,
+                        client_proxy_lan=150e-6),
+                    description="Fig 13: replicas across regions, proxies in "
+                                "the client zone"),
+        Environment("lossy", net_profile="lossy",
+                    description="1% message loss"),
+        Environment("congested", net_profile="congested",
+                    description="bursty, queue-heavy fabric"),
+        Environment("drifty-clocks", clock_regime="drifty",
+                    description="intra-zone fabric, rarely resynced clocks"),
+        Environment("skewed-clocks", clock_regime="skewed",
+                    description="intra-zone fabric, us-scale sync residuals"),
+    )
+}
+
+
+# ---------------------------------------------------------------------------
+# Fault events: typed, timestamped
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class FaultEvent:
+    """A timestamped fault. ``kind`` lets backends dispatch without importing
+    this module (no core -> sim.scenario dependency)."""
+
+    t: float
+    kind = "abstract"
+
+
+@dataclass(frozen=True)
+class Crash(FaultEvent):
+    rid: int = 0
+    kind = "crash"
+
+
+@dataclass(frozen=True)
+class Relaunch(FaultEvent):
+    rid: int = 0
+    kind = "relaunch"
+
+
+@dataclass(frozen=True)
+class ClockFault(FaultEvent):
+    """Inject N(mu, sigma) into clock reads of ``who`` from time ``t`` on
+    (Appendix D). ``who`` selects the clocks:
+
+      "leader"        the initial leader replica (replica 0)
+      "replica:<i>"   replica i
+      "proxy:<i>"     proxy i
+      "proxies"       every proxy
+      "replicas"      every replica
+
+    Backends route this through the documented low-level hook
+    (`repro.core.clock.Clock.inject_fault` on the event backend; per-node
+    stamp/arrival clock offsets in the vectorized engine).
+    """
+
+    who: str = "leader"
+    mu: float = 0.0
+    sigma: float = 0.0
+    kind = "clock-fault"
+
+    def targets(self, n_replicas: int, n_proxies: int) -> list[tuple[str, int]]:
+        return _clock_targets(self.who, n_replicas, n_proxies)
+
+
+@dataclass(frozen=True)
+class ClockClear(FaultEvent):
+    """Remove any injected clock fault from ``who`` (same selector syntax)."""
+
+    who: str = "leader"
+    kind = "clock-clear"
+
+    def targets(self, n_replicas: int, n_proxies: int) -> list[tuple[str, int]]:
+        return _clock_targets(self.who, n_replicas, n_proxies)
+
+
+@dataclass(frozen=True)
+class NetShift(FaultEvent):
+    """Switch the fabric to another named network profile at time ``t``
+    (e.g. an intra-zone deployment degrading to 'congested')."""
+
+    profile: str = "gcp-intra-zone"
+    kind = "net-shift"
+
+    @property
+    def params(self) -> NetworkParams:
+        return NET_PROFILES[self.profile]
+
+
+def _clock_targets(who: str, n_replicas: int, n_proxies: int) -> list[tuple[str, int]]:
+    if who == "leader":
+        return [("replica", 0)]
+    if who == "replicas":
+        return [("replica", i) for i in range(n_replicas)]
+    if who == "proxies":
+        return [("proxy", i) for i in range(n_proxies)]
+    role, _, idx = who.partition(":")
+    if role in ("replica", "proxy") and idx.isdigit():
+        # Range-checked here, where the cluster's shape is known: an
+        # out-of-range index must fail at schedule time on EVERY backend,
+        # not silently fault a neighboring node's clock mid-run.
+        n = n_replicas if role == "replica" else n_proxies
+        if int(idx) >= n:
+            raise ValueError(
+                f"clock-fault selector {who!r} out of range: "
+                f"cluster has {n} {role} node(s)")
+        return [(role, int(idx))]
+    raise ValueError(
+        f"bad clock-fault selector {who!r}; expected 'leader', 'replicas', "
+        "'proxies', 'replica:<i>' or 'proxy:<i>'")
+
+
+# ---------------------------------------------------------------------------
+# Scenario + result
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class Scenario:
+    """One declarative experiment: environment x fault schedule x workload.
+
+    ``overrides`` extends/overrides the environment's protocol tuning (same
+    field-matching rules); ``f``/``n_clients``/``seed`` parameterize the
+    shared `CommonConfig` core.
+    """
+
+    name: str
+    environment: Union[str, Environment] = "gcp-intra-zone"
+    faults: tuple = ()
+    workload: Workload = field(default_factory=Workload)
+    f: int = 1
+    n_clients: int = 10
+    seed: int = 0
+    overrides: dict = field(default_factory=dict)
+    description: str = ""
+
+    @property
+    def env(self) -> Environment:
+        if isinstance(self.environment, Environment):
+            return self.environment
+        return ENVIRONMENTS[self.environment]
+
+
+# The one result schema every (protocol x backend x tier x scenario) run
+# returns; tests/test_cluster_api.py enforces it for the whole registry.
+SCENARIO_RESULT_KEYS = (
+    "protocol", "backend", "tier", "scenario", "n_requests", "committed",
+    "fast_commit_ratio", "median_latency", "p90_latency", "mean_latency",
+    "throughput", "epochs", "view_changes", "applied_faults", "skipped_faults",
+)
+
+
+@dataclass
+class ScenarioResult:
+    """Uniform scenario-run summary. ``tier`` is the compute tier for the
+    vectorized backend and ``"event"`` for discrete-event backends;
+    ``epochs`` is 0 on event backends (no epoch approximation); ``raw`` keeps
+    the backend's full `summary()` dict for backend-specific extras.
+
+    ``applied_faults`` counts events the backend ACCEPTED AND SCHEDULED,
+    ``skipped_faults`` those it cannot model. Acceptance does not imply
+    firing: an event stamped past the run horizon is counted applied but
+    never executes -- cataloged scenarios always place fault times inside
+    the horizon (enforced by tests/test_scenario.py)."""
+
+    protocol: str
+    backend: str
+    tier: str
+    scenario: str
+    n_requests: int
+    committed: int
+    fast_commit_ratio: float
+    median_latency: float
+    p90_latency: float
+    mean_latency: float
+    throughput: float
+    epochs: int
+    view_changes: int
+    applied_faults: int
+    skipped_faults: int
+    raw: dict = field(default_factory=dict, repr=False)
+
+    @classmethod
+    def from_summary(cls, scenario: Scenario, summary: dict,
+                     applied_faults: int, skipped_faults: int) -> "ScenarioResult":
+        return cls(
+            protocol=summary["protocol"],
+            backend=summary["backend"],
+            tier=summary.get("tier", "event"),
+            scenario=scenario.name,
+            n_requests=int(summary["n_requests"]),
+            committed=int(summary["committed"]),
+            fast_commit_ratio=float(summary["fast_commit_ratio"]),
+            median_latency=float(summary["median_latency"]),
+            p90_latency=float(summary["p90_latency"]),
+            mean_latency=float(summary["mean_latency"]),
+            throughput=float(summary.get("throughput", float("nan"))),
+            epochs=int(summary.get("epochs", 0)),
+            view_changes=int(summary.get("view_changes", 0)),
+            applied_faults=applied_faults,
+            skipped_faults=skipped_faults,
+            raw=dict(summary),
+        )
+
+    def as_dict(self) -> dict:
+        return {k: getattr(self, k) for k in SCENARIO_RESULT_KEYS}
+
+
+# ---------------------------------------------------------------------------
+# Scenario catalog
+# ---------------------------------------------------------------------------
+# The clock-fault family shares one workload so Appendix D's latency ordering
+# (faulty > baseline; capped < uncapped) is an apples-to-apples comparison
+# against the "intra-zone" baseline scenario.
+_STD_WORKLOAD = Workload(mode="open", rate_per_client=2000.0, duration=0.15,
+                         warmup=0.02, drain=0.1, seed=0)
+_CLOCK_MU = 300e-6          # Appendix D: |offset| = 300us, sigma = 30us
+_CLOCK_SIGMA = 30e-6
+_CAP = 50e-6                # SD.2.4 deadline cap
+
+
+def _clock_scenario(name: str, who: str, mu: float, cap: float = 0.0,
+                    description: str = "") -> Scenario:
+    over: dict[str, Any] = {"n_proxies": 2}
+    if cap > 0.0:
+        over["deadline_cap"] = cap
+    return Scenario(
+        name, environment="gcp-intra-zone",
+        faults=(ClockFault(0.0, who=who, mu=mu, sigma=_CLOCK_SIGMA),),
+        workload=_STD_WORKLOAD, overrides=over, description=description)
+
+
+SCENARIOS: dict[str, Scenario] = {
+    s.name: s for s in (
+        Scenario("intra-zone", workload=_STD_WORKLOAD,
+                 overrides={"n_proxies": 2},
+                 description="baseline: intra-zone fabric, open loop "
+                             "(also Appendix D's no-fault reference)"),
+        Scenario("intra-zone-closed",
+                 workload=Workload(mode="closed", duration=0.15, drain=0.1),
+                 description="baseline: closed loop, one lane per client"),
+        Scenario("multi-zone", environment="multi-zone",
+                 workload=Workload(mode="open", rate_per_client=1000.0,
+                                   duration=0.2, warmup=0.02, drain=0.15),
+                 description="multi-zone placement: 6x delays + path spread"),
+        Scenario("wan", environment="wan",
+                 workload=Workload(mode="open", rate_per_client=200.0,
+                                   duration=1.5, warmup=0.1, drain=0.5),
+                 overrides={"n_proxies": 2},
+                 description="Fig 13: cross-region WAN, proxies with clients"),
+        Scenario("lossy", environment="lossy", workload=_STD_WORKLOAD,
+                 description="1% loss: retries + quorum slack do the work"),
+        Scenario("congested", environment="congested",
+                 workload=Workload(mode="open", rate_per_client=1000.0,
+                                   duration=0.15, warmup=0.02, drain=0.1),
+                 description="bursty congested fabric (S3's reordering regime)"),
+        # The crash family declares the paper's Fig 14/15 workload verbatim:
+        # uniform write-only traffic (read_ratio/skew 0). fig14_15 sweeps the
+        # same scenario up to saturation; reads under a saturated view change
+        # exercise an (event-backend) recovery slow path far beyond the
+        # figure's scope.
+        Scenario("leader-crash",
+                 faults=(Crash(0.15, rid=0),),
+                 workload=Workload(mode="open", rate_per_client=2000.0,
+                                   duration=0.4, warmup=0.02, drain=0.2,
+                                   read_ratio=0.0, skew=0.0),
+                 overrides={"n_proxies": 2},
+                 description="Fig 14: leader dies mid-run; view change + "
+                             "slow-path continuation"),
+        Scenario("crash-recovery",
+                 faults=(Crash(0.15, rid=0), Relaunch(0.3, rid=0)),
+                 workload=Workload(mode="open", rate_per_client=2000.0,
+                                   duration=0.5, warmup=0.02, drain=0.2,
+                                   read_ratio=0.0, skew=0.0),
+                 overrides={"n_proxies": 2},
+                 description="Fig 15: crash, then the replica rejoins"),
+        _clock_scenario("clock-skew-leader", "leader", -_CLOCK_MU,
+                        description="Appendix D: leader clock 300us slow"),
+        _clock_scenario("clock-skew-leader-capped", "leader", -_CLOCK_MU,
+                        cap=_CAP,
+                        description="Appendix D: slow leader + deadline cap"),
+        _clock_scenario("clock-skew-follower", "replica:1", _CLOCK_MU,
+                        description="Appendix D: one follower 300us fast"),
+        _clock_scenario("clock-skew-proxy", "proxies", _CLOCK_MU,
+                        description="Appendix D: proxy clocks 300us fast"),
+        _clock_scenario("clock-skew-proxy-capped", "proxies", _CLOCK_MU,
+                        cap=_CAP,
+                        description="Appendix D: fast proxies + deadline cap"),
+    )
+}
+
+
+def available_scenarios() -> tuple[str, ...]:
+    return tuple(SCENARIOS)
+
+
+def get_scenario(name: str) -> Scenario:
+    try:
+        return SCENARIOS[name]
+    except KeyError:
+        raise KeyError(f"unknown scenario {name!r}; "
+                       f"available: {', '.join(SCENARIOS)}") from None
+
+
+def resolve_scenario(scenario: Union[str, Scenario]) -> Scenario:
+    return get_scenario(scenario) if isinstance(scenario, str) else scenario
+
+
+# ---------------------------------------------------------------------------
+# Scenario -> config construction
+# ---------------------------------------------------------------------------
+def _apply_override(cfg, key: str, value) -> bool:
+    """Apply one override to ``cfg`` (a config dataclass instance).
+
+    Resolution order: a directly-declared field; else the same-named field on
+    the nested ``replica`` params; else on the nested ``dom`` params. A
+    ``dom`` override given as a plain dict is merged into the target's own
+    DomParams class (the replica's params, if any, track the same object via
+    `ClusterConfig.__post_init__`-style sharing). Returns False when the
+    config family declares no such knob (cross-family overrides must not
+    leak, mirroring `_coerce_config`'s promotion rule).
+    """
+    names = {f.name for f in dataclasses.fields(cfg)}
+    if key in names:
+        if key == "dom" and isinstance(value, dict):
+            value = replace(getattr(cfg, "dom"), **value)
+        setattr(cfg, key, value)
+        return True
+    for nested in ("replica", "dom"):
+        if nested not in names:
+            continue
+        obj = getattr(cfg, nested)
+        if obj is not None and dataclasses.is_dataclass(obj) and \
+                key in {f.name for f in dataclasses.fields(obj)}:
+            setattr(obj, key, value)
+            return True
+    return False
+
+
+def build_config(protocol_name: str, scenario: Union[str, Scenario]):
+    """The Scenario-driven construction path for `make_cluster`.
+
+    Builds ``protocol_name``'s own config class from the scenario: the shared
+    `CommonConfig` core (f, clients, seed) plus the environment's fabric and
+    clock regime, then the environment + scenario overrides -- each applied
+    only where the config family declares the knob.
+    """
+    from repro.core.registry import config_class
+
+    sc = resolve_scenario(scenario)
+    env = sc.env
+    cls = config_class(protocol_name)
+    cfg = cls(f=sc.f, n_clients=sc.n_clients, seed=sc.seed,
+              net=env.net, clock=env.clock)
+    merged = {**env.overrides, **sc.overrides}
+    # `dom` first: later flat overrides (e.g. a scenario's deadline_cap) may
+    # target the replica/dom params the dom override just installed.
+    for key in sorted(merged, key=lambda k: k != "dom"):
+        _apply_override(cfg, key, merged[key])
+    if "dom" in merged and "replica" in {f.name for f in dataclasses.fields(cfg)} \
+            and getattr(cfg, "replica", None) is not None:
+        # Keep the replica-side DOM params in lockstep with the sender side.
+        cfg.replica.dom = cfg.dom
+    return cfg
+
+
+def _registry_name(protocol_name: str, tier: Optional[str]) -> str:
+    if tier is None:
+        return protocol_name
+    base = "nezha-vectorized"
+    resolved = base if tier == "numpy" else f"{base}-{tier}"
+    if protocol_name not in (base, resolved):
+        # Reject both non-vectorized protocols AND a tier-suffixed name that
+        # contradicts the explicit tier (e.g. '-pallas' with tier='jit') --
+        # silently swapping backends would mislabel results.
+        raise ValueError(
+            f"tier={tier!r} conflicts with protocol {protocol_name!r}; "
+            f"pass '{base}' (or the matching tier-suffixed name)")
+    return resolved
+
+
+def make_scenario_cluster(protocol_name: str, scenario: Union[str, Scenario],
+                          *, tier: Optional[str] = None, config=None, **kw):
+    """Build ``protocol_name`` configured for ``scenario`` with the fault
+    schedule applied. Returns ``(cluster, scenario, skipped_faults)`` --
+    callers that need custom probing (benchmarks/figs.py's recovery
+    timelines) drive the cluster themselves; `run_scenario` is the one-call
+    path."""
+    from repro.core.registry import make_cluster
+
+    sc = resolve_scenario(scenario)
+    name = _registry_name(protocol_name, tier)
+    cfg = config if config is not None else build_config(name, sc)
+    cluster = make_cluster(name, cfg, **kw)
+    skipped = []
+    for ev in sorted(sc.faults, key=lambda e: e.t):
+        if not cluster.schedule_fault(ev):
+            skipped.append(ev)
+    return cluster, sc, skipped
+
+
+def run_scenario(protocol_name: str, scenario: Union[str, Scenario], *,
+                 tier: Optional[str] = None, config=None,
+                 **kw) -> ScenarioResult:
+    """Run one scenario on one backend; works for every registry entry.
+
+    ``tier`` pins the vectorized compute tier (``numpy``/``jit``/``pallas``);
+    ``config`` overrides the scenario-built config entirely (escape hatch);
+    extra keywords go to the cluster constructor. Fault events the backend
+    cannot model are skipped and counted in the result rather than raising.
+    """
+    cluster, sc, skipped = make_scenario_cluster(
+        protocol_name, scenario, tier=tier, config=config, **kw)
+    summary = WorkloadDriver(sc.workload).run(cluster)
+    n_faults = len(sc.faults)
+    return ScenarioResult.from_summary(
+        sc, summary, applied_faults=n_faults - len(skipped),
+        skipped_faults=len(skipped))
+
+
+__all__ = [
+    "NET_PROFILES", "CLOCK_REGIMES", "ENVIRONMENTS", "Environment",
+    "FaultEvent", "Crash", "Relaunch", "ClockFault", "ClockClear", "NetShift",
+    "Scenario", "ScenarioResult", "SCENARIO_RESULT_KEYS",
+    "SCENARIOS", "available_scenarios", "get_scenario", "resolve_scenario",
+    "build_config", "make_scenario_cluster", "run_scenario",
+]

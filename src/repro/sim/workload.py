@@ -175,17 +175,25 @@ class WorkloadDriver:
         op = OpType.READ if rng.random() < w.read_ratio else OpType.WRITE
         return key, op
 
-    def run(self, cluster) -> dict:
+    def inject_open_loop(self, cluster) -> None:
+        """Pre-schedule the open-loop arrivals (Poisson per client, zipf keys,
+        read/write mix) without running the cluster. `run` is built on this;
+        callers that need custom stepping (e.g. the recovery-timeline probe
+        in benchmarks/figs.py) inject here and drive `run_for` themselves."""
         w = self.workload
         rng = np.random.default_rng(w.seed)
+        for cid in range(cluster.n_clients):
+            t = w.warmup
+            while t < w.duration:
+                t += rng.exponential(1.0 / w.rate_per_client)
+                key, op = self._next_op(rng)
+                cluster.submit_at(t, cid, keys=(key,), op=op)
+
+    def run(self, cluster) -> dict:
+        w = self.workload
         cluster.start()
         if w.mode == "open":
-            for cid in range(cluster.n_clients):
-                t = w.warmup
-                while t < w.duration:
-                    t += rng.exponential(1.0 / w.rate_per_client)
-                    key, op = self._next_op(rng)
-                    cluster.submit_at(t, cid, keys=(key,), op=op)
+            self.inject_open_loop(cluster)
             cluster.run_for(w.duration + w.drain)
             s = cluster.summary()
             s["throughput"] = s["committed"] / max(w.duration - w.warmup, 1e-9)
@@ -195,6 +203,7 @@ class WorkloadDriver:
                 raise ValueError(
                     f"{type(cluster).__name__} cannot run closed-loop "
                     "workloads; use mode='open'")
+            rng = np.random.default_rng(w.seed)
 
             def on_commit(cid, rid):
                 if cluster.now < w.duration:

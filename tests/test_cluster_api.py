@@ -165,6 +165,44 @@ def test_vectorized_agrees_with_event_backend():
     assert abs(vec["fast_commit_ratio"] - ev["fast_commit_ratio"]) < 0.25
 
 
+@pytest.mark.parametrize("name", available_clusters())
+def test_every_registry_entry_runs_a_cataloged_scenario(name):
+    """Scenario-API conformance: every registry entry executes at least one
+    cataloged scenario through `run_scenario` and returns a schema-valid
+    `ScenarioResult`. The cataloged 'intra-zone' scenario is run with a
+    shortened workload (same environment and fault schedule) to keep the
+    tier-1 suite fast."""
+    from dataclasses import replace
+
+    from repro.sim.scenario import (
+        SCENARIO_RESULT_KEYS,
+        ScenarioResult,
+        get_scenario,
+        run_scenario,
+    )
+
+    sc = replace(get_scenario("intra-zone"), n_clients=2, workload=SHORT)
+    r = run_scenario(name, sc)
+    assert isinstance(r, ScenarioResult)
+    d = r.as_dict()
+    assert set(d) == set(SCENARIO_RESULT_KEYS)
+    assert d["scenario"] == "intra-zone"
+    assert d["protocol"] and isinstance(d["protocol"], str)
+    assert d["backend"] in ("event", "vectorized")
+    if name.startswith("nezha-vectorized"):
+        assert d["tier"] in ("numpy", "jit", "pallas")
+        assert d["epochs"] > 0
+    else:
+        assert d["tier"] == "event"
+    assert 0 < d["committed"] <= d["n_requests"]
+    assert 0.0 <= d["fast_commit_ratio"] <= 1.0
+    assert np.isfinite(d["median_latency"]) and d["median_latency"] > 0
+    assert d["p90_latency"] >= d["median_latency"]
+    assert d["throughput"] > 0
+    assert d["applied_faults"] == 0 and d["skipped_faults"] == 0
+    assert d["view_changes"] == 0
+
+
 def test_vectorized_scales_to_large_batches():
     """The point of the jit path: 50K requests in one batch, quickly."""
     cl = make_cluster("nezha-vectorized", CommonConfig(f=1, n_clients=10, seed=1))

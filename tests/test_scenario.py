@@ -1,0 +1,402 @@
+"""Scenario API (repro.sim.scenario): catalog integrity, scenario-driven
+config construction, typed fault-event application on both backends, the
+Appendix D clock-fault latency ordering, and tier parity under clock faults.
+"""
+from dataclasses import replace
+
+import numpy as np
+import pytest
+
+from repro.core import ClusterConfig, CommonConfig, make_cluster
+from repro.core.baselines import BaselineConfig
+from repro.core.vectorized_cluster import VectorizedConfig
+from repro.sim.network import CloudNetwork, NetworkParams, reordering_score
+from repro.sim.scenario import (
+    CLOCK_REGIMES,
+    ENVIRONMENTS,
+    NET_PROFILES,
+    SCENARIOS,
+    ClockClear,
+    ClockFault,
+    Crash,
+    NetShift,
+    Relaunch,
+    Scenario,
+    ScenarioResult,
+    available_scenarios,
+    build_config,
+    get_scenario,
+    run_scenario,
+)
+from repro.sim.workload import Workload
+
+# Shrunk clock-fault workload: same environment/faults as the catalog, a
+# shorter horizon so event-backend runs stay cheap in the tier-1 suite.
+_SHORT_CLOCK = Workload(mode="open", rate_per_client=2000.0, duration=0.1,
+                        warmup=0.02, drain=0.08, seed=0)
+
+
+def _short(name: str, n_clients: int = 6) -> Scenario:
+    return replace(get_scenario(name), workload=_SHORT_CLOCK,
+                   n_clients=n_clients)
+
+
+# ---------------------------------------------------------------------------
+# catalog
+# ---------------------------------------------------------------------------
+def test_catalog_breadth():
+    names = available_scenarios()
+    assert len(names) >= 8
+    # required condition coverage: intra-zone, WAN, lossy, crash/recovery,
+    # and at least two clock-fault cases
+    for required in ("intra-zone", "wan", "lossy", "leader-crash",
+                     "crash-recovery"):
+        assert required in names
+    clock_cases = [n for n in names
+                   if any(isinstance(e, ClockFault)
+                          for e in SCENARIOS[n].faults)]
+    assert len(clock_cases) >= 2
+
+
+def test_catalog_scenarios_are_well_formed():
+    for name, sc in SCENARIOS.items():
+        assert sc.name == name
+        env = sc.env                     # environment resolves
+        assert env.net_profile in NET_PROFILES
+        assert env.clock_regime in CLOCK_REGIMES
+        assert sc.workload.duration > 0
+        for ev in sc.faults:             # fault times inside the run horizon
+            assert 0.0 <= ev.t <= sc.workload.duration + sc.workload.drain
+
+
+def test_environment_catalog():
+    assert set(ENVIRONMENTS) >= {"gcp-intra-zone", "multi-zone", "wan",
+                                 "lossy", "congested"}
+    wan = ENVIRONMENTS["wan"]
+    assert wan.net.base_owd > 1e-3                 # WAN-scale delays
+    assert ENVIRONMENTS["lossy"].net.drop_prob > \
+        ENVIRONMENTS["gcp-intra-zone"].net.drop_prob
+
+
+def test_unknown_scenario_name():
+    with pytest.raises(KeyError, match="unknown scenario"):
+        get_scenario("chaos-monkey")
+
+
+def test_clock_fault_selector_parsing():
+    ev = ClockFault(0.0, who="proxies", mu=1e-6, sigma=0.0)
+    assert ev.targets(3, 2) == [("proxy", 0), ("proxy", 1)]
+    assert ClockFault(0.0, who="leader").targets(3, 2) == [("replica", 0)]
+    assert ClockFault(0.0, who="replica:2").targets(3, 2) == [("replica", 2)]
+    assert ClockClear(0.0, who="replicas").targets(3, 2) == [
+        ("replica", 0), ("replica", 1), ("replica", 2)]
+    with pytest.raises(ValueError, match="selector"):
+        ClockFault(0.0, who="sequencer").targets(3, 2)
+    # out-of-range indices fail at schedule time on every backend (they must
+    # not silently fault a neighboring node slot's clock mid-run)
+    with pytest.raises(ValueError, match="out of range"):
+        ClockFault(0.0, who="replica:3").targets(3, 2)
+    with pytest.raises(ValueError, match="out of range"):
+        ClockFault(0.0, who="proxy:2").targets(3, 2)
+
+
+# ---------------------------------------------------------------------------
+# NetworkParams.scaled regression (satellite fix)
+# ---------------------------------------------------------------------------
+def _reordering(params: NetworkParams, total_rate: float, n: int = 20_000) -> float:
+    net = CloudNetwork(4, params, seed=1)
+    sends = np.sort(np.random.default_rng(0).uniform(0, n / total_rate, n))
+    srcs = np.random.default_rng(1).integers(0, 2, n) + 2
+    owd, _ = net.sample_owd_matrix(srcs, n, [0, 1])
+    ids = np.arange(n)
+    r1 = ids[np.argsort(sends + owd[:, 0], kind="stable")]
+    r2 = ids[np.argsort(sends + owd[:, 1], kind="stable")]
+    return reordering_score(r1, r2)
+
+
+def test_scaled_scales_every_delay_component():
+    p = NetworkParams()
+    s = p.scaled(25.0)
+    assert s.base_owd == pytest.approx(25.0 * p.base_owd)
+    assert np.exp(s.lognorm_mu) == pytest.approx(25.0 * np.exp(p.lognorm_mu))
+    assert s.burst_scale == pytest.approx(25.0 * p.burst_scale)
+    # THE regression: the per-path offset spread (root cause of cross-path
+    # reordering) must scale with the same factor...
+    assert s.path_offset_sigma == pytest.approx(25.0 * p.path_offset_sigma)
+    # ...while per-message probabilities are rates, not delays.
+    assert s.burst_prob == p.burst_prob and s.drop_prob == p.drop_prob
+
+
+def test_scaled_preserves_reordering_score_at_matched_operating_point():
+    """Scaling every delay component by f and the send rate by 1/f is a pure
+    change of time units: the arrival ORDER -- hence `reordering_score` -- is
+    bit-identical. The old `scaled` left path_offset_sigma at intra-zone
+    values, so scaled WAN-like profiles under-reordered and this invariance
+    broke."""
+    base = NetworkParams(lognorm_sigma=0.15, burst_prob=0.0,
+                         path_offset_sigma=40e-6)
+    f = 25.0
+    want = _reordering(base, total_rate=40_000.0)
+    assert _reordering(base.scaled(f), total_rate=40_000.0 / f) == want
+    # the pre-fix behavior (path offsets left unscaled) breaks invariance
+    old_style = base.scaled(f)
+    old_style.path_offset_sigma = base.path_offset_sigma
+    assert _reordering(old_style, total_rate=40_000.0 / f) != want
+
+
+def test_set_params_redraws_path_offsets():
+    net = CloudNetwork(4, NetworkParams(), seed=0)
+    before = net._path_offset.copy()
+    wan = NET_PROFILES["wan"]
+    net.set_params(wan)
+    assert net.params is wan
+    assert net._path_offset.max() > before.max()   # ms-scale spread now
+
+
+# ---------------------------------------------------------------------------
+# scenario-driven config construction
+# ---------------------------------------------------------------------------
+def test_build_config_family_aware_overrides():
+    """One WAN environment parameterizes every config family: shared fields
+    land everywhere, Nezha-only knobs (dom clamp, replica cadence, LAN
+    co-location) must not leak into the baselines."""
+    ncfg = build_config("nezha", "wan")
+    assert isinstance(ncfg, ClusterConfig)
+    assert ncfg.client_timeout == 400e-3
+    assert ncfg.dom.clamp_d == 80e-3
+    assert ncfg.replica.dom is ncfg.dom            # sender/receiver lockstep
+    assert ncfg.replica.batch_interval == 2e-3
+    assert ncfg.client_proxy_lan == 150e-6
+    assert ncfg.net.base_owd == NET_PROFILES["wan"].base_owd
+
+    bcfg = build_config("multipaxos", "wan")
+    assert isinstance(bcfg, BaselineConfig)
+    assert bcfg.client_timeout == 400e-3
+    assert bcfg.net is ncfg.net                    # same fabric statistics
+
+    vcfg = build_config("nezha-vectorized", "wan")
+    assert isinstance(vcfg, VectorizedConfig)
+    assert vcfg.dom.clamp_d == 80e-3
+    assert vcfg.client_proxy_lan == 150e-6
+
+
+def test_build_config_nested_deadline_cap():
+    ecfg = build_config("nezha", "clock-skew-leader-capped")
+    assert ecfg.replica.deadline_cap == 50e-6      # nested ReplicaParams knob
+    vcfg = build_config("nezha-vectorized", "clock-skew-leader-capped")
+    assert vcfg.deadline_cap == 50e-6              # flat VectorizedConfig knob
+
+
+def test_make_cluster_scenario_construction_path():
+    cl = make_cluster("nezha", scenario="wan")
+    assert cl.cfg.client_proxy_lan == 150e-6
+    with pytest.raises(TypeError, match="not both"):
+        make_cluster("nezha", CommonConfig(), scenario="wan")
+
+
+def test_tier_only_for_vectorized():
+    with pytest.raises(ValueError, match="tier"):
+        run_scenario("multipaxos", "intra-zone", tier="jit")
+    # a tier-suffixed name contradicting the explicit tier must not silently
+    # swap backends (results would be mislabeled)
+    with pytest.raises(ValueError, match="conflicts"):
+        run_scenario("nezha-vectorized-pallas", "intra-zone", tier="jit")
+    # ... but the matching suffix is fine
+    r = run_scenario("nezha-vectorized-jit", _short("intra-zone", 2),
+                     tier="jit")
+    assert r.tier == "jit"
+
+
+def test_invalid_fault_events_fail_at_schedule_time():
+    """Bad event parameters must surface when the schedule is installed on
+    either backend, never as a raise mid-`run_for`."""
+    for name in ("nezha", "nezha-vectorized"):
+        cl = make_cluster(name, CommonConfig(f=1, n_clients=1))
+        with pytest.raises(ValueError, match="out of range"):
+            cl.schedule_fault(Crash(0.01, rid=99))
+        with pytest.raises(ValueError, match="out of range"):
+            cl.schedule_fault(ClockFault(0.01, who="replica:7", mu=1e-6))
+        with pytest.raises(KeyError):
+            cl.schedule_fault(NetShift(0.01, profile="fog"))
+        cl.run_for(0.02)                 # nothing latent fires later
+
+
+# ---------------------------------------------------------------------------
+# fault-event application
+# ---------------------------------------------------------------------------
+def test_baselines_skip_unmodelable_faults_but_run():
+    sc = _short("leader-crash")
+    r = run_scenario("multipaxos", sc)
+    assert isinstance(r, ScenarioResult)
+    assert r.skipped_faults == 1 and r.applied_faults == 0
+    assert r.committed > 0
+
+
+def test_event_backend_capability_matrix():
+    crash, clock = Crash(0.01, rid=0), ClockFault(0.01, who="leader", mu=1e-6)
+    shift = NetShift(0.01, profile="congested")
+    nez = make_cluster("nezha", ClusterConfig(f=1, n_clients=1))
+    assert all(nez.schedule_fault(e) for e in (crash, clock, shift))
+    mpx = make_cluster("multipaxos", BaselineConfig(f=1, n_clients=1))
+    assert not mpx.schedule_fault(crash)       # no failure model
+    assert not mpx.schedule_fault(clock)       # no synchronized clocks
+    assert mpx.schedule_fault(shift)           # shared fabric: regime shifts OK
+
+
+def test_clock_fault_event_reaches_event_backend_clocks():
+    cl = make_cluster("nezha", ClusterConfig(f=1, n_proxies=2, n_clients=1))
+    cl.schedule_fault(ClockFault(0.01, who="proxies", mu=250e-6, sigma=0.0))
+    cl.schedule_fault(ClockClear(0.03, who="proxies"))
+    cl.run_for(0.02)
+    assert cl.clock_of_proxy(0)._fault_mu == 250e-6   # documented hook fired
+    cl.run_for(0.02)
+    assert cl.clock_of_proxy(0)._fault_mu == 0.0
+
+
+def test_net_shift_mid_run_on_vectorized():
+    cl = make_cluster("nezha-vectorized",
+                      VectorizedConfig(f=1, n_clients=2, seed=0))
+    cl.schedule_fault(NetShift(0.05, profile="wan"))
+    for i in range(100):
+        cl.submit_at(i * 1e-3, i % 2, keys=(i,))
+    cl.run_for(0.04)
+    assert cl.net.params.base_owd < 1e-3              # still intra-zone
+    cl.run_for(0.2)
+    assert cl.net.params.base_owd == NET_PROFILES["wan"].base_owd
+    assert cl.summary()["committed"] > 0
+
+
+def test_crash_recovery_scenario_counts_view_changes():
+    r = run_scenario("nezha-vectorized", "crash-recovery")
+    assert r.applied_faults == 2
+    assert r.view_changes == 2            # leader lost, then restored
+    assert r.committed == r.n_requests    # f=1 rides through one failure
+
+
+def test_clock_clear_restores_vectorized_latency():
+    sc = Scenario("clear-mid-run",
+                  faults=(ClockFault(0.0, who="proxies", mu=400e-6, sigma=0.0),
+                          ClockClear(0.05, who="proxies")),
+                  workload=Workload(mode="open", rate_per_client=2000.0,
+                                    duration=0.1, warmup=0.0, drain=0.08),
+                  n_clients=4, overrides={"n_proxies": 2})
+    cl = make_cluster("nezha-vectorized", scenario=sc)
+    for ev in sc.faults:
+        assert cl.schedule_fault(ev)
+    for i in range(200):
+        cl.submit_at(i * 5e-4, i % 4, keys=(i,))
+    cl.run_for(0.2)
+    assert not cl.engine.clocks_faulty                # cleared
+    s = cl.summary()
+    assert s["committed"] == 200
+
+
+# ---------------------------------------------------------------------------
+# Appendix D: clock-fault latency ordering (acceptance)
+# ---------------------------------------------------------------------------
+def test_appendix_d_ordering_vectorized():
+    """faulty > baseline and capped < uncapped on the vectorized backend,
+    at the full cataloged workload (cheap here)."""
+    med = {name: run_scenario("nezha-vectorized", name).median_latency
+           for name in ("intra-zone", "clock-skew-leader",
+                        "clock-skew-leader-capped", "clock-skew-proxy",
+                        "clock-skew-proxy-capped", "clock-skew-follower")}
+    assert med["clock-skew-leader"] > med["intra-zone"]
+    assert med["clock-skew-proxy"] > med["intra-zone"]
+    assert med["clock-skew-leader-capped"] < med["clock-skew-leader"]
+    assert med["clock-skew-proxy-capped"] < med["clock-skew-proxy"]
+
+
+def test_appendix_d_ordering_and_backend_parity():
+    """Event vs vectorized on the Appendix D cases (skewed leader and skewed
+    proxies): the epoch approximation lands in the exact simulator's latency
+    regime, and the ordering (faulty > baseline, capped < uncapped) holds on
+    BOTH backends."""
+    cases = ("intra-zone", "clock-skew-leader", "clock-skew-leader-capped",
+             "clock-skew-proxy")
+    ev = {n: run_scenario("nezha", _short(n)) for n in cases}
+    vec = {n: run_scenario("nezha-vectorized", _short(n)) for n in cases}
+    for backend in (ev, vec):
+        assert backend["clock-skew-leader"].median_latency > \
+            backend["intra-zone"].median_latency
+        assert backend["clock-skew-proxy"].median_latency > \
+            backend["intra-zone"].median_latency
+        assert backend["clock-skew-leader-capped"].median_latency < \
+            backend["clock-skew-leader"].median_latency
+    for n in cases:
+        assert ev[n].committed > 0 and vec[n].committed > 0
+        ratio = vec[n].median_latency / ev[n].median_latency
+        assert 0.4 < ratio < 2.5, (n, ratio)
+
+
+def test_numpy_jit_parity_on_clock_fault_scenarios():
+    """Tier parity under clock faults: the fused jit program carries the
+    stamp/arrival clock offsets and the deadline cap, bit-for-bit with the
+    staged numpy path (both trace float64 with identical op order)."""
+    for name in ("clock-skew-leader", "clock-skew-proxy",
+                 "clock-skew-proxy-capped"):
+        sc = _short(name, n_clients=4)
+        a = run_scenario("nezha-vectorized", sc, tier="numpy")
+        b = run_scenario("nezha-vectorized", sc, tier="jit")
+        assert a.committed == b.committed, name
+        assert a.fast_commit_ratio == b.fast_commit_ratio, name
+        np.testing.assert_allclose(a.median_latency, b.median_latency,
+                                   rtol=1e-12, err_msg=name)
+
+
+@pytest.mark.pallas
+def test_pallas_parity_on_clock_fault_scenario():
+    sc = _short("clock-skew-proxy", n_clients=4)
+    a = run_scenario("nezha-vectorized", sc, tier="numpy")
+    b = run_scenario("nezha-vectorized", sc, tier="pallas")
+    assert b.raw["tier"] == "pallas"
+    assert b.committed == a.committed
+    assert abs(b.fast_commit_ratio - a.fast_commit_ratio) < 0.05
+    np.testing.assert_allclose(b.median_latency, a.median_latency, rtol=0.05)
+
+
+# ---------------------------------------------------------------------------
+# acceptance: every cataloged scenario x {nezha, 2 baselines, all 3 tiers}
+# ---------------------------------------------------------------------------
+def _shrunk_for_sweep(sc: Scenario) -> Scenario:
+    """Same environment/faults, lighter workload: the sweep asserts that the
+    full (scenario x backend x tier) matrix EXECUTES and commits, not its
+    latency shapes (those are pinned by the ordering/parity tests above)."""
+    w = sc.workload
+    dur = min(w.duration, 0.3 if sc.env.net_profile == "wan" else 0.1)
+    dur = max(dur, max((e.t for e in sc.faults), default=0.0) + 0.05)
+    return replace(sc, n_clients=4, workload=replace(
+        w, rate_per_client=min(w.rate_per_client, 1000.0),
+        duration=dur, drain=min(w.drain, 0.1)))
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("sc_name", available_scenarios())
+def test_catalog_runs_on_every_backend_and_tier(sc_name):
+    sc = _shrunk_for_sweep(get_scenario(sc_name))
+    for proto, tier in (("nezha", None), ("multipaxos", None),
+                        ("unreplicated", None),
+                        ("nezha-vectorized", "numpy"),
+                        ("nezha-vectorized", "jit"),
+                        ("nezha-vectorized", "pallas")):
+        r = run_scenario(proto, sc, tier=tier)
+        assert isinstance(r, ScenarioResult)
+        assert r.scenario == sc_name
+        assert r.committed > 0, (sc_name, proto, tier)
+        assert r.applied_faults + r.skipped_faults == len(sc.faults)
+        if tier is not None:
+            assert r.tier == tier
+
+
+def test_clock_faults_preserve_fault_free_determinism():
+    """The clock-offset rng stream must not perturb fault-free runs: the
+    scenario path must reproduce a PLAIN pre-scenario construction (manual
+    config + WorkloadDriver, no scenario machinery) bit-for-bit."""
+    from repro.sim.workload import WorkloadDriver
+
+    sc = _short("intra-zone", n_clients=3)
+    r = run_scenario("nezha-vectorized", sc)
+    plain_cfg = VectorizedConfig(f=1, n_clients=3, seed=0, n_proxies=2)
+    plain = WorkloadDriver(sc.workload).run(
+        make_cluster("nezha-vectorized", plain_cfg))
+    assert r.raw == plain
