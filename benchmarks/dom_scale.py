@@ -168,7 +168,10 @@ def _bench_engine_epoch(quick: bool) -> list[dict]:
     last = {}
     for tier in ("numpy", "jit"):
         net = CloudNetwork(3 + cfg.n_proxies + cfg.n_clients, cfg.net, seed=0)
-        eng = DomEngine(cfg, net, 3, tier=tier)
+        # track_logs off: this benchmark measures the pure data plane; the
+        # recovery pipeline's cross-epoch log bookkeeping would accumulate
+        # state across the repeated identical epochs
+        eng = DomEngine(cfg, net, 3, tier=tier, track_logs=False)
         # _time_call warms at the FULL shape (pow2 bucket), so the fused
         # program's compile stays out of the timed region
         wall = _time_call(

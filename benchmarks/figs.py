@@ -394,61 +394,117 @@ def fig13_wan(quick=True) -> list[dict]:
 
 
 # ---------------------------------------------------------------------------
-# Figures 14-15: leader failure -- view-change time + throughput recovery.
-# Built on the cataloged "leader-crash" scenario: `make_scenario_cluster`
-# constructs the configured cluster with the Crash event pre-scheduled; the
-# benchmark keeps its custom probing loop for the recovery timeline.
+# Figures 14-15: leader failure -- view-change time + throughput recovery,
+# on the event backend AND the vectorized tiers (the vectorized engine now
+# runs the actual recovery pipeline: measured detection + quorum RTTs +
+# MERGE-LOG, not a fixed penalty). Committed-sequence equivalence between
+# the backends is verified through repro.sim.trace on the leader-crash and
+# crash-recovery scenarios.
 # ---------------------------------------------------------------------------
 def fig14_15_recovery(quick=True) -> list[dict]:
     from dataclasses import replace
 
     from repro.core.messages import Status
     from repro.sim.scenario import get_scenario, make_scenario_cluster
+    from repro.sim.trace import CommitTrace
     from repro.sim.workload import WorkloadDriver
 
     rows = []
     base = get_scenario("leader-crash")
     crash_at = base.faults[0].t
+    backends = [("nezha", None), ("nezha-vectorized", "numpy"),
+                ("nezha-vectorized", "jit")]
     print(f"Fig 14/15: scenario 'leader-crash' (crash at t={crash_at}); "
-          "view change + recovery")
+          "view change + recovery, event + vectorized backends")
     for rate in ([5000, 20000] if quick else [1000, 5000, 10000, 20000]):
         dur = 0.8
         sc = replace(base, workload=replace(
             base.workload, rate_per_client=rate, duration=dur, warmup=0.02))
-        cl, sc, skipped = make_scenario_cluster("nezha", sc)
-        assert not skipped, "the event backend models crashes"
-        cl.start()
-        # the scenario's own declared workload (zipf keys, read/write mix),
-        # pre-scheduled so the probing loop below can step in small slices
-        WorkloadDriver(sc.workload).inject_open_loop(cl)
-        cl.run_for(crash_at + 1e-4)     # the scheduled Crash event fires
-        crash_t = crash_at
-        # measure view-change completion: all survivors NORMAL in view >= 1
-        vc_done = None
-        while cl.scheduler.now < crash_t + 0.6:
-            cl.run_for(2e-3)
-            alive = [r for r in cl.replicas if r.alive]
-            if vc_done is None and all(r.status == Status.NORMAL and r.view_id >= 1
-                                       for r in alive):
-                vc_done = cl.scheduler.now
-        cl.run_for(0.3)
-        # throughput timeline in 10ms bins
-        recs = cl.committed_records()
-        commits = np.sort([r.commit_time for r in recs if np.isfinite(r.commit_time)])
-        bins = np.arange(0, dur + 0.1, 0.01)
-        hist, _ = np.histogram(commits, bins)
-        target = rate * 10 * 0.01  # expected commits per bin
-        rec_t = None
-        for i, b in enumerate(bins[:-1]):
-            if b > crash_t and hist[i] >= 0.9 * target:
-                rec_t = b - crash_t
-                break
-        vc_ms = (vc_done - crash_t) * 1e3 if vc_done else float("nan")
-        rows.append({"fig": "14-15", "rate_total": rate * 10,
-                     "view_change_ms": vc_ms,
-                     "throughput_recovery_s": rec_t if rec_t else float("nan")})
-        print(f"  {rate*10:7.0f}/s: view change {vc_ms:6.1f} ms, "
-              f"throughput recovered in {rec_t if rec_t else float('nan'):.2f} s")
+        for proto, tier in backends:
+            cl, sc2, skipped = make_scenario_cluster(proto, sc, tier=tier)
+            assert not skipped, "both backends model crashes"
+            cl.start()
+            # the scenario's own declared workload (zipf keys, write mix),
+            # pre-scheduled so the probing loop below can step in slices
+            WorkloadDriver(sc2.workload).inject_open_loop(cl)
+            if proto == "nezha":
+                cl.run_for(crash_at + 1e-4)     # the Crash event fires
+                # view-change completion: all survivors NORMAL in view >= 1
+                vc_done = None
+                while cl.now < crash_at + 0.6:
+                    cl.run_for(2e-3)
+                    alive = [r for r in cl.replicas if r.alive]
+                    if vc_done is None and all(
+                            r.status == Status.NORMAL and r.view_id >= 1
+                            for r in alive):
+                        vc_done = cl.now
+                cl.run_for(0.3)
+            else:
+                # the vectorized recovery pipeline records its own timeline
+                cl.run_for(dur + 0.3)
+                vc_done = (cl.view_change_events[0]["t_done"]
+                           if cl.view_change_events else None)
+            # throughput timeline in 10ms bins, from the commit trace
+            trace = CommitTrace.from_cluster(cl)
+            commits = np.sort(trace.commits["t"])
+            bins = np.arange(0, dur + 0.1, 0.01)
+            hist, _ = np.histogram(commits, bins)
+            target = rate * 10 * 0.01  # expected commits per bin
+            rec_t = None
+            for i, b in enumerate(bins[:-1]):
+                if b > crash_at and hist[i] >= 0.9 * target:
+                    rec_t = b - crash_at
+                    break
+            vc_ms = (vc_done - crash_at) * 1e3 if vc_done else float("nan")
+            s = cl.summary()
+            label = proto if tier is None else f"{proto}-{tier}"
+            rows.append({"fig": "14-15", "backend": label,
+                         "rate_total": rate * 10,
+                         "view_change_ms": vc_ms,
+                         "throughput_recovery_s": rec_t if rec_t else float("nan"),
+                         "recovered_entries": s.get("recovered_entries", 0),
+                         "dropped_speculative": s.get("dropped_speculative", 0)})
+            print(f"  {label:22s} {rate*10:7.0f}/s: view change {vc_ms:6.1f} ms,"
+                  f" throughput recovered in "
+                  f"{rec_t if rec_t else float('nan'):.2f} s, "
+                  f"merge recovered {s.get('recovered_entries', 0)}")
+    rows += _fig14_15_trace_equivalence(quick)
+    return rows
+
+
+def _fig14_15_trace_equivalence(quick: bool) -> list[dict]:
+    """Acceptance gate: event vs vectorized (numpy AND jit) committed
+    sequences are equivalent -- and every trace invariant-clean -- on the
+    leader-crash and crash-recovery scenarios, via repro.sim.trace."""
+    from dataclasses import replace
+
+    from repro.sim.scenario import get_scenario
+    from repro.sim.trace import assert_equivalent_commits, assert_trace_ok, \
+        run_scenario_with_trace
+
+    rows = []
+    for name in ("leader-crash", "crash-recovery"):
+        sc = get_scenario(name)
+        if quick:
+            horizon = max(e.t for e in sc.faults) + 0.05
+            sc = replace(sc, n_clients=3, workload=replace(
+                sc.workload, rate_per_client=600.0,
+                duration=max(0.25, horizon), drain=0.3))
+        else:
+            sc = replace(sc, workload=replace(sc.workload, drain=0.4))
+        _, ev_tr = run_scenario_with_trace("nezha", sc)
+        assert_trace_ok(ev_tr)
+        for tier in ("numpy", "jit"):
+            res, v_tr = run_scenario_with_trace("nezha-vectorized", sc,
+                                                tier=tier)
+            assert_trace_ok(v_tr)
+            assert_equivalent_commits(ev_tr, v_tr)
+            rows.append({"fig": "14-15", "check": "trace-equivalence",
+                         "scenario": name, "tier": tier,
+                         "committed": res.committed,
+                         "recovered_entries": res.recovered_entries})
+        print(f"  trace equivalence OK: {name} (event == numpy == jit, "
+              f"{ev_tr.commits['t'].size} commits)")
     return rows
 
 

@@ -192,16 +192,20 @@ class MultiPaxos(_Base):
         def broadcast():
             for rid in range(self.n):
                 if rid != self.leader:
-                    self.fabric.send(self.leader, rid,
-                                     (lambda s: lambda: self._follower_on_accept(s))(slot))
+                    self.fabric.send(
+                        self.leader, rid,
+                        (lambda s, r: lambda: self._follower_on_accept(s, r))(
+                            slot, rid))
 
         self._disk_delay_then(self.leader, broadcast)
 
-    def _follower_on_accept(self, slot: int) -> None:
+    def _follower_on_accept(self, slot: int, rid: int) -> None:
         def ack():
-            # follower ack back to the leader
-            rid_src = slot % (self.n - 1) + 1  # node identity is positional; use any follower id
-            self.fabric.send(rid_src, self.leader, lambda: self._leader_on_ack(slot, rid_src))
+            # follower ack back to the leader, under its OWN identity: the
+            # quorum set must see f+1 distinct replicas (a single positional
+            # stand-in id capped the set at 2, so f >= 2 never committed)
+            self.fabric.send(rid, self.leader,
+                             lambda: self._leader_on_ack(slot, rid))
 
         self._disk_delay_then(0, ack)
 

@@ -12,8 +12,12 @@ into five explicit stages, run in order over an `EpochState`:
   DomStage      DOM early-buffer admission + release schedule;
   CommitStage   fast/slow commit classification (prefix hash-consistency vs
                 the leader, per-key-class commutativity, quorum arithmetic);
-  DeliverStage  commit delivery at the client (+ per-epoch view-change
-                penalty) and latency accounting.
+  DeliverStage  commit delivery at the client and latency accounting;
+  LogStage      cross-epoch replica-log bookkeeping (`ReplicaLogState`):
+                committed entries enter the shared synced log in execution
+                order, uncommitted-but-admitted entries become per-replica
+                speculative tails -- the exact state the vectorized
+                MERGE-LOG (repro.core.recovery) consults at a view change.
 
 Stages that run array programs dispatch through a pluggable **compute tier**.
 Admission in every tier is the O(N log N) event-ordered watermark scan
@@ -65,6 +69,11 @@ from typing import Optional, Union
 import numpy as np
 
 from repro.core.quorum import fast_quorum_size, slow_quorum_size
+from repro.core.recovery import (
+    merge_logs_vectorized,
+    pack_uids,
+    qualified_replicas,
+)
 from repro.core.vectorized import (
     dom_admit_watermark_jnp,
     dom_release_schedule_watermark,
@@ -131,12 +140,42 @@ class PendingBuffer:
         if not due_mask.any():
             return np.empty(0, dtype=PENDING_DTYPE)
         due = np.sort(view[due_mask], order="t", kind="stable")
-        rest = view[~due_mask].copy()
+        self._keep(~due_mask)
+        return due
+
+    def _keep(self, keep_mask: np.ndarray) -> None:
+        rest = self._buf[: self._n][keep_mask].copy()
         self._n = rest.size
         if self._buf.size < rest.size:       # pragma: no cover - cannot shrink
             self._buf = np.empty(rest.size, dtype=PENDING_DTYPE)
         self._buf[: self._n] = rest
-        return due
+
+    def _uid_mask(self, cid: np.ndarray, rid: np.ndarray) -> np.ndarray:
+        view = self._buf[: self._n]
+        return np.isin(pack_uids(view["cid"], view["rid"]),
+                       pack_uids(cid, rid))
+
+    def pop_uids(self, cid: np.ndarray, rid: np.ndarray) -> np.ndarray:
+        """Remove and return the pending attempts of the given requests
+        (the recovery path: a merged speculative entry commits through the
+        view change, so its client stops retrying)."""
+        if self._n == 0:
+            return np.empty(0, dtype=PENDING_DTYPE)
+        mask = self._uid_mask(cid, rid)
+        taken = self._buf[: self._n][mask].copy()
+        if taken.size:
+            self._keep(~mask)
+        return taken
+
+    def reschedule_uids(self, cid: np.ndarray, rid: np.ndarray,
+                        t: float) -> None:
+        """Pull the given requests' next attempt up to ``t`` at the latest
+        (proxy retransmission of un-merged entries at StartView)."""
+        if self._n == 0:
+            return
+        mask = self._uid_mask(cid, rid)
+        view = self._buf[: self._n]
+        view["t"][mask] = np.minimum(view["t"][mask], t)
 
 
 # ---------------------------------------------------------------------------
@@ -424,7 +463,8 @@ def _build_fused_step(tier: ComputeTier, f: int, use_kcls: bool,
 
     @jax.jit
     def step(t, c2p, owd_pr, drop_pr, reply_owd, alive, kcls, leader,
-             bound, fetch, batch_delay, cap, stamp_off=None, arr_off=None):
+             bound, fetch, batch_delay, cap, floor, dies_at=None,
+             stamp_off=None, arr_off=None):
         N, R = owd_pr.shape
         # --- stamp: proxy stamping + deadline bounding ---------------------
         # stamp_off: proxy clock-read error folded into the deadline value;
@@ -438,6 +478,15 @@ def _build_fused_step(tier: ComputeTier, f: int, use_kcls: bool,
             deadlines = deadlines + stamp_off
         arrivals = jnp.where(drop_pr | ~alive[None, :], jnp.inf,
                              stamp[:, None] + owd_pr)
+        # recovery stall: nothing releases before `floor` (StartView); a zero
+        # floor is the identity, mirroring StampStage's op order exactly
+        arrivals = jnp.maximum(arrivals, floor)
+        if dies_at is not None:
+            # crash-epoch fidelity: in-flight messages to a replica dying at
+            # the epoch's end are never received (optional operand, like the
+            # clock offsets -- crash-free epochs carry none of this)
+            arrivals = jnp.where(arrivals > dies_at[None, :], jnp.inf,
+                                 arrivals)
         reply = jnp.where(alive[None, :], reply_owd, jnp.inf)
         # --- dom: watermark admission + release (receiver-local frames) ----
         a_loc = arrivals if arr_off is None else arrivals + arr_off
@@ -525,7 +574,14 @@ class EpochState:
     kcls: Optional[np.ndarray]          # [N] commutativity classes (or None)
     alive: np.ndarray                   # [R] replica liveness this epoch
     leader: int                         # leader this epoch
-    view_penalty: float = 0.0           # view-change latency charged this epoch
+    release_floor: float = 0.0          # replicas release nothing before this
+    #   instant (the StartView time of a just-completed view change: messages
+    #   arriving during the recovery stall sit in early buffers until it)
+    dies_at: Optional[np.ndarray] = None    # [R] death instants inside this
+    #   epoch (inf = survives): an epoch cut short by a crash event still has
+    #   messages in flight to the dying replica -- those arriving after its
+    #   death are never received, which is what leaves speculative entries
+    #   on the survivors for MERGE-LOG to recover
     # SampleStage
     proxy_nodes: Optional[np.ndarray] = None
     c2p: Optional[np.ndarray] = None    # [N] client->proxy OWD (inf = dropped)
@@ -551,10 +607,14 @@ class EpochState:
     # CommitStage
     commit_time: Optional[np.ndarray] = None  # [N] commit at proxy
     fast: Optional[np.ndarray] = None
-    committed: Optional[np.ndarray] = None
+    committed: Optional[np.ndarray] = None    # [N] protocol-level commit
+    exec_order: Optional[np.ndarray] = None   # [N] tier's deadline order (the
+    #   execution/log order; LogStage appends committed entries along it)
     # DeliverStage
     commit_at_client: Optional[np.ndarray] = None  # [N]
-    latency: Optional[np.ndarray] = None           # [N] (inf = uncommitted)
+    latency: Optional[np.ndarray] = None           # [N] (inf = undelivered)
+    delivered: Optional[np.ndarray] = None    # [N] committed AND the reply
+    #   reached the client (drives client-side retry + latency accounting)
 
 
 class Stage:
@@ -635,6 +695,15 @@ class StampStage(Stage):
         arrivals = s.stamp[:, None] + s.owd_pr
         arrivals[s.drop_pr] = np.inf
         arrivals[:, ~s.alive] = np.inf      # crashed replicas never receive
+        # Recovery stall (view change): messages arriving while replicas are
+        # in VIEWCHANGE wait in the early buffers and release together -- in
+        # deadline order -- at StartView. Floored arrivals reproduce that
+        # exactly; a zero floor is the identity on (positive) arrival times.
+        arrivals = np.maximum(arrivals, s.release_floor)
+        if s.dies_at is not None:
+            # a replica crashing at the epoch's end never receives what is
+            # still in flight to it (releases/replies already sent survive)
+            arrivals[arrivals > s.dies_at[None, :]] = np.inf
         s.arrivals = arrivals
         s.reply_owd = s.reply_owd.copy()
         s.reply_owd[:, ~s.alive] = np.inf   # ... and never reply
@@ -722,6 +791,8 @@ class FusedEpochStage(Stage):
         # offset operands -- pad lanes stay zero; their inf attempt times
         # keep them invisible either way
         fault_kw = {}
+        if s.dies_at is not None:
+            fault_kw["dies_at"] = np.asarray(s.dies_at, np.float64)
         if s.clock_stamp_off is not None:
             stamp_off = np.zeros(n_pad)
             stamp_off[:N] = s.clock_stamp_off
@@ -735,7 +806,7 @@ class FusedEpochStage(Stage):
             out = step(t, c2p, owd, drop, reply,
                        np.asarray(s.alive, bool), kcls, s.leader,
                        float(bound), fetch, float(cfg.leader_batch_delay),
-                       cap, **fault_kw)
+                       cap, float(s.release_floor), **fault_kw)
             out = [np.asarray(o)[:N] for o in out]
         (s.stamp, s.deadlines, s.arrivals, s.admitted, s.release,
          s.commit_time, s.fast, s.committed) = out
@@ -750,10 +821,11 @@ class CommitStage(Stage):
     def run(self, s, eng):
         cfg = eng.cfg
         force_slow = _apply_deadline_cap(s, eng)
+        s.exec_order = eng.tier.deadline_order(s.deadlines)
         res = classify_commits(
             s.deadlines, s.arrivals, s.admitted, s.release, s.reply_owd,
             s.leader, cfg.f, leader_batch_delay=cfg.leader_batch_delay,
-            key_ids=s.kcls, order=eng.tier.deadline_order(s.deadlines),
+            key_ids=s.kcls, order=s.exec_order,
             force_slow=force_slow)
         s.commit_time = res["commit_time"]
         s.fast = res["fast"]
@@ -788,22 +860,49 @@ def _apply_deadline_cap(s: EpochState, eng: "DomEngine") -> Optional[np.ndarray]
 
 
 class DeliverStage(Stage):
-    """Reply delivery at the client + view-change penalty + latencies."""
+    """Reply delivery at the client + latency accounting.
+
+    ``committed`` stays the protocol-level verdict (the entry is in the
+    replicated log); ``delivered`` additionally requires the reply to reach
+    the client -- a committed-but-undelivered request is retried by the
+    client and answered from the at-most-once replay cache (LogStage skips
+    re-appending it)."""
 
     name = "deliver"
 
     def run(self, s, eng):
-        s.commit_at_client = s.commit_time + s.p2c + s.view_penalty
+        s.commit_at_client = s.commit_time + s.p2c
         # Latency is measured from the ORIGINAL submission (t0): a retried
         # request's earlier timed-out attempts are part of its latency.
         lat = s.commit_at_client - s.t0
         lat[~s.committed] = np.inf
         s.latency = lat
-        s.committed = s.committed & np.isfinite(lat)
+        s.delivered = s.committed & np.isfinite(lat)
 
 
-DEFAULT_STAGES = (SampleStage, StampStage, DomStage, CommitStage, DeliverStage)
-FUSED_STAGES = (SampleStage, FusedEpochStage, DeliverStage)
+class LogStage(Stage):
+    """Cross-epoch replica-log bookkeeping (the recovery pipeline's input).
+
+    Appends the epoch's committed entries -- in the tier's claimed execution
+    order -- to the shared synced log, advances every live replica's
+    sync-point (the steady-state log-modification flow: by epoch end each
+    live replica has synced the leader's log), and files uncommitted-but-
+    admitted entries as per-replica speculative tails, which is exactly the
+    state MERGE-LOG consults at the next view change."""
+
+    name = "log"
+
+    def run(self, s, eng):
+        if not eng.track_logs:
+            return
+        if s.exec_order is None:        # fused tiers: order stays on-device
+            s.exec_order = eng.tier.deadline_order(s.deadlines)
+        eng.logs.observe_epoch(s)
+
+
+DEFAULT_STAGES = (SampleStage, StampStage, DomStage, CommitStage, DeliverStage,
+                  LogStage)
+FUSED_STAGES = (SampleStage, FusedEpochStage, DeliverStage, LogStage)
 
 
 def _partition_percentile(a: np.ndarray, q: float) -> float:
@@ -827,23 +926,220 @@ def _partition_percentile(a: np.ndarray, q: float) -> float:
     return hi_v - (hi_v - lo_v) * (1.0 - t)
 
 
+class ReplicaLogState:
+    """Array-structured per-replica logs for the recovery pipeline (SA).
+
+    The epoch approximation keeps ONE shared synced log -- the committed
+    entries, in execution order, each stamped with the view and batch that
+    committed it -- plus per-replica scalars (`sync_point`,
+    `last_normal_view`) and per-replica speculative tails: uncommitted
+    entries encoded as columns + an admitted-mask over replicas. That is
+    exactly the state Alg 4's MERGE-LOG consults, so a view change is one
+    call into `repro.core.recovery.merge_logs_vectorized` (last-normal-view
+    filter -> sync-point prefix copy -> ceil(f/2)+1 majority beyond it ->
+    key3 re-sort) instead of per-replica Python loops.
+
+    Modeling notes: within an epoch every live replica syncs the leader's
+    log by epoch end (the steady-state log-modification flow), so live
+    sync-points advance together; a crashed replica loses its in-memory
+    state (speculative column cleared, sync-point zeroed, last-normal-view
+    -1 = RECOVERING) and a relaunched one completes state transfer during
+    its first live epoch (sync-point/last-normal-view catch up then).
+    """
+
+    LOG_COLS = ("deadline", "cid", "rid", "kcls", "view", "batch", "recovered")
+
+    def __init__(self, n_replicas: int, f: int):
+        self.n = n_replicas
+        self.f = f
+        self.view = 0
+        self.sync_point = np.zeros(n_replicas, np.int64)
+        self.last_normal_view = np.zeros(n_replicas, np.int64)
+        self.synced_len = 0
+        self.tail_deadline = -np.inf        # deadline of the last synced entry
+        self._chunks: dict[str, list[np.ndarray]] = {c: [] for c in self.LOG_COLS}
+        # speculative tails: entries admitted somewhere but not committed
+        self.spec_deadline = np.empty(0)
+        self.spec_cid = np.empty(0, np.int64)
+        self.spec_rid = np.empty(0, np.int64)
+        self.spec_kcls = np.empty(0, np.int64)
+        self.spec_admitted = np.empty((0, n_replicas), bool)
+        # committed-but-undelivered uids: the client retries these and the
+        # replicas answer from the at-most-once replay cache -- the replay
+        # commit must not re-enter the log
+        self._replay_uids = np.empty(0, np.int64)
+        self._batch = 0
+
+    # -- log append (per epoch batch) ---------------------------------------
+    def observe_epoch(self, s: "EpochState") -> None:
+        batch = self._batch
+        self._batch += 1
+        committed = np.asarray(s.committed, bool)
+        order = np.asarray(s.exec_order, np.int64)
+        row_uids = pack_uids(s.cid, s.rid)
+        exec_idx = order[committed[order]]          # committed, in exec order
+        uids = row_uids[exec_idx]
+        if self._replay_uids.size:
+            replay = np.isin(uids, self._replay_uids)
+            if replay.any():
+                # replays that finally reached their client stop retrying
+                done = uids[replay][np.asarray(s.delivered, bool)[exec_idx[replay]]]
+                self._replay_uids = self._replay_uids[
+                    ~np.isin(self._replay_uids, done)]
+                exec_idx = exec_idx[~replay]
+                uids = uids[~replay]
+        if exec_idx.size:
+            kcls = (s.kcls[exec_idx] if s.kcls is not None
+                    else np.full(exec_idx.size, -1, np.int64))
+            self._append(s.deadlines[exec_idx], s.cid[exec_idx],
+                         s.rid[exec_idx], kcls, batch=batch)
+            undelivered = ~np.asarray(s.delivered, bool)[exec_idx]
+            if undelivered.any():
+                self._replay_uids = np.concatenate(
+                    [self._replay_uids, uids[undelivered]])
+        self.sync_point[s.alive] = self.synced_len
+        self.last_normal_view[s.alive] = self.view
+        # speculative tails: uncommitted entries some live replica admitted.
+        # A failed RETRY of an already-durable uid (committed earlier, reply
+        # lost) must NOT re-enter them -- the entry is in the synced log and
+        # the oracle's synced-uid membership check would skip it; without
+        # this exclusion a view change could append the uid a second time.
+        spec = ~committed & np.asarray(s.admitted, bool).any(axis=1)
+        if spec.any() and self._replay_uids.size:
+            spec &= ~np.isin(row_uids, self._replay_uids)
+        if self.spec_deadline.size:
+            # an entry leaves the speculative tails when a newer attempt
+            # lands (replace) or when it commits (now durable)
+            gone = row_uids[spec | committed]
+            self._drop_spec(np.isin(
+                pack_uids(self.spec_cid, self.spec_rid), gone))
+        if spec.any():
+            self.spec_deadline = np.concatenate(
+                [self.spec_deadline, s.deadlines[spec]])
+            self.spec_cid = np.concatenate([self.spec_cid, s.cid[spec]])
+            self.spec_rid = np.concatenate([self.spec_rid, s.rid[spec]])
+            kcls = (s.kcls[spec] if s.kcls is not None
+                    else np.full(int(spec.sum()), -1, np.int64))
+            self.spec_kcls = np.concatenate([self.spec_kcls, kcls])
+            self.spec_admitted = np.concatenate(
+                [self.spec_admitted, np.asarray(s.admitted, bool)[spec]])
+
+    def _append(self, deadline, cid, rid, kcls, batch: int,
+                view: Optional[int] = None, recovered: bool = False) -> None:
+        k = len(deadline)
+        self._chunks["deadline"].append(np.asarray(deadline, np.float64))
+        self._chunks["cid"].append(np.asarray(cid, np.int64))
+        self._chunks["rid"].append(np.asarray(rid, np.int64))
+        self._chunks["kcls"].append(np.asarray(kcls, np.int64))
+        self._chunks["view"].append(
+            np.full(k, self.view if view is None else view, np.int64))
+        self._chunks["batch"].append(np.full(k, batch, np.int64))
+        self._chunks["recovered"].append(np.full(k, recovered, bool))
+        self.synced_len += k
+        if k:
+            self.tail_deadline = float(np.asarray(deadline)[-1])
+
+    def _drop_spec(self, mask: np.ndarray) -> None:
+        if mask.any():
+            keep = ~mask
+            self.spec_deadline = self.spec_deadline[keep]
+            self.spec_cid = self.spec_cid[keep]
+            self.spec_rid = self.spec_rid[keep]
+            self.spec_kcls = self.spec_kcls[keep]
+            self.spec_admitted = self.spec_admitted[keep]
+
+    def drop_uids(self, cid: np.ndarray, rid: np.ndarray) -> None:
+        """Forget speculative entries of abandoned requests (retry cap)."""
+        if self.spec_deadline.size:
+            gone = pack_uids(cid, rid)
+            self._drop_spec(np.isin(
+                pack_uids(self.spec_cid, self.spec_rid), gone))
+
+    # -- fault hooks ---------------------------------------------------------
+    def on_crash(self, rid: int) -> None:
+        """Diskless crash: the replica's in-memory log state is gone."""
+        if self.spec_admitted.size:
+            self.spec_admitted[:, rid] = False
+        self.sync_point[rid] = 0
+        self.last_normal_view[rid] = -1     # RECOVERING until a live epoch
+
+    # -- the view change itself ----------------------------------------------
+    def view_change(self, new_view: int, alive: np.ndarray) -> dict:
+        """Run the vectorized MERGE-LOG; enter ``new_view``.
+
+        Returns the recovery outcome: ``recovered`` -- column dict of the
+        speculative entries the merge kept (appended to the synced log in
+        key3 order, stamped recovered); ``dropped`` -- column dict of the
+        rest (sub-majority or behind the authoritative prefix; the proxies
+        re-admit them into the next epoch's DOM stage).
+        """
+        alive = np.asarray(alive, bool)
+        qualified = qualified_replicas(self.last_normal_view, alive)
+        merge_order, keep = merge_logs_vectorized(
+            self.spec_deadline, self.spec_cid, self.spec_rid,
+            self.spec_admitted, qualified, self.f,
+            synced_tail_deadline=self.tail_deadline)
+        out = {
+            "recovered": {
+                "deadline": self.spec_deadline[merge_order],
+                "cid": self.spec_cid[merge_order],
+                "rid": self.spec_rid[merge_order],
+                "kcls": self.spec_kcls[merge_order],
+            },
+            "dropped": {
+                "deadline": self.spec_deadline[~keep],
+                "cid": self.spec_cid[~keep],
+                "rid": self.spec_rid[~keep],
+            },
+        }
+        batch = self._batch
+        self._batch += 1
+        rec = out["recovered"]
+        if merge_order.size:
+            self._append(rec["deadline"], rec["cid"], rec["rid"], rec["kcls"],
+                         batch=batch, view=new_view, recovered=True)
+        # every live replica installs the merged log via StartView
+        self.view = new_view
+        self.sync_point[alive] = self.synced_len
+        self.last_normal_view[alive] = new_view
+        self.spec_deadline = np.empty(0)
+        self.spec_cid = np.empty(0, np.int64)
+        self.spec_rid = np.empty(0, np.int64)
+        self.spec_kcls = np.empty(0, np.int64)
+        self.spec_admitted = np.empty((0, self.n), bool)
+        return out
+
+    # -- trace export --------------------------------------------------------
+    def log_columns(self) -> dict[str, np.ndarray]:
+        """The synced log as one column dict (concatenated lazily)."""
+        dtypes = dict(deadline=np.float64, cid=np.int64, rid=np.int64,
+                      kcls=np.int64, view=np.int64, batch=np.int64,
+                      recovered=bool)
+        return {c: (np.concatenate(ch) if ch else np.empty(0, dtypes[c]))
+                for c, ch in self._chunks.items()}
+
+
 class DomEngine:
     """Runs the staged DOM data plane, one epoch batch at a time.
 
-    The engine owns the stage list and the compute tier; the cluster owns
-    time, the pending buffer, fault events, and result accumulation.
-    Fused tiers (jit, pallas) default to the three-stage single-dispatch
-    pipeline (sample -> fused -> deliver); the numpy tier keeps the
-    five-stage reference path.
+    The engine owns the stage list, the compute tier, and the cross-epoch
+    replica-log state feeding the recovery pipeline (`ReplicaLogState`);
+    the cluster owns time, the pending buffer, fault events, view changes,
+    and result accumulation. Fused tiers (jit, pallas) default to the
+    single-dispatch pipeline (sample -> fused -> deliver -> log); the numpy
+    tier keeps the staged reference path.
     """
 
     def __init__(self, cfg, net, n_replicas: int,
                  tier: Union[str, ComputeTier] = "numpy",
-                 stages=None):
+                 stages=None, track_logs: bool = True):
         self.cfg = cfg
         self.net = net
         self.n = n_replicas
         self.tier = make_tier(tier)
+        self.track_logs = track_logs    # benchmarks measuring the pure data
+        #   plane (benchmarks/dom_scale.py) opt out of log accumulation
+        self.logs = ReplicaLogState(n_replicas, cfg.f)
         if stages is None:
             stages = FUSED_STAGES if self.tier.fused else DEFAULT_STAGES
         self.stages = [s() for s in stages]
@@ -921,7 +1217,8 @@ class DomEngine:
         return self.n + self.cfg.n_proxies + client_ids
 
     def run_epoch(self, due: np.ndarray, alive: np.ndarray, leader: int,
-                  view_penalty: float = 0.0) -> EpochState:
+                  release_floor: float = 0.0,
+                  dies_at: Optional[np.ndarray] = None) -> EpochState:
         """Push one structured batch (PENDING_DTYPE) through every stage."""
         s = EpochState(
             t=np.ascontiguousarray(due["t"]),
@@ -932,7 +1229,8 @@ class DomEngine:
                   if getattr(self.cfg, "commutative", False) else None),
             alive=np.asarray(alive, bool),
             leader=int(leader),
-            view_penalty=float(view_penalty),
+            release_floor=float(release_floor),
+            dies_at=dies_at,
         )
         for stage in self.stages:
             stage.run(s, self)
@@ -944,6 +1242,6 @@ __all__ = [
     "ComputeTier", "NumpyTier", "JitTier", "PallasTier", "TIERS", "make_tier",
     "classify_commits",
     "EpochState", "Stage", "SampleStage", "StampStage", "DomStage",
-    "CommitStage", "DeliverStage", "FusedEpochStage",
-    "DEFAULT_STAGES", "FUSED_STAGES", "DomEngine",
+    "CommitStage", "DeliverStage", "LogStage", "FusedEpochStage",
+    "DEFAULT_STAGES", "FUSED_STAGES", "ReplicaLogState", "DomEngine",
 ]

@@ -301,6 +301,10 @@ class NezhaCluster(EventCluster):
             messages=self.fabric.msg_count,
             leader_util=self.fabric.cpu_utilization(self.leader_id),
             view_changes=self.view_changes,
+            recovered_entries=sum(r.stats["recovered_entries"]
+                                  for r in self.replicas),
+            dropped_speculative=sum(r.stats["dropped_speculative"]
+                                    for r in self.replicas),
         )
 
 

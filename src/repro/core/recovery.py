@@ -2,12 +2,16 @@
 
 These are pure functions over replica state so they can be unit- and
 property-tested in isolation; repro.core.replica wires them to the event
-loop.
+loop, and `merge_logs_vectorized` is the same MERGE-LOG over the staged
+engine's array-structured entries (repro.core.engine's recovery stage pits
+it against `merge_logs` as the property-test oracle).
 """
 from __future__ import annotations
 
 import math
 from typing import Optional, Sequence
+
+import numpy as np
 
 from repro.core.messages import LogEntry, ViewChange
 
@@ -28,7 +32,8 @@ def check_crash_vector(local_cv: Sequence[int], sender: int, msg_cv: Sequence[in
     return not (msg_cv[sender] < local_cv[sender])
 
 
-def merge_logs(view_changes: Sequence[ViewChange], f: int) -> list[LogEntry]:
+def merge_logs(view_changes: Sequence[ViewChange], f: int,
+               stats: Optional[dict] = None) -> list[LogEntry]:
     """MERGE-LOG (Alg 4 lines 73-89): rebuild the new leader's log.
 
     1. Consider only messages with the largest last-normal-view.
@@ -38,6 +43,10 @@ def merge_logs(view_changes: Sequence[ViewChange], f: int) -> list[LogEntry]:
     4. Sort by (deadline, client-id, request-id).
 
     view_changes must contain >= f+1 messages (incl. the new leader's own).
+    ``stats``, when given, is incremented in place: ``recovered_entries``
+    (candidates beyond the copied prefix that made the merged log) and
+    ``dropped_speculative`` (candidates rejected -- sub-majority or behind
+    the authoritative prefix).
     """
     assert len(view_changes) >= f + 1
     lnv_max = max(m.last_normal_view for m in view_changes)
@@ -52,6 +61,7 @@ def merge_logs(view_changes: Sequence[ViewChange], f: int) -> list[LogEntry]:
     threshold = math.ceil(f / 2) + 1
     counts: dict = {}
     entry_by_key: dict = {}
+    dropped = 0
     for m in qualified:
         for e in m.log:
             if e.key3 in synced_uids:
@@ -59,15 +69,94 @@ def merge_logs(view_changes: Sequence[ViewChange], f: int) -> list[LogEntry]:
             if e.deadline < synced_deadline:
                 # Strictly before the synced prefix but not in it: cannot be
                 # committed (the prefix is authoritative); drop.
+                dropped += 1
                 continue
             counts[e.key3] = counts.get(e.key3, 0) + 1
             entry_by_key.setdefault(e.key3, e)
+    recovered = 0
     for key3, cnt in counts.items():
         if cnt >= threshold:
             new_log.append(entry_by_key[key3])
+            recovered += 1
+        else:
+            dropped += 1
 
     new_log.sort(key=lambda e: (e.deadline, e.client_id, e.request_id))
+    if stats is not None:
+        stats["recovered_entries"] = stats.get("recovered_entries", 0) + recovered
+        stats["dropped_speculative"] = stats.get("dropped_speculative", 0) + dropped
     return new_log
+
+
+def pack_uids(cid: np.ndarray, rid: np.ndarray) -> np.ndarray:
+    """(client-id, request-id) pairs packed into one int64 key per entry.
+
+    THE uid-packing scheme: MERGE-LOG dedup, `PendingBuffer`,
+    `ReplicaLogState`, the recovery delivery path, and `repro.sim.trace`
+    all match uids through this one helper -- keep them on one bit layout."""
+    return np.asarray(cid, np.int64) << 32 | np.asarray(rid, np.int64)
+
+
+def qualified_replicas(last_normal_view: np.ndarray,
+                       alive: np.ndarray) -> np.ndarray:
+    """Alg 4's last-normal-view filter over array-structured replica state:
+    the ViewChange senders whose logs MERGE-LOG may consult are the live
+    replicas whose last normal view is maximal among the live set."""
+    alive = np.asarray(alive, bool)
+    lnv = np.asarray(last_normal_view)
+    assert alive.any(), "view change with no live replicas"
+    return alive & (lnv == lnv[alive].max())
+
+
+def merge_logs_vectorized(
+    spec_deadline: np.ndarray,      # [M] speculative-entry deadlines
+    spec_cid: np.ndarray,           # [M] client ids
+    spec_rid: np.ndarray,           # [M] request ids
+    spec_admitted: np.ndarray,      # [M, R] which replica logs hold the entry
+    qualified: np.ndarray,          # [R] the last-normal-view filter mask
+    f: int,
+    synced_tail_deadline: float = -math.inf,
+) -> tuple[np.ndarray, np.ndarray]:
+    """MERGE-LOG over the staged engine's array-structured entries.
+
+    The engine's epoch approximation keeps one shared synced prefix (every
+    committed entry) plus per-replica speculative tails encoded as an
+    admitted-mask over uncommitted entries, so steps 1-2 of Alg 4 reduce to
+    the caller's `qualified_replicas` mask + the prefix it already holds.
+    This function is steps 3-4: majority count beyond the sync-point and the
+    (deadline, client-id, request-id) re-sort.
+
+    Returns ``(merge_order, keep)``: ``keep[M]`` marks entries present in
+    >= ceil(f/2)+1 qualified logs AND not behind the authoritative prefix
+    (``synced_tail_deadline``), deduplicated per (client-id, request-id)
+    keeping the smallest key3; ``merge_order`` indexes the kept entries in
+    (deadline, client-id, request-id) order -- the order they enter the new
+    leader's log. Semantics match `merge_logs` (the property-test oracle)
+    on any state the engine can reach.
+    """
+    d = np.asarray(spec_deadline, np.float64)
+    cid = np.asarray(spec_cid, np.int64)
+    rid = np.asarray(spec_rid, np.int64)
+    adm = np.asarray(spec_admitted, bool)
+    threshold = math.ceil(f / 2) + 1
+    counts = adm[:, np.asarray(qualified, bool)].sum(axis=1)
+    keep = (counts >= threshold) & (d >= synced_tail_deadline)
+    if keep.any():
+        # Dedupe by uid: a retried request may leave several speculative
+        # attempts with distinct deadlines; the merged log takes the first
+        # in key3 order (the rest are at-most-once duplicates). `order` is
+        # key3-sorted, so np.unique's first-occurrence indices select them.
+        order = np.lexsort((rid, cid, d))
+        order = order[keep[order]]
+        packed = pack_uids(cid[order], rid[order])
+        _, first_pos = np.unique(packed, return_index=True)
+        merge_order = order[np.sort(first_pos)]
+        keep = np.zeros(d.size, bool)
+        keep[merge_order] = True
+    else:
+        merge_order = np.empty(0, np.int64)
+        keep = np.zeros(d.size, bool)
+    return merge_order, keep
 
 
 def highest_view(replies: Sequence) -> int:
@@ -78,5 +167,8 @@ __all__ = [
     "aggregate_crash_vectors",
     "check_crash_vector",
     "merge_logs",
+    "merge_logs_vectorized",
+    "pack_uids",
+    "qualified_replicas",
     "highest_view",
 ]

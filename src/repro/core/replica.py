@@ -181,7 +181,8 @@ class Replica:
         self._recovery_state: Optional[dict] = None
         self.stats = {"msgs_in": 0, "msgs_out": 0, "fast_replies": 0,
                       "slow_replies": 0, "mods": 0, "releases": 0,
-                      "slow_path_enters": 0, "view_changes": 0}
+                      "slow_path_enters": 0, "view_changes": 0,
+                      "recovered_entries": 0, "dropped_speculative": 0}
 
     # -- identity helpers -----------------------------------------------------
     @property
@@ -854,7 +855,8 @@ class Replica:
                 log=self.log_view(), sync_point=self.sync_point,
                 last_normal_view=self.last_normal_view)
         if len(self._vc_replies) >= self.f + 1 and self.status == Status.VIEWCHANGE:
-            new_log = rec.merge_logs(list(self._vc_replies.values()), self.f)
+            new_log = rec.merge_logs(list(self._vc_replies.values()), self.f,
+                                     stats=self.stats)
             self._adopt_log(new_log, view_id=self.view_id)
             self.status = Status.NORMAL
             self.last_normal_view = self.view_id

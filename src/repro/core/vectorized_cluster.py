@@ -5,10 +5,9 @@ The exact event-driven `NezhaCluster` pays Python-interpreter cost per
 message; million-request sweeps (Figs 1-3, 8, 10, 11 at scale) want the
 vectorized formulation instead. This backend drives the staged engine in
 `repro.core.engine` -- bulk network sampling, proxy stamping/deadline
-bounding, DOM admission+release, commit classification, client delivery --
-with each hot loop dispatching through a pluggable compute tier
-(``numpy`` chunked, ``jit`` fused scan, or ``pallas`` routing the
-`repro.kernels.ops.dom_release` TPU kernel, interpret mode off-TPU).
+bounding, DOM admission+release, commit classification, client delivery,
+replica-log bookkeeping -- with each hot loop dispatching through a
+pluggable compute tier (``numpy``, ``jit``, or ``pallas``).
 
 Time advances in **epochs** (``epoch_duration``): each epoch flushes the
 pending submissions due by its end through the engine, fires ``on_commit``
@@ -17,13 +16,41 @@ loop) back into the pending buffer -- requests resubmitted inside an epoch
 are batched into that epoch's next generation, so `supports_closed_loop` is
 True and `WorkloadDriver` drives open and closed loops identically.
 
-Fault epochs: `crash`/`relaunch` (or the scheduled `crash_at`/`relaunch_at`)
-record timestamped events; epoch boundaries additionally split at event
-times, so the liveness set and the leader (lowest-id alive replica) are
-constant *within* an epoch but change across them. An epoch whose leader
-differs from the previous one charges ``view_change_latency`` to its commits
-(leader re-election downtime), replacing the old whole-batch frozen-leader
-model.
+Fault epochs + recovery (paper SA, Alg 3-4): `crash`/`relaunch` (or the
+scheduled `crash_at`/`relaunch_at`) record timestamped events; epoch
+boundaries additionally split at event times, so the liveness set is
+constant *within* an epoch. Leadership is **view-based** like the event
+backend: the leader of view v is ``leader_of_view(v) = v % n``; when it
+dies, the survivors run the actual view-change pipeline instead of a fixed
+latency penalty:
+
+  1. failure detection  -- ``heartbeat_timeout`` after the crash;
+  2. ViewChange quorum  -- the new leader (of the next view whose leader is
+     alive) needs f ViewChange messages beyond its own: the f-th order
+     statistic of survivor->leader OWDs sampled from the SAME `CloudNetwork`
+     the data plane uses (dropped messages pay ``viewchange_resend``);
+  3. MERGE-LOG          -- the vectorized Alg 4 over the engine's
+     `ReplicaLogState` (last-normal-view filter, sync-point prefix copy,
+     ceil(f/2)+1 majority beyond it, (deadline, client, request) re-sort);
+     merged speculative entries COMMIT at recovery completion (they ride
+     StartView into the new view's log) and are delivered over sampled
+     reply paths; un-merged ones are re-admitted into the next epoch's DOM
+     stage (the proxies retransmit at StartView);
+  4. StartView quorum   -- commits resume once the leader plus f followers
+     are NORMAL in the new view (f-th order statistic of leader->survivor
+     OWDs), which floors every release at the recovery-completion instant
+     (requests arriving mid-recovery wait in the early buffers and release
+     together, in deadline order, at StartView).
+
+While the view change is in flight the data plane is stalled -- epochs
+advance time but flush nothing -- so recovery cost is measured work, not a
+constant. A mid-recovery crash of the NEW leader escalates to the next
+view (fresh detection + quorum timing); losing the f+1 quorum mid-recovery
+stalls the view change until a relaunch restores it (timing restarts --
+the returning replica must be detected and integrated). Relaunched
+replicas complete state transfer during their first live epoch (sync-point
+and last-normal-view catch up then); until that they are not `qualified`
+ViewChange senders.
 
 Modeling notes (steady-state data plane, S4-S6): per-(request, replica)
 arrivals are bulk-sampled per epoch from the same `CloudNetwork` statistical
@@ -32,8 +59,7 @@ percentile of observed proxy->replica OWDs plus the clock-error margin,
 clamped to `dom.clamp_d`; CPU queueing is event-backend-only fidelity.
 Uncommitted attempts (drops, outages, lost quorums) follow the event
 backend's client-retry model: re-issued ``client_timeout`` after they were
-sent (latency keeps the original submit baseline), up to ``max_retries`` --
-so closed-loop lanes survive drops and outages instead of dying silently.
+sent (latency keeps the original submit baseline), up to ``max_retries``.
 Closed-loop throughput is epoch-faithful only down to one network round
 trip: a resubmission whose commit lands after the epoch end waits for the
 next epoch.
@@ -49,7 +75,8 @@ import numpy as np
 from repro.core.cluster import CommonConfig, Cluster, summarize_commits
 from repro.core.dom import DomParams
 from repro.core.engine import DomEngine, PendingBuffer
-from repro.core.quorum import n_replicas
+from repro.core.recovery import pack_uids
+from repro.core.quorum import leader_of_view, n_replicas
 from repro.sim.network import CloudNetwork
 
 
@@ -67,11 +94,21 @@ class VectorizedConfig(CommonConfig):
     leader_batch_delay: float = 50e-6   # leader log-mod batching (slow path)
     tier: str = "numpy"                 # compute tier: numpy | jit | pallas
     epoch_duration: float = 10e-3       # batching granularity of the data plane
-    view_change_latency: float = 2e-3   # commit stall charged on leader change
+    heartbeat_timeout: float = 25e-3    # failure-detector timeout (mirrors
+    #   ReplicaParams.heartbeat_timeout; starts the view-change pipeline)
+    viewchange_resend: float = 10e-3    # recovery-message retransmit interval
     max_retries: int = 16               # client retry cap per request
     deadline_cap: float = 0.0           # SD.2.4: leader pulls deadlines more
     #   than this past its local arrival back (0 = disabled); bounds holding
     #   delay under bad clock sync at the cost of the fast path.
+
+
+@dataclass
+class _ViewChangeInProgress:
+    view: int           # target view
+    leader: int         # leader_of_view(view) -- alive when the VC started
+    t_start: float      # when the previous leader was lost (or the VC retimed)
+    t_done: float       # StartView-quorum completion time (inf below quorum)
 
 
 class VectorizedNezhaCluster(Cluster):
@@ -103,15 +140,21 @@ class VectorizedNezhaCluster(Cluster):
         #   ("clock", role, idx, mu, sigma)        clock fault/clear
         #   ("net", NetworkParams)                 network-regime shift
         self._fault_events: list[tuple[float, tuple]] = []
-        self._last_leader: int = 0
+        self._view = 0
+        self._vc: Optional[_ViewChangeInProgress] = None
+        self._release_floor = 0.0
+        self._last_leader: int = leader_of_view(0, cfg.f)
         self.epoch_leaders: list[int] = []   # -1 marks a total-outage epoch
+        self.view_change_events: list[dict] = []   # completed recoveries
         # accumulated results across epochs
         self._latencies: list[np.ndarray] = []
+        self._trace_commits: list[tuple] = []   # (t, cid, rid, fast, recovered)
         self._n_requests = 0
         self._n_fast = 0
         self._batches = 0
         self._epochs = 0
-        self._n_view_changes = 0
+        self._recovered_entries = 0
+        self._dropped_speculative = 0
 
     @property
     def protocol(self) -> str:
@@ -124,10 +167,14 @@ class VectorizedNezhaCluster(Cluster):
 
     @property
     def leader_id(self) -> int:
-        """Current leader: lowest-id alive replica (last known in outage)."""
-        if self._alive.any():
-            return int(np.argmax(self._alive))
-        return self._last_leader
+        """Current (or elect) leader: the leader of the first view >= the
+        current one whose leader is alive (last known during total outage)."""
+        if not self._alive.any():
+            return self._last_leader
+        v = self._view
+        while not self._alive[leader_of_view(v, self.f)]:
+            v += 1
+        return leader_of_view(v, self.f)
 
     def _key_class(self, keys: tuple) -> int:
         if not keys:
@@ -182,7 +229,12 @@ class VectorizedNezhaCluster(Cluster):
         while self._fault_events and self._fault_events[0][0] <= up_to:
             _, payload = self._fault_events.pop(0)
             if payload[0] == "alive":
-                self._alive[payload[1]] = payload[2]
+                _, rid, alive_after = payload
+                was_alive = bool(self._alive[rid])
+                self._alive[rid] = alive_after
+                if was_alive and not alive_after:
+                    # diskless crash: the replica's log state is gone (SA)
+                    self.engine.logs.on_crash(rid)
             elif payload[0] == "clock":
                 _, role, idx, mu, sigma = payload
                 self.engine.set_clock_fault(role, idx, mu, sigma)
@@ -214,6 +266,166 @@ class VectorizedNezhaCluster(Cluster):
             return True
         return False
 
+    # -- view changes (the recovery pipeline) ------------------------------------
+    def _viable_view(self, from_view: int) -> int:
+        """Smallest view >= from_view whose leader is alive."""
+        v = from_view
+        while not self._alive[leader_of_view(v, self.f)]:
+            v += 1
+        return v
+
+    def _sample_delivered_owds(self, srcs: np.ndarray,
+                               dsts: np.ndarray) -> np.ndarray:
+        """Per-pair OWDs until delivery: dropped recovery messages are
+        retransmitted every ``viewchange_resend`` (same fabric statistics).
+        Bounded at 64 rounds so a pathological drop_prob ~= 1 regime (where
+        nothing can ever be delivered) degrades to a huge-but-finite delay
+        instead of spinning the epoch loop forever."""
+        srcs = np.asarray(srcs)
+        dsts = np.asarray(dsts)
+        owd, dropped = self.net.sample_owd_pairs(srcs, dsts)
+        penalty = np.zeros(owd.size)
+        for _ in range(64):
+            if not dropped.any():
+                break
+            idx = np.flatnonzero(dropped)
+            penalty[idx] += self.cfg.viewchange_resend
+            owd2, d2 = self.net.sample_owd_pairs(srcs[idx], dsts[idx])
+            owd[idx] = owd2
+            dropped[:] = False
+            dropped[idx] = d2
+        return owd + penalty
+
+    def _start_view_change(self, now: float, view: int) -> _ViewChangeInProgress:
+        """Time the recovery pipeline from sampled network work.
+
+        detection (heartbeat_timeout) -> ViewChange quorum at the new leader
+        (f-th order statistic of survivor->leader OWDs beyond its own
+        message) -> MERGE-LOG + StartView batching (leader_batch_delay) ->
+        StartView quorum (f-th order statistic of leader->survivor OWDs:
+        commits need the leader plus f NORMAL followers). Below the f+1
+        quorum the view change cannot complete: t_done = inf until a
+        relaunch restores it.
+        """
+        leader = leader_of_view(view, self.f)
+        others = np.flatnonzero(self._alive)
+        others = others[others != leader]
+        if others.size < self.f:        # < f+1 alive including the leader
+            t_done = np.inf
+        else:
+            t_detect = now + self.cfg.heartbeat_timeout
+            vc_in = self._sample_delivered_owds(
+                others, np.full(others.size, leader))
+            t_quorum = t_detect + float(np.partition(vc_in, self.f - 1)[self.f - 1])
+            sv_out = self._sample_delivered_owds(
+                np.full(others.size, leader), others)
+            t_done = t_quorum + self.cfg.leader_batch_delay \
+                + float(np.partition(sv_out, self.f - 1)[self.f - 1])
+        return _ViewChangeInProgress(view=view, leader=leader,
+                                     t_start=now, t_done=t_done)
+
+    def _update_view(self, now: float) -> None:
+        """Start, escalate, stall, retime, or complete the view change."""
+        if not self._alive.any():
+            self._vc = None     # nobody left to run a view change
+            return
+        while True:
+            if self._vc is None:
+                if self._alive[leader_of_view(self._view, self.f)]:
+                    return
+                self._vc = self._start_view_change(
+                    now, self._viable_view(self._view + 1))
+                return
+            vc = self._vc
+            if not self._alive[vc.leader]:
+                # the new leader died mid-recovery: escalate past it (the
+                # survivors' view-change timers fire afresh)
+                self._vc = self._start_view_change(
+                    now, self._viable_view(vc.view + 1))
+                return
+            if np.count_nonzero(self._alive) < self.f + 1:
+                vc.t_done = np.inf          # quorum lost mid-recovery: stall
+                return
+            if not np.isfinite(vc.t_done):
+                # quorum restored (relaunch): the returning replica must be
+                # detected and integrated -- retime the pipeline from now
+                self._vc = self._start_view_change(now, vc.view)
+                return
+            if now >= vc.t_done:
+                self._complete_view_change()
+                continue    # the next view's leader may be down already
+            return
+
+    def _complete_view_change(self) -> None:
+        """StartView: run the vectorized MERGE-LOG and enter the new view.
+
+        Merged speculative entries commit as part of the new view's initial
+        log -- delivered to their clients over sampled reply paths, removed
+        from the pending retries. Un-merged ones are dropped from the logs
+        and re-admitted into the next epoch's DOM stage (proxy retransmit
+        at StartView).
+        """
+        vc = self._vc
+        t_rec = vc.t_done
+        res = self.engine.logs.view_change(vc.view, self._alive)
+        rec, dropped = res["recovered"], res["dropped"]
+        self._view = vc.view
+        self._last_leader = vc.leader
+        self._release_floor = max(self._release_floor, t_rec)
+        self._vc = None
+        self._recovered_entries += int(rec["cid"].size)
+        self._dropped_speculative += int(dropped["cid"].size)
+        self.view_change_events.append({
+            "view": vc.view, "leader": vc.leader, "t_start": vc.t_start,
+            "t_done": t_rec, "recovered": int(rec["cid"].size),
+            "dropped": int(dropped["cid"].size),
+        })
+        if dropped["cid"].size:
+            # proxies retransmit un-merged entries at StartView: their
+            # pending retry is pulled up to the recovery-completion instant
+            self._pending.reschedule_uids(dropped["cid"], dropped["rid"], t_rec)
+        if rec["cid"].size:
+            self._deliver_recovered(rec, vc.leader, t_rec)
+
+    def _deliver_recovered(self, rec: dict, leader: int, t_rec: float) -> None:
+        cfg = self.cfg
+        k = int(rec["cid"].size)
+        pids = rec["cid"] % cfg.n_proxies
+        pnodes = self.engine.proxy_nodes(pids)
+        leg1 = self._sample_delivered_owds(np.full(k, leader), pnodes)
+        if cfg.co_locate_proxies:
+            leg2 = np.zeros(k)
+        elif cfg.client_proxy_lan > 0.0:
+            leg2 = np.full(k, cfg.client_proxy_lan)
+        else:
+            cnodes = self.engine.client_nodes(rec["cid"])
+            leg2 = self._sample_delivered_owds(pnodes, cnodes)
+        commit_at = t_rec + leg1 + leg2
+        # the clients stop retrying: their request is committed (slow path)
+        rows = self._pending.pop_uids(rec["cid"], rec["rid"])
+        if rows.size == 0:      # pragma: no cover - spec entries are pending
+            found = np.zeros(k, bool)
+        else:
+            keys_p = pack_uids(rows["cid"], rows["rid"])
+            order = np.argsort(keys_p)
+            keys_r = pack_uids(rec["cid"], rec["rid"])
+            pos = np.searchsorted(keys_p[order], keys_r)
+            pos_c = np.minimum(pos, keys_p.size - 1)
+            found = keys_p[order][pos_c] == keys_r
+            lat = commit_at[found] - rows["t0"][order][pos[found]]
+            self._latencies.append(lat)
+        self._trace_commits.append((
+            commit_at[found], rec["cid"][found], rec["rid"][found],
+            np.zeros(int(found.sum()), bool), np.ones(int(found.sum()), bool)))
+        if self.on_commit is not None and found.any():
+            idx = np.flatnonzero(found)
+            idx = idx[np.argsort(commit_at[idx], kind="stable")]
+            t_save = self._now
+            for i in idx:
+                self._now = float(commit_at[i])
+                self.on_commit(int(rec["cid"][i]), int(rec["rid"][i]))
+            self._now = t_save
+
     # -- the epoch loop ----------------------------------------------------------
     def run_for(self, duration: float) -> None:
         horizon = self._now + duration
@@ -222,21 +434,53 @@ class VectorizedNezhaCluster(Cluster):
             self._apply_faults(self._now)
             # _apply_faults consumed every event at or before now, so both
             # candidates are strictly ahead and the loop always advances.
-            epoch_end = min(horizon, self._now + ep, self._next_fault_time())
-            leader = int(np.argmax(self._alive)) if self._alive.any() else -1
-            penalty = 0.0
-            if leader >= 0 and leader != self._last_leader:
-                penalty = self.cfg.view_change_latency
-                self._n_view_changes += 1
-            self._run_epoch_batches(epoch_end, leader, penalty)
-            if leader >= 0:
+            self._update_view(self._now)
+            candidates = [horizon, self._now + ep, self._next_fault_time()]
+            if self._vc is not None and np.isfinite(self._vc.t_done):
+                candidates.append(self._vc.t_done)
+            epoch_end = min(candidates)
+            if self._vc is not None and np.isfinite(self._vc.t_done):
+                # recovery stall: replicas are in VIEWCHANGE status; pending
+                # requests wait in the proxies/early buffers until StartView
+                self.epoch_leaders.append(self._vc.leader)
+            elif self._vc is not None or not self._alive.any():
+                # total outage, or a view change that CANNOT complete (below
+                # the f+1 quorum): the cluster is unresponsive indefinitely,
+                # so clients time out and retry until abandonment -- same
+                # accounting as the event backend, no silently-held requests
+                while True:
+                    due = self._pending.pop_due(epoch_end)
+                    if due.size == 0:
+                        break
+                    self._batches += 1
+                    self._retry(due)
+                self.epoch_leaders.append(
+                    self._vc.leader if self._vc is not None else -1)
+            else:
+                leader = leader_of_view(self._view, self.f)
+                self._run_epoch_batches(epoch_end, leader,
+                                        self._deaths_at(epoch_end))
                 self._last_leader = leader
-            self.epoch_leaders.append(leader)
+                self.epoch_leaders.append(leader)
             self._epochs += 1
             self._now = epoch_end
 
+    def _deaths_at(self, epoch_end: float) -> Optional[np.ndarray]:
+        """Death instants of replicas crashing exactly when this epoch ends:
+        their in-flight messages are cut off mid-epoch (crash fidelity --
+        this is what strands speculative entries on the survivors)."""
+        dies_at = None
+        for t, payload in self._fault_events:
+            if t > epoch_end:
+                break
+            if payload[0] == "alive" and not payload[2]:
+                if dies_at is None:
+                    dies_at = np.full(self.n, np.inf)
+                dies_at[payload[1]] = min(dies_at[payload[1]], t)
+        return dies_at
+
     def _retry(self, failed: np.ndarray) -> None:
-        """Client retry model: an uncommitted attempt (drop, outage, lost
+        """Client retry model: an undelivered attempt (drop, outage, lost
         quorum) is re-issued ``client_timeout`` after it was sent, keeping
         its original t0 for latency. Attempts past ``max_retries`` are
         abandoned (one inf latency records the permanently failed request)."""
@@ -245,12 +489,16 @@ class VectorizedNezhaCluster(Cluster):
         given_up = failed["tries"] > self.cfg.max_retries
         if given_up.any():
             self._latencies.append(np.full(int(given_up.sum()), np.inf))
+            # abandoned requests also leave the speculative logs: a later
+            # recovery must not resurrect a request its client gave up on
+            self.engine.logs.drop_uids(failed["cid"][given_up],
+                                       failed["rid"][given_up])
             failed = failed[~given_up]
         failed["t"] += self.cfg.client_timeout
         self._pending.extend(failed)
 
     def _run_epoch_batches(self, epoch_end: float, leader: int,
-                           penalty: float) -> None:
+                           dies_at: Optional[np.ndarray] = None) -> None:
         """Flush pending work due by ``epoch_end``; commit-triggered
         resubmissions landing inside the epoch run as further generations."""
         while True:
@@ -258,17 +506,19 @@ class VectorizedNezhaCluster(Cluster):
             if due.size == 0:
                 return
             self._batches += 1
-            if leader < 0:
-                # total outage: nothing is stamped this epoch; clients retry
-                self._retry(due)
-                continue
-            s = self.engine.run_epoch(due, self._alive, leader, penalty)
-            self._latencies.append(s.latency[s.committed])
-            self._n_fast += int(np.sum(s.fast & s.committed))
-            if not s.committed.all():
-                self._retry(due[~s.committed])
-            if self.on_commit is not None and s.committed.any():
-                idx = np.flatnonzero(s.committed)
+            s = self.engine.run_epoch(due, self._alive, leader,
+                                      self._release_floor, dies_at=dies_at)
+            self._latencies.append(s.latency[s.delivered])
+            self._n_fast += int(np.sum(s.fast & s.delivered))
+            if s.delivered.any():
+                idx = np.flatnonzero(s.delivered)
+                self._trace_commits.append((
+                    s.commit_at_client[idx], s.cid[idx], s.rid[idx],
+                    (s.fast & s.delivered)[idx], np.zeros(idx.size, bool)))
+            if not s.delivered.all():
+                self._retry(due[~s.delivered])
+            if self.on_commit is not None and s.delivered.any():
+                idx = np.flatnonzero(s.delivered)
                 idx = idx[np.argsort(s.commit_at_client[idx], kind="stable")]
                 t_save = self._now
                 for i in idx:
@@ -278,6 +528,13 @@ class VectorizedNezhaCluster(Cluster):
                     self.on_commit(int(s.cid[i]), int(s.rid[i]))
                 self._now = t_save
 
+    @property
+    def view_changes(self) -> int:
+        """Highest view entered (view 0 is the initial configuration),
+        counting an in-flight view change's target like the event backend's
+        replicas count an initiated one."""
+        return self._vc.view if self._vc is not None else self._view
+
     def summary(self) -> dict:
         lat = (np.concatenate(self._latencies) if self._latencies
                else np.zeros(0))
@@ -285,7 +542,9 @@ class VectorizedNezhaCluster(Cluster):
             self.protocol, "vectorized", lat,
             n_requests=self._n_requests, n_fast=self._n_fast,
             batches=self._batches, epochs=self._epochs,
-            tier=self.engine.tier.name, view_changes=self._n_view_changes,
+            tier=self.engine.tier.name, view_changes=self.view_changes,
+            recovered_entries=self._recovered_entries,
+            dropped_speculative=self._dropped_speculative,
         )
 
 

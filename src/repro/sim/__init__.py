@@ -20,6 +20,14 @@ from repro.sim.scenario import (
     get_scenario,
     run_scenario,
 )
+from repro.sim.trace import (
+    CommitTrace,
+    assert_equivalent_commits,
+    assert_trace_ok,
+    check_equivalent_commits,
+    check_trace,
+    run_scenario_with_trace,
+)
 from repro.sim.workload import ClosedLoopWorkload, OpenLoopWorkload, Workload
 
 __all__ = [
@@ -43,4 +51,10 @@ __all__ = [
     "available_scenarios",
     "get_scenario",
     "run_scenario",
+    "CommitTrace",
+    "check_trace",
+    "check_equivalent_commits",
+    "assert_trace_ok",
+    "assert_equivalent_commits",
+    "run_scenario_with_trace",
 ]

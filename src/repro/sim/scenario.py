@@ -263,7 +263,8 @@ class Scenario:
 SCENARIO_RESULT_KEYS = (
     "protocol", "backend", "tier", "scenario", "n_requests", "committed",
     "fast_commit_ratio", "median_latency", "p90_latency", "mean_latency",
-    "throughput", "epochs", "view_changes", "applied_faults", "skipped_faults",
+    "throughput", "epochs", "view_changes", "recovered_entries",
+    "dropped_speculative", "applied_faults", "skipped_faults",
 )
 
 
@@ -278,7 +279,13 @@ class ScenarioResult:
     ``skipped_faults`` those it cannot model. Acceptance does not imply
     firing: an event stamped past the run horizon is counted applied but
     never executes -- cataloged scenarios always place fault times inside
-    the horizon (enforced by tests/test_scenario.py)."""
+    the horizon (enforced by tests/test_scenario.py).
+
+    ``view_changes`` is the highest view entered (the event backend's
+    replica counter and the vectorized recovery pipeline agree on it);
+    ``recovered_entries``/``dropped_speculative`` count what the view
+    changes' MERGE-LOG kept/discarded beyond the synced prefix (0 on
+    backends without a recovery pipeline)."""
 
     protocol: str
     backend: str
@@ -293,6 +300,8 @@ class ScenarioResult:
     throughput: float
     epochs: int
     view_changes: int
+    recovered_entries: int
+    dropped_speculative: int
     applied_faults: int
     skipped_faults: int
     raw: dict = field(default_factory=dict, repr=False)
@@ -314,6 +323,8 @@ class ScenarioResult:
             throughput=float(summary.get("throughput", float("nan"))),
             epochs=int(summary.get("epochs", 0)),
             view_changes=int(summary.get("view_changes", 0)),
+            recovered_entries=int(summary.get("recovered_entries", 0)),
+            dropped_speculative=int(summary.get("dropped_speculative", 0)),
             applied_faults=applied_faults,
             skipped_faults=skipped_faults,
             raw=dict(summary),
@@ -391,6 +402,37 @@ SCENARIOS: dict[str, Scenario] = {
                                    read_ratio=0.0, skew=0.0),
                  overrides={"n_proxies": 2},
                  description="Fig 15: crash, then the replica rejoins"),
+        # Recovery edge cases (paper SA): cascading leader failure, a
+        # relaunch racing the merge, and a total outage. Timed against the
+        # vectorized pipeline's detection window (heartbeat_timeout 25ms):
+        # the second event lands while the first view change is in flight.
+        Scenario("leader-crash-cascade", f=2,
+                 faults=(Crash(0.12, rid=0), Crash(0.13, rid=1)),
+                 workload=Workload(mode="open", rate_per_client=1500.0,
+                                   duration=0.3, warmup=0.02, drain=0.2,
+                                   read_ratio=0.0, skew=0.0),
+                 overrides={"n_proxies": 2},
+                 description="SA edge: the NEW leader dies during recovery; "
+                             "the view change escalates past it (f=2)"),
+        Scenario("relaunch-mid-recovery",
+                 faults=(Crash(0.12, rid=0), Relaunch(0.13, rid=0)),
+                 workload=Workload(mode="open", rate_per_client=1500.0,
+                                   duration=0.3, warmup=0.02, drain=0.2,
+                                   read_ratio=0.0, skew=0.0),
+                 overrides={"n_proxies": 2},
+                 description="SA edge: the old leader relaunches before the "
+                             "merge completes; leadership stays view-based"),
+        Scenario("total-outage",
+                 faults=(Crash(0.12, rid=0), Crash(0.12, rid=1),
+                         Crash(0.12, rid=2),
+                         Relaunch(0.25, rid=0), Relaunch(0.25, rid=1)),
+                 workload=Workload(mode="open", rate_per_client=1500.0,
+                                   duration=0.4, warmup=0.02, drain=0.2,
+                                   read_ratio=0.0, skew=0.0),
+                 overrides={"n_proxies": 2},
+                 description="SA edge: every replica down, then a quorum "
+                             "relaunches (beyond-f outage; diskless recovery "
+                             "cannot resume on the event backend)"),
         _clock_scenario("clock-skew-leader", "leader", -_CLOCK_MU,
                         description="Appendix D: leader clock 300us slow"),
         _clock_scenario("clock-skew-leader-capped", "leader", -_CLOCK_MU,
@@ -516,6 +558,23 @@ def make_scenario_cluster(protocol_name: str, scenario: Union[str, Scenario],
     return cluster, sc, skipped
 
 
+def run_scenario_on_cluster(protocol_name: str,
+                            scenario: Union[str, Scenario], *,
+                            tier: Optional[str] = None, config=None,
+                            **kw) -> tuple[ScenarioResult, Cluster]:
+    """`run_scenario`, additionally returning the driven cluster -- for
+    callers that inspect post-run state (`repro.sim.trace` records the
+    commit trace from it)."""
+    cluster, sc, skipped = make_scenario_cluster(
+        protocol_name, scenario, tier=tier, config=config, **kw)
+    summary = WorkloadDriver(sc.workload).run(cluster)
+    n_faults = len(sc.faults)
+    result = ScenarioResult.from_summary(
+        sc, summary, applied_faults=n_faults - len(skipped),
+        skipped_faults=len(skipped))
+    return result, cluster
+
+
 def run_scenario(protocol_name: str, scenario: Union[str, Scenario], *,
                  tier: Optional[str] = None, config=None,
                  **kw) -> ScenarioResult:
@@ -526,13 +585,8 @@ def run_scenario(protocol_name: str, scenario: Union[str, Scenario], *,
     extra keywords go to the cluster constructor. Fault events the backend
     cannot model are skipped and counted in the result rather than raising.
     """
-    cluster, sc, skipped = make_scenario_cluster(
-        protocol_name, scenario, tier=tier, config=config, **kw)
-    summary = WorkloadDriver(sc.workload).run(cluster)
-    n_faults = len(sc.faults)
-    return ScenarioResult.from_summary(
-        sc, summary, applied_faults=n_faults - len(skipped),
-        skipped_faults=len(skipped))
+    return run_scenario_on_cluster(protocol_name, scenario, tier=tier,
+                                   config=config, **kw)[0]
 
 
 __all__ = [
@@ -541,4 +595,5 @@ __all__ = [
     "Scenario", "ScenarioResult", "SCENARIO_RESULT_KEYS",
     "SCENARIOS", "available_scenarios", "get_scenario", "resolve_scenario",
     "build_config", "make_scenario_cluster", "run_scenario",
+    "run_scenario_on_cluster",
 ]

@@ -1,0 +1,273 @@
+"""Commit-trace recording + invariant checking across backends and tiers.
+
+The recovery pipeline (paper SA) is only trustworthy if its *observable*
+guarantees hold under every fault schedule, on every backend, on every
+compute tier. This module gives each of them one common currency -- a
+`CommitTrace`:
+
+  log       the durable (synced) log in execution order: one row per entry
+            with its deadline, uid = (client-id, request-id), commutativity
+            class, the view/batch that committed it, and whether the
+            recovery MERGE-LOG (rather than normal operation) admitted it;
+  commits   the client-observed deliveries: commit time, uid, fast/slow,
+            recovered.
+
+and one checker vocabulary over it:
+
+  check_at_most_once        no uid executes twice (dup-free log AND dup-free
+                            client deliveries -- retries must be replays);
+  check_durable_log         durable-prefix preservation across views: every
+                            client-delivered commit is present in the final
+                            durable log, i.e. no MERGE-LOG ever dropped a
+                            committed entry;
+  check_deadline_order      within-view ordering: execution order is
+                            deadline order per commutativity class (S8.2) --
+                            scoped to the whole log on the event backend and
+                            to each epoch batch on the vectorized one (the
+                            documented windowed approximation);
+  check_equivalent_commits  cross-backend/tier commit-sequence equivalence:
+                            two runs of the same scenario committed exactly
+                            the same request set.
+
+Builders exist for both backends (`CommitTrace.from_cluster` dispatches),
+so every test tier and every cataloged scenario can assert through the same
+functions; `run_scenario_with_trace` is the one-call form benchmarks and CI
+smokes use.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+from repro.core.recovery import pack_uids as _pack
+
+COMMIT_COLS = ("t", "cid", "rid", "fast", "recovered")
+LOG_COLS = ("deadline", "cid", "rid", "kcls", "view", "batch", "recovered")
+
+_LOG_DTYPES = dict(deadline=np.float64, cid=np.int64, rid=np.int64,
+                   kcls=np.int64, view=np.int64, batch=np.int64,
+                   recovered=bool)
+_COMMIT_DTYPES = dict(t=np.float64, cid=np.int64, rid=np.int64,
+                      fast=bool, recovered=bool)
+
+
+@dataclass
+class CommitTrace:
+    """One run's committed history: durable log + client deliveries."""
+
+    protocol: str
+    backend: str
+    tier: str
+    log: dict = field(default_factory=dict)       # LOG_COLS -> np.ndarray
+    commits: dict = field(default_factory=dict)   # COMMIT_COLS -> np.ndarray
+    # Ordering scope of the deadline-order invariant: "log" = the whole
+    # durable log is per-class deadline-ordered (event backend); "batch" =
+    # ordered within each epoch batch (the vectorized engine's windowed
+    # steady-state approximation, see ROADMAP fidelity notes).
+    order_scope: str = "log"
+
+    def __post_init__(self):
+        for col in LOG_COLS:
+            self.log.setdefault(col, np.empty(0, _LOG_DTYPES[col]))
+        for col in COMMIT_COLS:
+            self.commits.setdefault(col, np.empty(0, _COMMIT_DTYPES[col]))
+
+    @property
+    def log_uids(self) -> np.ndarray:
+        return _pack(self.log["cid"], self.log["rid"])
+
+    @property
+    def commit_uids(self) -> np.ndarray:
+        return _pack(self.commits["cid"], self.commits["rid"])
+
+    @property
+    def label(self) -> str:
+        return f"{self.protocol}/{self.backend}/{self.tier}"
+
+    # -- builders -------------------------------------------------------------
+    @classmethod
+    def from_cluster(cls, cluster) -> "CommitTrace":
+        if cluster.backend == "vectorized":
+            return cls.from_vectorized_cluster(cluster)
+        return cls.from_event_cluster(cluster)
+
+    @classmethod
+    def from_vectorized_cluster(cls, cluster) -> "CommitTrace":
+        log = cluster.engine.logs.log_columns()
+        recs = cluster._trace_commits
+        commits = {
+            col: (np.concatenate([np.asarray(r[i]) for r in recs])
+                  if recs else np.empty(0, _COMMIT_DTYPES[col]))
+            for i, col in enumerate(COMMIT_COLS)
+        }
+        return cls(protocol=cluster.protocol, backend="vectorized",
+                   tier=cluster.engine.tier.name, log=log, commits=commits,
+                   order_scope="batch")
+
+    @classmethod
+    def from_event_cluster(cls, cluster) -> "CommitTrace":
+        # client-observed deliveries
+        t, cid, rid, fast = [], [], [], []
+        for c in cluster.clients:
+            for req_id, rec in c.records.items():
+                if np.isfinite(rec.commit_time):
+                    t.append(rec.commit_time)
+                    cid.append(c.id)
+                    rid.append(req_id)
+                    fast.append(rec.fast_path)
+        commits = {"t": np.asarray(t, np.float64),
+                   "cid": np.asarray(cid, np.int64),
+                   "rid": np.asarray(rid, np.int64),
+                   "fast": np.asarray(fast, bool),
+                   "recovered": np.zeros(len(t), bool)}
+        # durable log: the most advanced live NORMAL replica (the leader in
+        # steady state); during an outage, the most advanced replica at all
+        ref = max(cluster.replicas,
+                  key=lambda r: (r.alive, r.view_id, len(r.synced)))
+        kcls_intern: dict = {}
+        deadline, lcid, lrid, kcls = [], [], [], []
+        for e in ref.synced:
+            keys = tuple(e.request.keys) if e.request is not None else ()
+            if not keys:
+                k = -1
+            else:
+                k = kcls_intern.setdefault(keys, len(kcls_intern))
+            deadline.append(e.deadline)
+            lcid.append(e.client_id)
+            lrid.append(e.request_id)
+            kcls.append(k)
+        n = len(deadline)
+        log = {"deadline": np.asarray(deadline, np.float64),
+               "cid": np.asarray(lcid, np.int64),
+               "rid": np.asarray(lrid, np.int64),
+               "kcls": np.asarray(kcls, np.int64),
+               "view": np.zeros(n, np.int64),
+               "batch": np.zeros(n, np.int64),
+               "recovered": np.zeros(n, bool)}
+        return cls(protocol=cluster.protocol, backend="event", tier="event",
+                   log=log, commits=commits, order_scope="log")
+
+
+# ---------------------------------------------------------------------------
+# invariant checks (each returns a list of violation strings; empty = OK)
+# ---------------------------------------------------------------------------
+def _dups(uids: np.ndarray) -> np.ndarray:
+    uniq, counts = np.unique(uids, return_counts=True)
+    return uniq[counts > 1]
+
+
+def _uid_str(packed: np.ndarray, limit: int = 5) -> str:
+    items = [f"({u >> 32}, {u & 0xFFFFFFFF})" for u in packed[:limit].tolist()]
+    more = "" if packed.size <= limit else f" (+{packed.size - limit} more)"
+    return ", ".join(items) + more
+
+
+def check_at_most_once(trace: CommitTrace) -> list[str]:
+    """No request executes twice: the durable log holds each uid at most
+    once, and each uid is delivered to its client at most once (a retried
+    request's duplicate attempts must be answered by replay)."""
+    out = []
+    d = _dups(trace.log_uids)
+    if d.size:
+        out.append(f"{trace.label}: log holds duplicated uids {_uid_str(d)}")
+    d = _dups(trace.commit_uids)
+    if d.size:
+        out.append(f"{trace.label}: clients saw duplicate commits for uids "
+                   f"{_uid_str(d)}")
+    return out
+
+
+def check_durable_log(trace: CommitTrace) -> list[str]:
+    """Durable-prefix preservation across views: every client-delivered
+    commit is in the final durable log -- no view change (MERGE-LOG) ever
+    dropped a committed entry."""
+    missing = np.setdiff1d(trace.commit_uids, trace.log_uids)
+    if missing.size:
+        return [f"{trace.label}: committed uids missing from the durable "
+                f"log after {int(trace.log['view'].max(initial=0))} view(s): "
+                f"{_uid_str(missing)}"]
+    return []
+
+
+def check_deadline_order(trace: CommitTrace) -> list[str]:
+    """Within-view ordering: execution (log) order is deadline order per
+    commutativity class (S8.2), scoped per `trace.order_scope`."""
+    log = trace.log
+    n = log["deadline"].size
+    if n == 0:
+        return []
+    if trace.order_scope == "batch":
+        group = _pack(log["batch"], log["kcls"] + 1)  # kcls may be -1
+    else:
+        group = log["kcls"]
+    out = []
+    order = np.argsort(group, kind="stable")    # stable: log order per group
+    g = group[order]
+    d = log["deadline"][order]
+    same_group = g[1:] == g[:-1]
+    bad = same_group & (d[1:] < d[:-1])
+    if bad.any():
+        idx = order[1:][bad]
+        out.append(
+            f"{trace.label}: execution order violates per-class deadline "
+            f"order at {int(bad.sum())} log position(s), first at index "
+            f"{int(idx[0])}")
+    return out
+
+
+def check_trace(trace: CommitTrace) -> list[str]:
+    """All intra-trace invariants."""
+    return (check_at_most_once(trace) + check_durable_log(trace)
+            + check_deadline_order(trace))
+
+
+def check_equivalent_commits(a: CommitTrace, b: CommitTrace) -> list[str]:
+    """Cross-backend/tier commit-sequence equivalence: the two runs
+    committed exactly the same request set. (Commit *times* differ -- the
+    backends sample independent network randomness -- but a request that
+    commits on one backend and not the other is a fidelity bug.)"""
+    ua, ub = np.unique(a.commit_uids), np.unique(b.commit_uids)
+    out = []
+    only_a = np.setdiff1d(ua, ub)
+    if only_a.size:
+        out.append(f"committed on {a.label} but not {b.label}: "
+                   f"{_uid_str(only_a)}")
+    only_b = np.setdiff1d(ub, ua)
+    if only_b.size:
+        out.append(f"committed on {b.label} but not {a.label}: "
+                   f"{_uid_str(only_b)}")
+    return out
+
+
+def assert_trace_ok(trace: CommitTrace) -> None:
+    violations = check_trace(trace)
+    assert not violations, "; ".join(violations)
+
+
+def assert_equivalent_commits(a: CommitTrace, b: CommitTrace) -> None:
+    violations = check_equivalent_commits(a, b)
+    assert not violations, "; ".join(violations)
+
+
+# ---------------------------------------------------------------------------
+# one-call scenario runner with trace capture
+# ---------------------------------------------------------------------------
+def run_scenario_with_trace(protocol_name: str, scenario, *,
+                            tier: Optional[str] = None, config=None, **kw):
+    """`repro.sim.scenario.run_scenario`, returning ``(result, trace)``."""
+    from repro.sim.scenario import run_scenario_on_cluster
+
+    result, cluster = run_scenario_on_cluster(
+        protocol_name, scenario, tier=tier, config=config, **kw)
+    return result, CommitTrace.from_cluster(cluster)
+
+
+__all__ = [
+    "COMMIT_COLS", "LOG_COLS", "CommitTrace",
+    "check_at_most_once", "check_durable_log", "check_deadline_order",
+    "check_trace", "check_equivalent_commits",
+    "assert_trace_ok", "assert_equivalent_commits",
+    "run_scenario_with_trace",
+]

@@ -152,6 +152,37 @@ def test_vectorized_crash_degrades_but_commits():
     assert cl3.summary()["committed"] == 0
 
 
+def test_view_change_counter_aligned_across_backends():
+    """Satellite fix: the vectorized `view_changes` reports views entered
+    through completed recoveries, matching the event backend's replica
+    counter -- NOT leader-id flips. A crash is one view change on both; the
+    relaunch that follows is zero more on both (the old leader re-joins the
+    current view as a follower)."""
+    from repro.sim.scenario import Crash, Relaunch, Scenario
+    from repro.sim.workload import Workload
+
+    sc = Scenario("align", faults=(Crash(0.06, rid=0), Relaunch(0.12, rid=0)),
+                  workload=Workload(mode="open", rate_per_client=400.0,
+                                    duration=0.15, warmup=0.01, drain=0.25),
+                  n_clients=2)
+    from repro.sim.scenario import run_scenario
+
+    ev = run_scenario("nezha", sc)
+    vec = run_scenario("nezha-vectorized", sc)
+    assert ev.view_changes == 1
+    assert vec.view_changes == ev.view_changes
+    # both leaderships are view-based: leader 1 after the crash, still 1
+    # after the relaunch
+    for name in ("nezha", "nezha-vectorized"):
+        cl = make_cluster(name, scenario=sc)
+        cl.start()
+        for ev_ in sc.faults:
+            assert cl.schedule_fault(ev_)
+        cl.submit(0, keys=(1,))
+        cl.run_for(0.4)
+        assert cl.leader_id == 1, name
+
+
 def test_vectorized_agrees_with_event_backend():
     """Same CommonConfig + Workload through both Nezha backends: latency and
     fast-commit ratio must land in the same regime (the vectorized path is

@@ -18,7 +18,12 @@ from repro.core.dom import EarlyBuffer
 from repro.core.hashing import IncrementalHash, entry_hash32_np, entry_hash_np, fold_hashes_np
 from repro.core.messages import LogEntry, OpType, Request, ViewChange
 from repro.core.quorum import QuorumTracker, fast_quorum_size
-from repro.core.recovery import aggregate_crash_vectors, merge_logs
+from repro.core.recovery import (
+    aggregate_crash_vectors,
+    merge_logs,
+    merge_logs_vectorized,
+    qualified_replicas,
+)
 from repro.core.vectorized import dom_release_schedule_chunked
 
 # ---------------------------------------------------------------------------
@@ -319,6 +324,128 @@ def test_synced_prefix_survives(f, seed):
                                   log=entries[:sp], sync_point=sp, last_normal_view=0))
     merged = merge_logs(vcs[: f + 1], f)
     assert [e.request_id for e in merged[:sp]] == list(range(sp))
+
+
+# ---------------------------------------------------------------------------
+# vectorized MERGE-LOG vs the Alg 4 oracle (the recovery stage's math)
+# ---------------------------------------------------------------------------
+def _entry(d: float, cid: int, rid: int) -> LogEntry:
+    return LogEntry(deadline=float(d), client_id=int(cid), request_id=int(rid),
+                    request=Request(client_id=int(cid), request_id=int(rid),
+                                    deadline=float(d)))
+
+
+def _random_recovery_state(f, n_synced, n_spec, seed):
+    """A random engine-reachable recovery state: one shared synced log with
+    per-replica sync-point prefixes, per-replica last-normal-views, a crash
+    schedule (alive mask, >= f+1 alive), and uid-unique speculative entries
+    with distinct deadlines interleaving the synced range."""
+    rng = np.random.default_rng(seed)
+    n = 2 * f + 1
+    deadlines = np.sort(rng.choice(np.arange(1, 10 * (n_synced + n_spec)),
+                                   size=n_synced + n_spec, replace=False)
+                        .astype(float))
+    sy_idx = np.sort(rng.choice(n_synced + n_spec, size=n_synced,
+                                replace=False))
+    sp_mask = np.ones(n_synced + n_spec, bool)
+    sp_mask[sy_idx] = False
+    synced_d = deadlines[sy_idx]
+    spec_d = deadlines[sp_mask]
+    synced = [_entry(d, 0, i) for i, d in enumerate(synced_d)]
+    spec_cid = rng.integers(1, 4, n_spec)
+    spec_rid = np.arange(n_spec)
+    spec_adm = rng.random((n_spec, n)) < rng.uniform(0.2, 0.9)
+    alive = np.zeros(n, bool)
+    alive[rng.choice(n, size=int(rng.integers(f + 1, n + 1)),
+                     replace=False)] = True
+    lnv = rng.integers(-1, 3, n)
+    lnv[np.flatnonzero(alive)[0]] = max(2, lnv.max())  # >=1 qualified survivor
+    sp = rng.integers(0, n_synced + 1, n)
+    best = lnv[alive].max()
+    sp[alive & (lnv == best)] = np.sort(sp[alive & (lnv == best)])[::-1]
+    return synced, spec_d, spec_cid, spec_rid, spec_adm, alive, lnv, sp
+
+
+@settings(max_examples=150, deadline=None)
+@given(
+    f=st.integers(1, 3),
+    n_synced=st.integers(0, 10),
+    n_spec=st.integers(0, 16),
+    seed=st.integers(0, 2**30),
+)
+def test_vectorized_merge_matches_merge_logs_oracle(f, n_synced, n_spec, seed):
+    """Tentpole acceptance: the vectorized MERGE-LOG equals `merge_logs`
+    (the Alg 4 oracle) entry-for-entry on random logs and crash schedules:
+    same last-normal-view filter, same sync-point prefix copy, same
+    ceil(f/2)+1 majority, same (deadline, client, request) order."""
+    synced, spec_d, spec_cid, spec_rid, spec_adm, alive, lnv, sp = \
+        _random_recovery_state(f, n_synced, n_spec, seed)
+    # oracle: each live replica's ViewChange carries its synced prefix plus
+    # its speculative tail, in log order
+    vcs = []
+    for r in np.flatnonzero(alive):
+        tail = [_entry(spec_d[m], spec_cid[m], spec_rid[m])
+                for m in np.flatnonzero(spec_adm[:, r])]
+        tail.sort(key=lambda e: e.key3)
+        vcs.append(ViewChange(
+            replica_id=int(r), view_id=9, crash_vector=tuple([0] * len(alive)),
+            log=synced[: sp[r]] + tail, sync_point=int(sp[r]),
+            last_normal_view=int(lnv[r])))
+    want = [e.key3 for e in merge_logs(vcs, f)]
+    # vectorized: the engine's array-structured equivalent
+    qualified = qualified_replicas(lnv, alive)
+    prefix = int(sp[qualified].max())
+    tail_d = synced[prefix - 1].deadline if prefix else -math.inf
+    merge_order, keep = merge_logs_vectorized(
+        spec_d, spec_cid, spec_rid, spec_adm, qualified, f,
+        synced_tail_deadline=tail_d)
+    got = [e.key3 for e in synced[:prefix]] + [
+        (float(spec_d[m]), int(spec_cid[m]), int(spec_rid[m]))
+        for m in merge_order]
+    assert got == want
+    assert keep.sum() == merge_order.size
+
+
+@settings(max_examples=100, deadline=None)
+@given(
+    f=st.integers(1, 3),
+    n_spec=st.integers(0, 20),
+    seed=st.integers(0, 2**30),
+)
+def test_vectorized_merge_output_invariants(f, n_spec, seed):
+    """On ANY random state: the merge output preserves every synced-prefix
+    entry, executes nothing twice (uid-unique, even with duplicate-uid
+    retry attempts in the input), and is key3-sorted."""
+    rng = np.random.default_rng(seed)
+    n = 2 * f + 1
+    spec_d = rng.uniform(0, 1, n_spec)
+    spec_cid = rng.integers(0, 3, n_spec)
+    spec_rid = rng.integers(0, 4, n_spec)          # uid collisions likely
+    spec_adm = rng.random((n_spec, n)) < 0.7
+    qualified = rng.random(n) < 0.7
+    qualified[rng.integers(0, n)] = True
+    tail = float(rng.uniform(0, 0.5))
+    merge_order, keep = merge_logs_vectorized(
+        spec_d, spec_cid, spec_rid, spec_adm, qualified, f,
+        synced_tail_deadline=tail)
+    thresh = math.ceil(f / 2) + 1
+    key3 = [(float(spec_d[m]), int(spec_cid[m]), int(spec_rid[m]))
+            for m in merge_order]
+    uids = [(c, r) for _, c, r in key3]
+    assert len(set(uids)) == len(uids)             # at-most-once
+    assert key3 == sorted(key3)                    # (deadline, cid, rid) order
+    assert all(d >= tail for d, _, _ in key3)      # prefix stays authoritative
+    counts = spec_adm[:, qualified].sum(axis=1)
+    for m in merge_order:
+        assert counts[m] >= thresh                 # majority-held only
+    # anything majority-held, uid-unique and past the tail must survive
+    from repro.core.recovery import pack_uids
+
+    packed = pack_uids(spec_cid, spec_rid)
+    uniq, cnt = np.unique(packed, return_counts=True)
+    solo = np.isin(packed, uniq[cnt == 1])
+    must_keep = solo & (counts >= thresh) & (spec_d >= tail)
+    assert np.all(keep[must_keep])
 
 
 # ---------------------------------------------------------------------------

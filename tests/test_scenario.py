@@ -267,9 +267,14 @@ def test_net_shift_mid_run_on_vectorized():
 
 
 def test_crash_recovery_scenario_counts_view_changes():
+    """Satellite fix: `view_changes` counts views entered through the
+    recovery pipeline, aligned with the event backend's counter -- a
+    relaunched old leader re-joins the CURRENT view as a follower instead
+    of flipping leadership back (which the old summary double-counted)."""
     r = run_scenario("nezha-vectorized", "crash-recovery")
     assert r.applied_faults == 2
-    assert r.view_changes == 2            # leader lost, then restored
+    assert r.view_changes == 1            # one completed recovery; the
+    #                                       relaunch is not a view change
     assert r.committed == r.n_requests    # f=1 rides through one failure
 
 
