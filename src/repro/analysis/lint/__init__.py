@@ -1,0 +1,43 @@
+"""`repro.analysis.lint` -- the repo's determinism-contract linter.
+
+Nezha's correctness rests on every receiver releasing messages in exactly
+the same deadline order; this reproduction's analogue is a repo-level
+contract (see ROADMAP.md "Determinism contract"):
+
+  * the jit tier is bit-for-bit identical to staged numpy through recovery,
+  * pallas parity holds outside the documented f32 tie window,
+  * the host<->device boundary is exactly where the architecture says it is.
+
+Example-based tests catch violations after the fact; these analyzers name
+them at PR time. Three layers:
+
+  AST passes (repro.analysis.lint.passes) over source files:
+    dtype-parity    DP001/DP002 -- float32 literals/casts and un-x64'd jnp
+                    compute on time-valued arrays;
+    host-sync       HS001-HS004 -- `.item()`, `float()`/`int()` on traced
+                    values, `np.asarray` on device arrays, Python branching
+                    on traced operands inside jitted code. Doubles as the
+                    machine-readable inventory of host<->device round trips
+                    (ROADMAP item 2): `--inventory out.json`;
+    rng-discipline  RNG001/RNG002 -- global `np.random.*` state and PRNG
+                    key reuse.
+
+  jaxpr trace-safety (repro.analysis.lint.trace_safety):
+    TS001-TS003 -- traces `_build_fused_step` and the kernel wrappers,
+    walks the jaxpr for f32 compute on time operands and host callbacks,
+    and bounds the compile count across the scenario catalog.
+
+  runtime sanitizer (repro.core.sanitizer.SanitizerTier):
+    not a static pass -- wraps any ComputeTier and checks per-epoch
+    invariants; enabled via `VectorizedConfig.sanitize` or REPRO_SANITIZE=1.
+
+CLI:  python -m repro.analysis.lint src/
+Suppressions: `lint-suppressions.txt` at the repo root (justification
+required per entry) plus inline `# lint: allow[RULE] reason` pragmas and
+function-scope `# lint: span-relative-f32 -- reason` annotations for the
+documented Pallas span-relative key code.
+"""
+from repro.analysis.lint.findings import Finding, RULES
+from repro.analysis.lint.runner import LintReport, lint_paths, run_lint
+
+__all__ = ["Finding", "RULES", "LintReport", "lint_paths", "run_lint"]

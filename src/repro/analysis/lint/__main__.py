@@ -1,0 +1,6 @@
+"""CLI: ``python -m repro.analysis.lint [paths...]``."""
+import sys
+
+from repro.analysis.lint.runner import run_lint
+
+sys.exit(run_lint())

@@ -1,0 +1,80 @@
+"""Finding record + rule registry for the determinism-contract linter."""
+from __future__ import annotations
+
+from dataclasses import asdict, dataclass, field
+
+# rule id -> (pass, one-line description)
+RULES: dict[str, tuple[str, str]] = {
+    # dtype-parity: the time plane is float64 end to end, except the
+    # explicitly-annotated Pallas span-relative key code.
+    "DP001": ("dtype-parity",
+              "float32 literal/cast on a time-valued expression outside "
+              "annotated span-relative key code"),
+    "DP002": ("dtype-parity",
+              "jnp compute on time-valued operands in a function with no "
+              "enable_x64 on any intra-module path"),
+    # host-sync: host<->device round trips must be exactly the documented
+    # ones (this pass IS the round-trip inventory ROADMAP item 2 consumes).
+    "HS001": ("host-sync", ".item() forces a device->host sync"),
+    "HS002": ("host-sync",
+              "float()/int() on a device-array value forces a host sync"),
+    "HS003": ("host-sync",
+              "np.asarray/np.array on a device-array value forces a "
+              "device->host transfer"),
+    "HS004": ("host-sync",
+              "Python branch on a traced value inside jitted code "
+              "(concretization error or silent host sync)"),
+    # rng-discipline: reproducibility requires owned generators and
+    # split-once PRNG keys.
+    "RNG001": ("rng-discipline",
+               "global numpy RNG state (np.random.<fn>); use "
+               "np.random.default_rng(seed) / Generator instances"),
+    "RNG002": ("rng-discipline",
+               "jax PRNG key consumed more than once without split"),
+    # trace-safety: asserted on the actual jaxpr of the fused epoch step
+    # and kernel wrappers.
+    "TS001": ("trace-safety",
+              "float32 op on time operands inside a trace expected to be "
+              "float64 end to end"),
+    "TS002": ("trace-safety", "host callback primitive inside a fused trace"),
+    "TS003": ("trace-safety",
+              "unbounded compile count across the scenario catalog "
+              "(shape instability)"),
+}
+
+
+@dataclass
+class Finding:
+    """One linter finding, machine-readable.
+
+    ``suppressed`` findings still appear in the inventory output but do not
+    fail the run; ``justification`` carries the suppression's reason.
+    """
+
+    rule: str
+    path: str
+    line: int
+    col: int
+    message: str
+    symbol: str = ""            # enclosing function/method qualname
+    suppressed: bool = False
+    justification: str = ""
+    extra: dict = field(default_factory=dict)
+
+    @property
+    def pass_name(self) -> str:
+        return RULES.get(self.rule, ("?", ""))[0]
+
+    def format(self) -> str:
+        where = f"{self.path}:{self.line}:{self.col}"
+        sym = f" [{self.symbol}]" if self.symbol else ""
+        sup = f"  (suppressed: {self.justification})" if self.suppressed else ""
+        return f"{where}: {self.rule} {self.message}{sym}{sup}"
+
+    def as_dict(self) -> dict:
+        d = asdict(self)
+        d["pass"] = self.pass_name
+        return d
+
+
+__all__ = ["Finding", "RULES"]

@@ -1,0 +1,132 @@
+"""Suppression machinery: inline pragmas, function annotations, and the
+repo-level suppression file.
+
+Three suppression channels, all justification-carrying:
+
+  line pragma       ``# lint: allow[DP001] reason...`` on (or immediately
+                    above) the flagged line silences that rule there;
+  function pragma   ``# lint: span-relative-f32 -- reason...`` anywhere in a
+                    function body marks the whole function as documented
+                    Pallas span-relative key code: DP001/DP002/TS001 are
+                    expected there (f32 keys are the *point*);
+  suppression file  ``lint-suppressions.txt`` at the repo root, one entry per
+                    line: ``RULE path[:qualname] -- justification``. Entries
+                    without a justification are a configuration error
+                    (exit 2); unused entries are reported so the file cannot
+                    rot.
+"""
+from __future__ import annotations
+
+import io
+import re
+import tokenize
+from dataclasses import dataclass, field
+from pathlib import Path
+
+_ALLOW_RE = re.compile(r"#\s*lint:\s*allow\[([A-Z]+\d+(?:\s*,\s*[A-Z]+\d+)*)\]\s*(.*)")
+_SPAN_F32_RE = re.compile(r"#\s*lint:\s*span-relative-f32\s*(?:--\s*(.*))?")
+
+
+@dataclass
+class FilePragmas:
+    """Per-file pragma index, built once from the token stream."""
+
+    # line -> {rule -> reason}; a pragma covers its own line and the next
+    # code line (so it can sit above the statement it annotates).
+    allow: dict[int, dict[str, str]] = field(default_factory=dict)
+    # lines bearing a span-relative-f32 marker -> reason
+    span_f32_lines: dict[int, str] = field(default_factory=dict)
+
+    def allows(self, rule: str, line: int) -> str | None:
+        for ln in (line, line - 1):
+            reasons = self.allow.get(ln)
+            if reasons and rule in reasons:
+                return reasons[rule] or "inline pragma"
+        return None
+
+
+def collect_pragmas(source: str) -> FilePragmas:
+    out = FilePragmas()
+    try:
+        toks = tokenize.generate_tokens(io.StringIO(source).readline)
+        for tok in toks:
+            if tok.type != tokenize.COMMENT:
+                continue
+            m = _ALLOW_RE.search(tok.string)
+            if m:
+                rules = [r.strip() for r in m.group(1).split(",")]
+                reason = m.group(2).strip()
+                entry = out.allow.setdefault(tok.start[0], {})
+                for r in rules:
+                    entry[r] = reason
+            m = _SPAN_F32_RE.search(tok.string)
+            if m:
+                out.span_f32_lines[tok.start[0]] = (m.group(1) or "").strip()
+    except tokenize.TokenError:
+        pass
+    return out
+
+
+# ---------------------------------------------------------------------------
+# suppression file
+# ---------------------------------------------------------------------------
+@dataclass
+class Suppression:
+    rule: str
+    path: str           # repo-relative posix path prefix
+    qualname: str       # "" = whole file
+    justification: str
+    lineno: int         # line in the suppression file (for unused reports)
+    used: bool = False
+
+    def matches(self, rule: str, path: str, symbol: str) -> bool:
+        if rule != self.rule:
+            return False
+        p = Path(path).as_posix()
+        if not (p == self.path or p.endswith("/" + self.path)
+                or self.path.endswith("/" + p)):
+            return False
+        if self.qualname and not (
+                symbol == self.qualname
+                or symbol.startswith(self.qualname + ".")
+                or symbol.endswith("." + self.qualname)):
+            return False
+        return True
+
+
+class SuppressionFileError(ValueError):
+    """Malformed suppression file (missing justification etc.) -> exit 2."""
+
+
+def parse_suppression_file(path: Path) -> list[Suppression]:
+    out: list[Suppression] = []
+    if not path.exists():
+        return out
+    for i, raw in enumerate(path.read_text().splitlines(), start=1):
+        line = raw.strip()
+        if not line or line.startswith("#"):
+            continue
+        if "--" not in line:
+            raise SuppressionFileError(
+                f"{path}:{i}: suppression entry needs a '-- justification': "
+                f"{line!r}")
+        spec, _, justification = line.partition("--")
+        justification = justification.strip()
+        if not justification:
+            raise SuppressionFileError(
+                f"{path}:{i}: empty justification in {line!r}")
+        parts = spec.split()
+        if len(parts) != 2:
+            raise SuppressionFileError(
+                f"{path}:{i}: expected 'RULE path[:qualname] -- reason', "
+                f"got {line!r}")
+        rule, target = parts
+        fpath, _, qual = target.partition(":")
+        out.append(Suppression(rule=rule, path=Path(fpath).as_posix(),
+                               qualname=qual, justification=justification,
+                               lineno=i))
+    return out
+
+
+__all__ = ["FilePragmas", "collect_pragmas", "Suppression",
+           "SuppressionFileError", "parse_suppression_file"]

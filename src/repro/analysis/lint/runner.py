@@ -1,0 +1,175 @@
+"""Lint orchestration: file discovery, suppression application, reporting,
+and the CLI entry point (`python -m repro.analysis.lint`).
+
+Exit codes: 0 = clean (or every finding suppressed with a justification),
+1 = active findings, 2 = configuration error (unparseable source given as
+an explicit target, malformed suppression file).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from dataclasses import dataclass, field
+from pathlib import Path
+
+from repro.analysis.lint.findings import Finding, RULES
+from repro.analysis.lint.pragmas import (SuppressionFileError, Suppression,
+                                         collect_pragmas,
+                                         parse_suppression_file)
+from repro.analysis.lint.passes import lint_module
+
+DEFAULT_SUPPRESSION_FILE = "lint-suppressions.txt"
+# directories never worth linting
+_SKIP_DIRS = {".git", "__pycache__", ".venv", "build", "dist", ".claude"}
+
+
+@dataclass
+class LintReport:
+    findings: list[Finding] = field(default_factory=list)
+    files: list[str] = field(default_factory=list)
+    errors: list[str] = field(default_factory=list)          # config errors
+    unused_suppressions: list[str] = field(default_factory=list)
+
+    @property
+    def active(self) -> list[Finding]:
+        return [f for f in self.findings if not f.suppressed]
+
+    @property
+    def exit_code(self) -> int:
+        if self.errors:
+            return 2
+        return 1 if self.active else 0
+
+    def inventory(self) -> list[dict]:
+        """The machine-readable host<->device round-trip inventory
+        (ROADMAP item 2): every host-sync finding, suppressed or not --
+        a *justified* sync is still a sync the device-resident epoch
+        refactor has to absorb."""
+        return [f.as_dict() for f in self.findings
+                if f.rule.startswith("HS")]
+
+    def format(self, verbose: bool = False) -> str:
+        lines = []
+        shown = self.findings if verbose else self.active
+        for f in sorted(shown, key=lambda f: (f.path, f.line, f.rule)):
+            lines.append(f.format())
+        n_sup = sum(1 for f in self.findings if f.suppressed)
+        lines.append(f"{len(self.files)} file(s): "
+                     f"{len(self.active)} finding(s), {n_sup} suppressed")
+        for u in self.unused_suppressions:
+            lines.append(f"warning: unused suppression: {u}")
+        for e in self.errors:
+            lines.append(f"error: {e}")
+        return "\n".join(lines)
+
+
+def _discover(paths: list[str]) -> list[Path]:
+    out: list[Path] = []
+    for p in paths:
+        path = Path(p)
+        if path.is_dir():
+            out.extend(sorted(
+                f for f in path.rglob("*.py")
+                if not any(part in _SKIP_DIRS for part in f.parts)))
+        elif path.suffix == ".py":
+            out.append(path)
+    return out
+
+
+def _apply_suppressions(findings: list[Finding],
+                        suppressions: list[Suppression]) -> None:
+    for f in findings:
+        if f.suppressed:
+            continue
+        for s in suppressions:
+            if s.matches(f.rule, f.path, f.symbol):
+                f.suppressed = True
+                f.justification = s.justification
+                s.used = True
+                break
+
+
+def lint_paths(paths: list[str], *, suppression_file: str | None = None,
+               trace: bool = False) -> LintReport:
+    """Run the AST passes (and optionally the jaxpr layer) over ``paths``."""
+    report = LintReport()
+    try:
+        suppressions = parse_suppression_file(
+            Path(suppression_file)) if suppression_file else []
+    except SuppressionFileError as exc:
+        report.errors.append(str(exc))
+        return report
+    for file in _discover(paths):
+        source = file.read_text()
+        rel = file.as_posix()
+        report.files.append(rel)
+        try:
+            pragmas = collect_pragmas(source)
+            report.findings.extend(lint_module(rel, source, pragmas))
+        except SyntaxError as exc:
+            report.errors.append(f"{rel}: cannot parse: {exc}")
+    if trace:
+        from repro.analysis.lint.trace_safety import trace_findings
+        report.findings.extend(trace_findings())
+    _apply_suppressions(report.findings, suppressions)
+    report.unused_suppressions = [
+        f"{s.rule} {s.path}" + (f":{s.qualname}" if s.qualname else "")
+        for s in suppressions if not s.used]
+    return report
+
+
+def run_lint(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="Determinism-contract linter (see repro.analysis.lint "
+                    "docstring; rules: " + ", ".join(sorted(RULES)) + ")")
+    ap.add_argument("paths", nargs="*", default=["src"],
+                    help="files or directories to lint (default: src)")
+    ap.add_argument("--suppressions", default=None,
+                    help=f"suppression file (default: "
+                         f"{DEFAULT_SUPPRESSION_FILE} when present)")
+    ap.add_argument("--no-trace", action="store_true",
+                    help="skip the jaxpr trace-safety layer (TS rules)")
+    ap.add_argument("--inventory", metavar="OUT.json", default=None,
+                    help="write the host<->device round-trip inventory "
+                         "(all HS findings incl. suppressed) as JSON")
+    ap.add_argument("--json", action="store_true",
+                    help="print the full report as JSON")
+    ap.add_argument("--verbose", "-v", action="store_true",
+                    help="also print suppressed findings")
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rule, (pass_name, desc) in sorted(RULES.items()):
+            print(f"{rule}  [{pass_name}] {desc}")
+        return 0
+
+    paths = args.paths or ["src"]
+    supp = args.suppressions
+    if supp is None and Path(DEFAULT_SUPPRESSION_FILE).exists():
+        supp = DEFAULT_SUPPRESSION_FILE
+    report = lint_paths(paths, suppression_file=supp,
+                        trace=not args.no_trace)
+
+    if args.inventory:
+        Path(args.inventory).write_text(
+            json.dumps(report.inventory(), indent=2) + "\n")
+    if args.json:
+        print(json.dumps({
+            "findings": [f.as_dict() for f in report.findings],
+            "files": report.files,
+            "errors": report.errors,
+            "unused_suppressions": report.unused_suppressions,
+            "exit_code": report.exit_code,
+        }, indent=2))
+    else:
+        out = report.format(verbose=args.verbose)
+        if out:
+            print(out)
+    return report.exit_code
+
+
+__all__ = ["LintReport", "lint_paths", "run_lint",
+           "DEFAULT_SUPPRESSION_FILE"]

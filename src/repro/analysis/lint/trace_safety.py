@@ -1,0 +1,267 @@
+"""Layer 2: jaxpr trace-safety checks (TS001-TS003).
+
+Static source checks can miss what jit *actually* stages, so this layer
+traces the real programs -- `repro.core.engine._build_fused_step` across
+its specialization axes and the kernel wrappers -- and walks the jaxprs:
+
+  TS001  the jit tier's fused step is the bit-for-bit contract's hot path;
+         every floating aval in its trace must be float64 (an f32 aval
+         means an operand silently dropped out of the time plane);
+  TS002  no host-callback primitives inside any fused/kernel trace (a
+         callback is a hidden host sync AND a nondeterminism hazard);
+  TS003  shape stability: fused tiers must pad epoch batches to pow2
+         buckets, and the worst-case compile count across the scenario
+         catalog (specialization keys x pow2 buckets) must stay bounded.
+
+The Pallas wrappers are deliberately excluded from TS001 -- their f32
+span-relative keys are the documented caveat -- but they are traced for
+TS002.
+"""
+from __future__ import annotations
+
+import math
+from typing import Iterable, Iterator
+
+import numpy as np
+
+from repro.analysis.lint.findings import Finding
+
+ENGINE_PATH = "src/repro/core/engine.py"
+OPS_PATH = "src/repro/kernels/ops.py"
+
+# worst-case jit-compile budget for one full catalog sweep on one tier
+COMPILE_LIMIT = 128
+# headroom factor on the per-epoch batch estimate (retries, drain bursts)
+_BATCH_SLACK = 4.0
+
+_CALLBACK_PRIMS = {"outside_call", "infeed", "outfeed"}
+
+
+# ---------------------------------------------------------------------------
+# jaxpr walking
+# ---------------------------------------------------------------------------
+def _sub_jaxprs(value) -> Iterator:
+    if hasattr(value, "jaxpr"):          # ClosedJaxpr
+        yield value.jaxpr
+    elif hasattr(value, "eqns"):         # Jaxpr
+        yield value
+    elif isinstance(value, (list, tuple)):
+        for v in value:
+            yield from _sub_jaxprs(v)
+
+
+def iter_jaxprs(jaxpr) -> Iterator:
+    """The jaxpr plus every nested sub-jaxpr (pjit bodies, branches...)."""
+    if hasattr(jaxpr, "jaxpr"):
+        jaxpr = jaxpr.jaxpr
+    yield jaxpr
+    for eqn in jaxpr.eqns:
+        for v in eqn.params.values():
+            for sub in _sub_jaxprs(v):
+                yield from iter_jaxprs(sub)
+
+
+def non_f64_float_ops(jaxpr) -> list[tuple[str, str]]:
+    """(primitive, dtype) for every eqn touching a float aval != float64."""
+    out = []
+    for j in iter_jaxprs(jaxpr):
+        for eqn in j.eqns:
+            for v in list(eqn.invars) + list(eqn.outvars):
+                aval = getattr(v, "aval", None)
+                dt = getattr(aval, "dtype", None)
+                if dt is not None and np.issubdtype(dt, np.floating) \
+                        and dt != np.float64:
+                    out.append((eqn.primitive.name, str(dt)))
+    return out
+
+
+def callback_prims(jaxpr) -> list[str]:
+    out = []
+    for j in iter_jaxprs(jaxpr):
+        for eqn in j.eqns:
+            name = eqn.primitive.name
+            if "callback" in name or name in _CALLBACK_PRIMS:
+                out.append(name)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# tracing the real programs
+# ---------------------------------------------------------------------------
+def _fused_step_args(n: int, r: int, *, dies_at=False, clock=False) -> dict:
+    rng = np.random.default_rng(0)
+    kw = dict(
+        t=rng.uniform(0.0, 1.0, n),
+        c2p=rng.uniform(0.0, 1e-3, n),
+        owd_pr=rng.uniform(0.0, 1e-3, (n, r)),
+        drop_pr=np.zeros((n, r), bool),
+        reply_owd=rng.uniform(0.0, 1e-3, (n, r)),
+        alive=np.ones(r, bool),
+        kcls=np.zeros(n, np.int64),
+        leader=0,
+        bound=1e-3,
+        fetch=1e-3,
+        batch_delay=0.0,
+        cap=1.0,
+        floor=0.0,
+    )
+    if dies_at:
+        kw["dies_at"] = np.full(r, np.inf)
+    if clock:
+        kw["stamp_off"] = np.zeros(n)
+        kw["arr_off"] = np.zeros((n, r))
+    return kw
+
+
+def check_fused_step(f: int = 1, n: int = 8) -> list[Finding]:
+    """Trace the jit tier's fused step across its specialization axes and
+    assert the float64-end-to-end + no-callback contract on each jaxpr."""
+    import jax
+    from jax.experimental import enable_x64
+
+    from repro.core.engine import JitTier
+
+    findings: list[Finding] = []
+    tier = JitTier()
+    r = 2 * f + 1
+    variants = [
+        (False, False, {}),
+        (True, False, {}),
+        (False, True, {}),
+        (True, True, {}),
+        (False, False, dict(dies_at=True)),
+        (False, False, dict(clock=True)),
+    ]
+    for use_kcls, use_cap, fault in variants:
+        label = (f"_build_fused_step(use_kcls={use_kcls}, "
+                 f"use_cap={use_cap}"
+                 + (f", {'/'.join(fault)}" if fault else "") + ")")
+        step = tier.epoch_step(f, use_kcls=use_kcls, use_cap=use_cap)
+        kw = _fused_step_args(n, r, **fault)
+        with enable_x64():
+            jaxpr = jax.make_jaxpr(step)(**kw)
+        bad = non_f64_float_ops(jaxpr)
+        if bad:
+            prims = ", ".join(f"{p}[{d}]" for p, d in bad[:4])
+            findings.append(Finding(
+                rule="TS001", path=ENGINE_PATH, line=0, col=0,
+                symbol=label,
+                message=f"{len(bad)} non-float64 float op(s) in the jit "
+                        f"fused-step trace: {prims}",
+                extra={"ops": bad[:32]}))
+        cbs = callback_prims(jaxpr)
+        if cbs:
+            findings.append(Finding(
+                rule="TS002", path=ENGINE_PATH, line=0, col=0,
+                symbol=label,
+                message=f"host callback primitive(s) in the fused-step "
+                        f"trace: {', '.join(sorted(set(cbs)))}"))
+    return findings
+
+
+def check_kernel_wrappers(n: int = 8, r: int = 3) -> list[Finding]:
+    """TS002 on the Pallas kernel wrappers (their f32 keys are the
+    documented caveat, so TS001 does not apply)."""
+    import jax
+    from jax.experimental import enable_x64
+
+    findings: list[Finding] = []
+    try:
+        from repro.kernels.ops import (dom_admit_traced,
+                                       dom_deadline_order_traced)
+        rng = np.random.default_rng(0)
+        d = rng.uniform(0.0, 1.0, n)
+        a = rng.uniform(0.0, 1.0, (n, r))
+        with enable_x64():
+            traces = {
+                "dom_admit_traced":
+                    jax.make_jaxpr(
+                        lambda dd, aa: dom_admit_traced(
+                            dd, aa, use_pallas=True))(d, a),
+                "dom_deadline_order_traced":
+                    jax.make_jaxpr(
+                        lambda dd: dom_deadline_order_traced(
+                            dd, use_pallas=True))(d),
+            }
+    except Exception as exc:    # surface, never crash the lint run
+        return [Finding(
+            rule="TS002", path=OPS_PATH, line=0, col=0,
+            message=f"failed to trace kernel wrappers: {exc!r}")]
+    for name, jaxpr in traces.items():
+        cbs = callback_prims(jaxpr)
+        if cbs:
+            findings.append(Finding(
+                rule="TS002", path=OPS_PATH, line=0, col=0, symbol=name,
+                message=f"host callback primitive(s) in the kernel trace: "
+                        f"{', '.join(sorted(set(cbs)))}"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# TS003: shape stability / bounded compile count over the catalog
+# ---------------------------------------------------------------------------
+def _scenario_batch_estimate(sc) -> int:
+    """Worst-case rows in one epoch batch for a cataloged scenario."""
+    from repro.core.vectorized_cluster import VectorizedConfig
+
+    w = sc.workload
+    epoch = float(sc.overrides.get(
+        "epoch_duration", VectorizedConfig.epoch_duration))
+    if w.mode == "closed":
+        per_epoch = sc.n_clients * max(w.lanes, 1)
+    else:
+        per_epoch = w.rate_per_client * sc.n_clients * epoch
+    return max(1, int(math.ceil(per_epoch * _BATCH_SLACK)))
+
+
+def check_compile_stability(scenarios: Iterable = None) -> list[Finding]:
+    from repro.core.engine import TIERS, _pow2_bucket
+
+    findings: list[Finding] = []
+    # fused tiers must pad: without pow2 bucketing every distinct batch
+    # size is a fresh XLA compile (the O(log N) guarantee evaporates)
+    for name, cls in TIERS.items():
+        if cls.fused and not cls.pad_batches:
+            findings.append(Finding(
+                rule="TS003", path=ENGINE_PATH, line=0, col=0,
+                symbol=f"{cls.__name__}",
+                message=f"fused tier {name!r} has pad_batches=False: "
+                        "per-epoch batch shapes become unbounded compile "
+                        "keys"))
+    if scenarios is None:
+        from repro.sim.scenario import SCENARIOS
+        scenarios = SCENARIOS.values()
+    buckets: set[int] = set()
+    spec_keys: set[tuple] = set()
+    for sc in scenarios:
+        n_max = _pow2_bucket(_scenario_batch_estimate(sc))
+        b = 1
+        while b <= n_max:
+            buckets.add(b)
+            b *= 2
+        use_kcls = bool(sc.overrides.get("commutative", False))
+        use_cap = float(sc.overrides.get("deadline_cap", 0.0) or 0.0) > 0.0
+        spec_keys.add((sc.f, use_kcls, use_cap))
+    worst = len(buckets) * len(spec_keys)
+    if worst > COMPILE_LIMIT:
+        findings.append(Finding(
+            rule="TS003", path="src/repro/sim/scenario.py", line=0, col=0,
+            symbol="SCENARIOS",
+            message=f"catalog sweep worst-case compile count {worst} "
+                    f"({len(spec_keys)} specialization keys x "
+                    f"{len(buckets)} pow2 buckets) exceeds "
+                    f"{COMPILE_LIMIT}",
+            extra={"buckets": sorted(buckets),
+                   "keys": sorted(spec_keys)}))
+    return findings
+
+
+def trace_findings() -> list[Finding]:
+    """All layer-2 findings (traces the real programs; needs jax)."""
+    return (check_fused_step() + check_kernel_wrappers()
+            + check_compile_stability())
+
+
+__all__ = ["iter_jaxprs", "non_f64_float_ops", "callback_prims",
+           "check_fused_step", "check_kernel_wrappers",
+           "check_compile_stability", "trace_findings", "COMPILE_LIMIT"]

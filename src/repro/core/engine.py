@@ -63,6 +63,8 @@ one-shot (admission + classification) form.
 """
 from __future__ import annotations
 
+import os
+import warnings
 from dataclasses import dataclass, field
 from typing import Optional, Union
 
@@ -196,6 +198,9 @@ class ComputeTier:
     # Fused tiers run stamp->dom->commit as ONE jitted device dispatch per
     # epoch generation (FusedEpochStage) instead of the staged numpy path.
     fused = False
+    # Compares time values through span-relative float32 keys (the Pallas
+    # kernels' documented tie caveat); drives the per-epoch tie-risk guard.
+    f32_time_keys = False
 
     def release_schedule(self, deadlines: np.ndarray,
                          arrivals: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
@@ -257,6 +262,7 @@ class JitTier(ComputeTier):
             adm, rel = _watermark_schedule_jit(
                 jnp.asarray(np.asarray(deadlines, np.float64)),
                 jnp.asarray(np.asarray(arrivals, np.float64)))
+            # lint: allow[HS003] the documented per-epoch device->host pull at the staged-tier boundary
             return np.asarray(adm), np.asarray(rel)
 
     def admit_traced(self, deadlines, arrivals):
@@ -280,6 +286,7 @@ class PallasTier(JitTier):
     """
 
     name = "pallas"
+    f32_time_keys = True
 
     def release_schedule(self, deadlines, arrivals):
         from repro.kernels.ops import dom_admit
@@ -316,6 +323,14 @@ def make_tier(tier: Union[str, ComputeTier]) -> ComputeTier:
         return TIERS[tier]()
     except KeyError:
         raise KeyError(f"unknown compute tier {tier!r}; available: {', '.join(TIERS)}")
+
+
+class F32TieRiskWarning(UserWarning):
+    """An epoch's minimum positive deadline separation fell below
+    span * 2^-23: distinct deadlines may collapse to the same span-relative
+    float32 key in the Pallas kernels and order arbitrarily (the documented
+    tie caveat). Exact duplicates are NOT at risk -- the kernels break them
+    through the integer aux key, like the float64 tiers."""
 
 
 # ---------------------------------------------------------------------------
@@ -807,6 +822,7 @@ class FusedEpochStage(Stage):
                        np.asarray(s.alive, bool), kcls, s.leader,
                        float(bound), fetch, float(cfg.leader_batch_delay),
                        cap, float(s.release_floor), **fault_kw)
+            # lint: allow[HS003] THE one epoch-end device->host pull of the fused program's outputs
             out = [np.asarray(o)[:N] for o in out]
         (s.stamp, s.deadlines, s.arrivals, s.admitted, s.release,
          s.commit_time, s.fast, s.committed) = out
@@ -1137,9 +1153,18 @@ class DomEngine:
         self.net = net
         self.n = n_replicas
         self.tier = make_tier(tier)
+        if getattr(cfg, "sanitize", False) \
+                or os.environ.get("REPRO_SANITIZE", "") not in ("", "0"):
+            from repro.core.sanitizer import SanitizerTier
+
+            if not isinstance(self.tier, SanitizerTier):
+                self.tier = SanitizerTier(self.tier)
         self.track_logs = track_logs    # benchmarks measuring the pure data
         #   plane (benchmarks/dom_scale.py) opt out of log accumulation
         self.logs = ReplicaLogState(n_replicas, cfg.f)
+        # Pallas f32 tie guard (see F32TieRiskWarning): epochs whose minimum
+        # positive deadline separation fell inside the f32 tie window
+        self.f32_tie_risk_epochs = 0
         if stages is None:
             stages = FUSED_STAGES if self.tier.fused else DEFAULT_STAGES
         self.stages = [s() for s in stages]
@@ -1234,13 +1259,40 @@ class DomEngine:
         )
         for stage in self.stages:
             stage.run(s, self)
+        if self.tier.f32_time_keys and s.deadlines is not None:
+            self._check_f32_tie_risk(s.deadlines)
+        check = getattr(self.tier, "check_epoch", None)
+        if check is not None:       # SanitizerTier (repro.core.sanitizer)
+            check(s, self)
         return s
+
+    def _check_f32_tie_risk(self, deadlines: np.ndarray) -> None:
+        """Runtime guard for the documented Pallas f32 tie caveat: warn and
+        count when an epoch's minimum positive deadline separation falls
+        below span * 2^-23 (exact duplicates are safe -- the kernels break
+        them through the integer aux key)."""
+        d = np.sort(deadlines[np.isfinite(deadlines)])
+        if d.size < 2:
+            return
+        span = float(d[-1] - d[0])
+        if span <= 0.0:
+            return
+        diffs = np.diff(d)
+        pos = diffs[diffs > 0.0]
+        if pos.size and float(pos.min()) < span * 2.0 ** -23:
+            self.f32_tie_risk_epochs += 1
+            warnings.warn(
+                f"epoch deadline separation {float(pos.min()):.3e}s is "
+                f"below the f32 tie resolution span*2^-23 = "
+                f"{span * 2.0 ** -23:.3e}s; pallas ordering may break "
+                "sub-resolution ties arbitrarily",
+                F32TieRiskWarning, stacklevel=3)
 
 
 __all__ = [
     "PENDING_DTYPE", "PendingBuffer",
     "ComputeTier", "NumpyTier", "JitTier", "PallasTier", "TIERS", "make_tier",
-    "classify_commits",
+    "F32TieRiskWarning", "classify_commits",
     "EpochState", "Stage", "SampleStage", "StampStage", "DomStage",
     "CommitStage", "DeliverStage", "LogStage", "FusedEpochStage",
     "DEFAULT_STAGES", "FUSED_STAGES", "ReplicaLogState", "DomEngine",

@@ -96,7 +96,16 @@ def _release_one_receiver(deadlines: jnp.ndarray, arrivals: jnp.ndarray) -> jnp.
 
 
 @jax.jit
-def dom_release_schedule(deadlines: jnp.ndarray, arrivals: jnp.ndarray) -> tuple:
+def _dom_release_schedule_impl(deadlines: jnp.ndarray,
+                               arrivals: jnp.ndarray) -> tuple:
+    d = deadlines[:, None]
+    admitted = jax.vmap(_release_one_receiver, in_axes=(None, 1), out_axes=1)(
+        deadlines, arrivals)
+    release = jnp.where(admitted, jnp.maximum(d, arrivals), jnp.inf)
+    return admitted, release
+
+
+def dom_release_schedule(deadlines, arrivals) -> tuple:
     """Per-receiver DOM early-buffer semantics, vectorized (exact).
 
     Args:
@@ -112,12 +121,18 @@ def dom_release_schedule(deadlines: jnp.ndarray, arrivals: jnp.ndarray) -> tuple
     property tests): a message is admitted iff its deadline exceeds the
     largest deadline already *released* at its arrival; admitted messages
     release at max(deadline, arrival), in deadline order.
+
+    Conversion happens under `enable_x64` so float64 inputs are traced in
+    float64 (jit specializes per input dtype; float32 inputs stay float32).
+    Without this, callers outside an x64 context -- the chunked fast path,
+    the kernel reference oracle -- silently got float32 admission, which
+    collapses sub-microsecond deadline separations.
     """
-    d = deadlines[:, None]
-    admitted = jax.vmap(_release_one_receiver, in_axes=(None, 1), out_axes=1)(
-        deadlines, arrivals)
-    release = jnp.where(admitted, jnp.maximum(d, arrivals), jnp.inf)
-    return admitted, release
+    from jax.experimental import enable_x64
+
+    with enable_x64():
+        return _dom_release_schedule_impl(jnp.asarray(deadlines),
+                                          jnp.asarray(arrivals))
 
 
 # ---------------------------------------------------------------------------
@@ -268,9 +283,11 @@ def dom_release_schedule_chunked(deadlines: np.ndarray, arrivals: np.ndarray,
         hi_ext = int(np.searchsorted(d_sorted, d_sorted[hi - 1] + max_late,
                                      side="right"))
         hi_ext = min(max(hi_ext, hi), N)
-        adm, rel = dom_release_schedule(jnp.asarray(d_sorted[lo:hi_ext]),
-                                        jnp.asarray(a_sorted[lo:hi_ext]))
-        adm = np.asarray(adm)[: hi - lo]
+        # numpy float64 in: the oracle converts under enable_x64, so the
+        # chunk is admitted at full deadline precision
+        adm, rel = dom_release_schedule(d_sorted[lo:hi_ext],
+                                        a_sorted[lo:hi_ext])
+        adm = np.asarray(adm)[: hi - lo]  # lint: allow[HS003] per-chunk boundary pull of the oracle's device result
         # Apply the carried watermark: a message also needs deadline > the
         # largest deadline released in prior chunks *before its arrival*.
         bad = d_sorted[lo:hi, None] <= watermark[None, :]

@@ -101,6 +101,9 @@ class VectorizedConfig(CommonConfig):
     deadline_cap: float = 0.0           # SD.2.4: leader pulls deadlines more
     #   than this past its local arrival back (0 = disabled); bounds holding
     #   delay under bad clock sync at the cost of the fast path.
+    sanitize: bool = False              # wrap the tier in SanitizerTier:
+    #   per-epoch runtime invariant checks (repro.core.sanitizer); pure
+    #   delegation, bit-for-bit identical outputs. Also via REPRO_SANITIZE=1.
 
 
 @dataclass
@@ -545,6 +548,7 @@ class VectorizedNezhaCluster(Cluster):
             tier=self.engine.tier.name, view_changes=self.view_changes,
             recovered_entries=self._recovered_entries,
             dropped_speculative=self._dropped_speculative,
+            f32_tie_risk_epochs=self.engine.f32_tie_risk_epochs,
         )
 
 

@@ -94,6 +94,7 @@ def _prefix_max(x):
 
 
 def _dom_admit_kernel(deadline_ref, arrival_ref, admitted_ref):
+    # lint: span-relative-f32 -- kernel body: bitonic event sort over span-relative float32 keys (documented caveat)
     n = deadline_ref.shape[0]
     d = deadline_ref[...].astype(jnp.float32)
     a = arrival_ref[...].reshape(n).astype(jnp.float32)
@@ -133,6 +134,7 @@ def dom_admit_pallas(deadlines, arrivals, *, interpret=False):
     watermark).  The grid iterates receivers; each program runs one
     receiver's full event network in VMEM.
     """
+    # lint: span-relative-f32 -- pallas_call wrapper: float32 key plumbing + inf pow2 padding
     R, n = arrivals.shape
     n_pad = 1 << (int(n - 1).bit_length() if n > 1 else 0)
     if n_pad != n:

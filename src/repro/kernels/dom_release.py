@@ -60,6 +60,7 @@ def _bitonic_sort(keys, vals):
 
 
 def _dom_release_kernel(deadline_ref, admitted_ref, clock_ref, order_ref, count_ref):
+    # lint: span-relative-f32 -- kernel body: bitonic sort over span-relative float32 keys (documented caveat)
     d = deadline_ref[...].astype(jnp.float32)
     adm = admitted_ref[...] != 0
     now = clock_ref[0]
@@ -81,6 +82,7 @@ def dom_release_pallas(deadlines, admitted, clock_now, *, interpret=False):
     Returns (order [n] int32: message ids in release order, -1 padded;
              count [] int32). n is padded to a power of two internally.
     """
+    # lint: span-relative-f32 -- pallas_call wrapper: float32 key plumbing + inf pow2 padding
     n = deadlines.shape[0]
     n_pad = 1 << (int(n - 1).bit_length() if n > 1 else 0)
     if n_pad != n:

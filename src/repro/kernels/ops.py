@@ -51,6 +51,7 @@ def dom_admit_traced(deadlines, arrivals, *, use_pallas=True):
     receiver.  Composable inside jit -- the engine's fused epoch step for
     the pallas tier calls this directly.
     """
+    # lint: span-relative-f32 -- documented Pallas caveat: kernel keys are float32 relative to the batch span
     d, a = deadlines, arrivals
     fin_d, fin_a = jnp.isfinite(d), jnp.isfinite(a)
     mn = jnp.minimum(jnp.min(jnp.where(fin_d, d, jnp.inf), initial=jnp.inf),
@@ -73,6 +74,7 @@ def dom_admit(deadlines, arrivals, *, use_pallas=None):
     on-device (interpret mode off-TPU).  See repro.kernels.dom_admit for
     the float32 tie caveat.
     """
+    # lint: span-relative-f32 -- host-side float64 shift, kernel sees span-relative float32 keys (documented caveat)
     import numpy as np
 
     if use_pallas is None:
@@ -90,7 +92,7 @@ def dom_admit(deadlines, arrivals, *, use_pallas=None):
     dj = jnp.asarray(np.where(fin_d, d - shift, np.inf), jnp.float32)
     aj = jnp.asarray(np.where(fin_a, a - shift, np.inf).T, jnp.float32)
     adm = dom_admit_pallas(dj, aj, interpret=not _on_tpu())
-    return np.asarray(adm).T
+    return np.asarray(adm).T  # lint: allow[HS003] host-entry wrapper: one pull of the kernel result
 
 
 def dom_release(deadlines, admitted, clock_now, *, use_pallas=None):
@@ -104,6 +106,7 @@ def dom_release(deadlines, admitted, clock_now, *, use_pallas=None):
 
 def dom_release_ref_order(deadlines, admitted, clock_now):
     """Oracle for dom_release: masked stable argsort by deadline."""
+    # lint: span-relative-f32 -- caller-precision oracle: receives the same span-relative float32 keys as the kernel
     released = jnp.asarray(admitted, bool) & (deadlines <= clock_now)
     keys = jnp.where(released, deadlines, jnp.inf)
     order = jnp.argsort(keys, stable=True).astype(jnp.int32)
@@ -128,6 +131,7 @@ def dom_deadline_order(deadlines, *, use_pallas=None):
     result is always a permutation of [0, n). Returns int64 message
     indices, deadline-sorted.
     """
+    # lint: span-relative-f32 -- documented Pallas caveat: the sort compares span-relative float32 keys
     import numpy as np
 
     d = np.asarray(deadlines, np.float64)
@@ -145,7 +149,7 @@ def dom_deadline_order(deadlines, *, use_pallas=None):
     order, _ = dom_release(dj, jnp.ones(n, jnp.int8),
                            jnp.asarray(np.inf, jnp.float32),
                            use_pallas=use_pallas)
-    return np.asarray(order, dtype=np.int64)
+    return np.asarray(order, dtype=np.int64)  # lint: allow[HS003] host-entry wrapper: one pull of the kernel result
 
 
 def dom_deadline_order_traced(deadlines, *, use_pallas=True):
@@ -155,6 +159,7 @@ def dom_deadline_order_traced(deadlines, *, use_pallas=True):
     composes inside the jitted epoch program; off the pallas path it falls
     back to a plain stable argsort.
     """
+    # lint: span-relative-f32 -- documented Pallas caveat: traced span-relative float32 sort keys
     d = deadlines
     if not use_pallas:
         return jnp.argsort(d, stable=True)

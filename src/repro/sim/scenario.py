@@ -251,11 +251,68 @@ class Scenario:
     overrides: dict = field(default_factory=dict)
     description: str = ""
 
+    def __post_init__(self):
+        _validate_scenario(self)
+
     @property
     def env(self) -> Environment:
         if isinstance(self.environment, Environment):
             return self.environment
         return ENVIRONMENTS[self.environment]
+
+    @property
+    def horizon(self) -> float:
+        """Run horizon: workload duration plus drain. Fault events must land
+        inside it (enforced at construction)."""
+        return float(self.workload.duration) + float(self.workload.drain)
+
+
+def _validate_scenario(sc: Scenario) -> None:
+    """Static validation at construction time: a malformed scenario fails
+    with a clear error HERE, not as a silent no-op (event past the horizon)
+    or an obscure backend crash minutes into a sweep."""
+    errs: list[str] = []
+    if sc.f < 1:
+        errs.append(f"f={sc.f}: Nezha needs f >= 1 (2f+1 replicas)")
+    n = 2 * sc.f + 1
+    n_over = sc.overrides.get("n_replicas")
+    if n_over is not None and n_over < n:
+        errs.append(f"n_replicas override {n_over} < 2f+1 = {n}: "
+                    "quorums cannot form")
+    if isinstance(sc.environment, str) and sc.environment not in ENVIRONMENTS:
+        errs.append(f"unknown environment {sc.environment!r}; available: "
+                    + ", ".join(ENVIRONMENTS))
+    horizon = sc.horizon
+    # replicas currently down (crashed, not yet relaunched), in schedule
+    # order -- stable sort keeps same-t events in declaration order, so a
+    # same-instant crash+relaunch pair is only legal crash-first
+    down: set = set()
+    for ev in sorted(sc.faults, key=lambda e: e.t):
+        tag = f"{type(ev).__name__}(t={ev.t!r})"
+        if not (0.0 <= ev.t <= horizon):
+            errs.append(f"{tag} outside the run horizon [0, {horizon!r}] "
+                        "(duration + drain): it would never fire")
+        kind = getattr(ev, "kind", "abstract")
+        if kind in ("crash", "relaunch"):
+            rid = getattr(ev, "rid", 0)
+            if not (0 <= rid < n):
+                errs.append(f"{tag}: rid={rid} out of range for "
+                            f"2f+1 = {n} replicas")
+            elif kind == "crash":
+                if rid in down:
+                    errs.append(f"{tag}: replica {rid} is already down")
+                down.add(rid)
+            elif rid not in down:
+                errs.append(f"{tag}: relaunch of replica {rid} with no "
+                            "preceding crash")
+            else:
+                down.discard(rid)
+        elif kind == "net-shift" and ev.profile not in NET_PROFILES:
+            errs.append(f"{tag}: unknown net profile {ev.profile!r}; "
+                        "available: " + ", ".join(NET_PROFILES))
+    if errs:
+        raise ValueError(
+            f"invalid scenario {sc.name!r}: " + "; ".join(errs))
 
 
 # The one result schema every (protocol x backend x tier x scenario) run
@@ -265,6 +322,7 @@ SCENARIO_RESULT_KEYS = (
     "fast_commit_ratio", "median_latency", "p90_latency", "mean_latency",
     "throughput", "epochs", "view_changes", "recovered_entries",
     "dropped_speculative", "applied_faults", "skipped_faults",
+    "f32_tie_risk_epochs",
 )
 
 
@@ -304,6 +362,11 @@ class ScenarioResult:
     dropped_speculative: int
     applied_faults: int
     skipped_faults: int
+    # epochs whose minimum positive deadline separation fell inside the
+    # Pallas f32 tie window (engine F32TieRiskWarning); 0 on float64 tiers
+    # and event backends -- benchmark runs use it to prove the documented
+    # caveat never fired
+    f32_tie_risk_epochs: int = 0
     raw: dict = field(default_factory=dict, repr=False)
 
     @classmethod
@@ -327,6 +390,7 @@ class ScenarioResult:
             dropped_speculative=int(summary.get("dropped_speculative", 0)),
             applied_faults=applied_faults,
             skipped_faults=skipped_faults,
+            f32_tie_risk_epochs=int(summary.get("f32_tie_risk_epochs", 0)),
             raw=dict(summary),
         )
 

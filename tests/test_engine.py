@@ -70,6 +70,31 @@ def _exact_oracle_admission(d, a):
         return np.asarray(adm)
 
 
+def test_release_oracle_preserves_float64_without_caller_x64():
+    """Regression (found by the ISSUE 6 dtype-parity linter):
+    `dom_release_schedule` jitted its body without owning an enable_x64
+    scope, so a BARE call (no caller-side enable_x64, unlike
+    `_exact_oracle_admission` above) silently truncated float64 deadlines
+    to float32 -- deadlines separated below the f32 ulp collapsed to one
+    value and flipped admission. The oracle now enters enable_x64 itself."""
+    from repro.core.vectorized import (dom_release_schedule,
+                                       dom_release_schedule_chunked)
+
+    d = np.array([1000.0, 1000.0 + 1e-5])   # < f32 ulp at 1000 (~6.1e-5)
+    a = np.array([[999.0], [1000.5]])
+    # B's deadline exceeds the watermark A released (1000.0) by 1e-5, so
+    # f64 admits B at its late arrival; under f32 truncation the two
+    # deadlines collapse and B is rejected
+    admitted, release = dom_release_schedule(d, a)
+    assert np.asarray(release).dtype == np.float64
+    np.testing.assert_array_equal(np.asarray(admitted), [[True], [True]])
+    np.testing.assert_array_equal(np.asarray(admitted),
+                                  _exact_oracle_admission(d, a))
+    # the chunked fast path feeds the oracle per-chunk and must agree
+    adm_c, _ = dom_release_schedule_chunked(d, a, chunk=2)
+    np.testing.assert_array_equal(np.asarray(adm_c), [[True], [True]])
+
+
 # ---------------------------------------------------------------------------
 # tier parity
 # ---------------------------------------------------------------------------

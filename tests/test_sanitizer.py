@@ -1,0 +1,235 @@
+"""Layer 3 of the determinism contract: `repro.core.sanitizer.SanitizerTier`.
+
+Acceptance (ISSUE 6): sanitizer-wrapped numpy/jit runs of the leader-crash
+scenario pass every runtime invariant AND stay bit-for-bit identical to
+unwrapped runs. Plus: each invariant check fires on a hand-corrupted
+EpochState (a sanitizer that cannot fail checks nothing), the capped-leader
+exemption mirrors `_apply_deadline_cap`, the config/env enablement paths,
+and the Pallas f32 tie guard (warning + `f32_tie_risk_epochs` counting).
+"""
+import warnings
+from dataclasses import replace
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from repro.core import CommonConfig, make_cluster
+from repro.core.engine import DomEngine, EpochState, F32TieRiskWarning
+from repro.core.sanitizer import SanitizerError, SanitizerTier
+from repro.sim.scenario import get_scenario, run_scenario_on_cluster
+from repro.sim.trace import CommitTrace
+
+# ---------------------------------------------------------------------------
+# bit-for-bit transparency through recovery (the acceptance criterion)
+# ---------------------------------------------------------------------------
+def _short_crash():
+    sc = get_scenario("leader-crash")
+    return replace(sc, n_clients=3, workload=replace(
+        sc.workload, rate_per_client=600.0, duration=0.25, drain=0.3))
+
+
+@pytest.mark.parametrize("tier", ["numpy", "jit"])
+def test_sanitized_leader_crash_is_bit_for_bit_transparent(tier):
+    sc = _short_crash()
+    res_a, cl_a = run_scenario_on_cluster("nezha-vectorized", sc, tier=tier)
+    res_b, cl_b = run_scenario_on_cluster(
+        "nezha-vectorized",
+        replace(sc, overrides={**sc.overrides, "sanitize": True}), tier=tier)
+
+    # the wrapped run went through the sanitizer, every epoch, clean
+    assert not isinstance(cl_a.engine.tier, SanitizerTier)
+    san = cl_b.engine.tier
+    assert isinstance(san, SanitizerTier)
+    assert san.name == tier                 # summaries report the inner tier
+    assert san.epochs_checked > 0
+    assert san.violations == []
+    assert res_b.view_changes == 1          # recovery actually exercised
+
+    # ...and is bit-for-bit identical to the unwrapped run
+    assert res_a == replace(res_b, raw=res_a.raw)
+    tr_a = CommitTrace.from_cluster(cl_a)
+    tr_b = CommitTrace.from_cluster(cl_b)
+    for col, arr in tr_a.log.items():
+        np.testing.assert_array_equal(arr, tr_b.log[col],
+                                      err_msg=f"log.{col}")
+    for col, arr in tr_a.commits.items():
+        np.testing.assert_array_equal(arr, tr_b.commits[col],
+                                      err_msg=f"commits.{col}")
+    assert res_b.f32_tie_risk_epochs == 0   # f64 tier: caveat cannot fire
+
+
+def test_sanitize_enabled_via_config_and_env(monkeypatch):
+    cfg = CommonConfig(f=1, n_clients=1, seed=0)
+    assert not isinstance(
+        make_cluster("nezha-vectorized", cfg).engine.tier, SanitizerTier)
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    assert isinstance(
+        make_cluster("nezha-vectorized", cfg).engine.tier, SanitizerTier)
+    monkeypatch.setenv("REPRO_SANITIZE", "0")   # "0" means off, like unset
+    assert not isinstance(
+        make_cluster("nezha-vectorized", cfg).engine.tier, SanitizerTier)
+
+
+# ---------------------------------------------------------------------------
+# each invariant fires on a corrupted EpochState
+# ---------------------------------------------------------------------------
+_N, _R = 3, 3
+
+
+def _state(**kw) -> EpochState:
+    """A minimal invariant-clean post-stage EpochState (3 entries x 3
+    replicas, everything admitted/committed on the fast path)."""
+    d = np.array([1.0, 2.0, 3.0])
+    arrivals = np.tile(d[:, None], (1, _R)) - 0.5
+    base = dict(
+        t=np.zeros(_N), t0=np.zeros(_N), cid=np.arange(_N),
+        rid=np.zeros(_N, np.int64), kcls=None,
+        alive=np.ones(_R, bool), leader=0,
+        deadlines=d, arrivals=arrivals,
+        admitted=np.ones((_N, _R), bool),
+        release=np.maximum(d[:, None], arrivals),
+        commit_time=d + 0.1, fast=np.ones(_N, bool),
+        committed=np.ones(_N, bool),
+    )
+    base.update(kw)
+    return EpochState(**base)
+
+
+def _engine(deadline_cap: float = 0.0):
+    return SimpleNamespace(cfg=SimpleNamespace(deadline_cap=deadline_cap))
+
+
+def _check(s, cap: float = 0.0):
+    SanitizerTier("numpy").check_epoch(s, _engine(cap))
+
+
+def test_clean_state_passes():
+    _check(_state())
+
+
+def test_flags_nan_times():
+    s = _state()
+    s.deadlines[0] = np.nan
+    with pytest.raises(SanitizerError, match="NaN in deadlines"):
+        _check(s)
+
+
+def test_flags_dead_replica_admitting():
+    s = _state()
+    s.alive[2] = False
+    with pytest.raises(SanitizerError, match="exceeds alive-mask"):
+        _check(s)
+
+
+def test_flags_admission_without_arrival():
+    s = _state()
+    s.arrivals[0, 0] = np.inf               # never arrived, still admitted
+    with pytest.raises(SanitizerError, match="non-finite local arrival"):
+        _check(s)
+
+
+def test_flags_release_not_watermark():
+    s = _state()
+    s.release[1, 1] += 0.5                  # held past max(deadline, arrival)
+    with pytest.raises(SanitizerError, match=r"release != max"):
+        _check(s)
+
+
+def test_flags_release_below_floor():
+    s = _state(release_floor=2.0)           # StartView after entry 0's release
+    with pytest.raises(SanitizerError, match="release_floor"):
+        _check(s)
+
+
+def test_flags_release_order_breaking_deadline_order():
+    """A LATE message (arrival past bigger-deadline releases) that the
+    early-buffer watermark should have rejected, admitted anyway: release
+    order no longer equals deadline order at that receiver."""
+    s = _state()
+    s.arrivals[0, 0] = 5.0
+    s.release[0, 0] = 5.0                   # = max(deadline, arrival): the
+    #   per-cell release rule holds, only the ORDER invariant is violated
+    with pytest.raises(SanitizerError,
+                       match="release order violates deadline order"):
+        _check(s)
+
+
+def test_flags_commit_mask_mismatch_and_fast_uncommitted():
+    s = _state()
+    s.commit_time[0] = np.inf               # committed=True says otherwise
+    s.committed[1] = False                  # fast=True says otherwise
+    s.commit_time[1] = np.inf
+    with pytest.raises(SanitizerError) as exc:
+        _check(s)
+    msg = str(exc.value)                    # violations aggregate in one raise
+    assert "committed mask != finite(commit_time)" in msg
+    assert "fast-path mark on uncommitted entry" in msg
+
+
+def test_capped_leader_entries_are_exempt():
+    """SD.2.4: entries whose deadline exceeds leader arrival + cap release
+    at ARRIVAL on the leader (slow path) -- the one documented exception to
+    release == max(deadline, arrival) and to deadline-ordered release."""
+    s = _state()
+    s.arrivals[2, 0] = 1.0                  # deadline 3.0 > 1.0 + cap(0.4)
+    s.release[2, 0] = 1.0                   # released at arrival
+    with pytest.raises(SanitizerError):     # without a cap: two violations
+        _check(s, cap=0.0)
+    _check(s, cap=0.4)                      # with the cap: the documented path
+
+
+def test_clock_fault_offsets_check_in_local_frame():
+    """Under a ClockFault the GLOBAL release times legitimately differ from
+    max(deadline, global arrival); the sanitizer must compare in each
+    receiver's local frame, like the engine computes them."""
+    off = np.full((_N, _R), 0.0)
+    off[:, 1] = 3e-4                        # replica 1 reads clocks fast
+    s = _state(clock_arr_off=off)
+    a_loc = s.arrivals + off
+    s.release = np.maximum(s.deadlines[:, None], a_loc) - off
+    _check(s)                               # local-frame rule holds
+    s.release[0, 1] += 1e-3
+    with pytest.raises(SanitizerError, match=r"release != max"):
+        _check(s)
+
+
+# ---------------------------------------------------------------------------
+# the Pallas f32 tie guard (engine-level, tier-independent unit tests)
+# ---------------------------------------------------------------------------
+def _tie_engine():
+    return SimpleNamespace(f32_tie_risk_epochs=0)
+
+
+def test_f32_tie_guard_warns_on_sub_resolution_separation():
+    eng = _tie_engine()
+    # span 1.0s, minimum positive separation 1ns << span * 2^-23 (~119ns)
+    d = np.array([0.0, 0.5, 0.5 + 1e-9, 1.0])
+    with pytest.warns(F32TieRiskWarning, match="below the f32 tie"):
+        DomEngine._check_f32_tie_risk(eng, d)
+    assert eng.f32_tie_risk_epochs == 1
+
+
+def test_f32_tie_guard_ignores_exact_duplicates_and_wide_separation():
+    """Exact duplicates are SAFE (the kernels break them via the integer aux
+    key, like the f64 tiers) -- only sub-resolution near-ties count."""
+    eng = _tie_engine()
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", F32TieRiskWarning)
+        DomEngine._check_f32_tie_risk(eng, np.array([0.0, 0.5, 0.5, 1.0]))
+        DomEngine._check_f32_tie_risk(eng, np.array([0.0, 0.001, 0.5, 1.0]))
+        DomEngine._check_f32_tie_risk(eng, np.array([np.inf, 1.0]))  # 1 finite
+        DomEngine._check_f32_tie_risk(eng, np.array([2.0, 2.0]))     # span 0
+    assert eng.f32_tie_risk_epochs == 0
+
+
+def test_f32_tie_guard_scales_with_span():
+    """The window is RELATIVE (span * 2^-23): the same 50us separation is
+    safe in a 10ms epoch but at risk across a 1000s span."""
+    eng = _tie_engine()
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", F32TieRiskWarning)
+        DomEngine._check_f32_tie_risk(eng, np.array([0.0, 50e-6, 10e-3]))
+    with pytest.warns(F32TieRiskWarning):
+        DomEngine._check_f32_tie_risk(eng, np.array([0.0, 50e-6, 1000.0]))
+    assert eng.f32_tie_risk_epochs == 1

@@ -101,6 +101,86 @@ def test_clock_fault_selector_parsing():
 
 
 # ---------------------------------------------------------------------------
+# static validation at construction (ISSUE 6 satellite): a malformed
+# scenario fails with a clear ValueError when BUILT, not minutes into a run
+# ---------------------------------------------------------------------------
+_W = Workload(mode="open", rate_per_client=100.0, duration=0.2, drain=0.1)
+
+
+def test_validation_rejects_relaunch_before_crash():
+    with pytest.raises(ValueError, match="no preceding crash"):
+        Scenario("bad", faults=(Relaunch(0.1, rid=0),), workload=_W)
+    # ...including a relaunch for a DIFFERENT replica than the crashed one
+    with pytest.raises(ValueError, match="no preceding crash"):
+        Scenario("bad", faults=(Crash(0.05, rid=0), Relaunch(0.1, rid=1)),
+                 workload=_W)
+    # ...and a second relaunch after the replica already came back
+    with pytest.raises(ValueError, match="no preceding crash"):
+        Scenario("bad", faults=(Crash(0.05, rid=0), Relaunch(0.1, rid=0),
+                                Relaunch(0.15, rid=0)), workload=_W)
+
+
+def test_validation_rejects_double_crash():
+    with pytest.raises(ValueError, match="already down"):
+        Scenario("bad", faults=(Crash(0.05, rid=0), Crash(0.1, rid=0)),
+                 workload=_W)
+    # crash -> relaunch -> crash again is a legal schedule
+    Scenario("ok", faults=(Crash(0.05, rid=0), Relaunch(0.1, rid=0),
+                           Crash(0.15, rid=0)), workload=_W)
+
+
+def test_validation_rejects_events_outside_horizon():
+    with pytest.raises(ValueError, match="outside the run horizon"):
+        Scenario("bad", faults=(Crash(0.5, rid=0),), workload=_W)
+    with pytest.raises(ValueError, match="outside the run horizon"):
+        Scenario("bad", faults=(ClockFault(-0.1, who="leader", mu=1e-6),),
+                 workload=_W)
+    Scenario("ok", faults=(Crash(0.3, rid=0),), workload=_W)  # t == horizon
+
+
+def test_validation_rejects_sub_quorum_configurations():
+    with pytest.raises(ValueError, match="f >= 1"):
+        Scenario("bad", f=0)
+    with pytest.raises(ValueError, match="quorums cannot form"):
+        Scenario("bad", overrides={"n_replicas": 2})
+    with pytest.raises(ValueError, match="quorums cannot form"):
+        Scenario("bad", f=2, overrides={"n_replicas": 3})
+
+
+def test_validation_rejects_out_of_range_rid_and_bad_names():
+    with pytest.raises(ValueError, match="rid=3 out of range"):
+        Scenario("bad", faults=(Crash(0.05, rid=3),), workload=_W)
+    Scenario("ok", f=2, faults=(Crash(0.05, rid=3),), workload=_W)  # n=5
+    with pytest.raises(ValueError, match="unknown environment"):
+        Scenario("bad", environment="mars")
+    with pytest.raises(ValueError, match="unknown net profile"):
+        Scenario("bad", faults=(NetShift(0.05, profile="carrier-pigeon"),),
+                 workload=_W)
+
+
+def test_validation_reports_every_error_at_once():
+    with pytest.raises(ValueError) as exc:
+        Scenario("bad", f=0, environment="mars",
+                 faults=(Relaunch(0.9, rid=0),), workload=_W)
+    msg = str(exc.value)
+    assert "invalid scenario 'bad'" in msg
+    for frag in ("f >= 1", "unknown environment", "outside the run horizon",
+                 "no preceding crash"):
+        assert frag in msg
+
+
+def test_validation_accepts_same_instant_crashes_and_catalog():
+    """The total-outage shape -- several same-t crashes, then a partial
+    relaunch -- is legal, and every cataloged scenario constructs (module
+    import already proved it; keep the intent explicit)."""
+    Scenario("ok", faults=(Crash(0.1, rid=0), Crash(0.1, rid=1),
+                           Crash(0.1, rid=2), Relaunch(0.2, rid=0),
+                           Relaunch(0.2, rid=1)), workload=_W)
+    for sc in SCENARIOS.values():
+        replace(sc)                         # re-runs __post_init__
+
+
+# ---------------------------------------------------------------------------
 # NetworkParams.scaled regression (satellite fix)
 # ---------------------------------------------------------------------------
 def _reordering(params: NetworkParams, total_rate: float, n: int = 20_000) -> float:

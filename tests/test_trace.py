@@ -108,6 +108,69 @@ def test_checker_equivalence():
 
 
 # ---------------------------------------------------------------------------
+# negative tests on RECORDED traces (ISSUE 6): corrupt a real run's trace
+# and assert each checker actually fails -- the invariants that gate
+# recovery must themselves be tested against corruption
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def recorded():
+    """One real crash-recovery trace (numpy tier), checked clean once."""
+    _, tr = run_scenario_with_trace("nezha-vectorized",
+                                    _short_crash("crash-recovery"))
+    assert check_trace(tr) == []
+    assert tr.log["deadline"].size >= 2 and tr.commit_uids.size >= 1
+    return tr
+
+
+def _copy(tr: CommitTrace) -> CommitTrace:
+    return CommitTrace(protocol=tr.protocol, backend=tr.backend, tier=tr.tier,
+                       log={c: a.copy() for c, a in tr.log.items()},
+                       commits={c: a.copy() for c, a in tr.commits.items()},
+                       order_scope=tr.order_scope)
+
+
+def test_mutated_trace_duplicate_uid_fails_at_most_once(recorded):
+    """Re-appending an executed entry to the durable log (a MERGE-LOG
+    double-execution) must fail check_at_most_once."""
+    tr = _copy(recorded)
+    tr.log = {c: np.concatenate([a, a[:1]]) for c, a in tr.log.items()}
+    v = check_at_most_once(tr)
+    assert len(v) == 1 and "duplicated uids" in v[0]
+    assert check_trace(tr) != []
+
+
+def test_mutated_trace_reordered_pair_fails_deadline_order(recorded):
+    """Swapping the deadlines of two same-class entries executed in one
+    batch (an ordering inversion a receiver would produce by releasing out
+    of deadline order) must fail check_deadline_order."""
+    tr = _copy(recorded)
+    log = tr.log
+    # force rows 0 and 1 into one ordering scope, then invert their
+    # deadlines -- execution (log) order now contradicts deadline order
+    log["batch"][:2] = log["batch"][0]
+    log["kcls"][:2] = log["kcls"][0]
+    d0 = log["deadline"][0]
+    log["deadline"][0] = log["deadline"][1] + 1e-3
+    log["deadline"][1] = d0
+    v = check_deadline_order(tr)
+    assert len(v) == 1 and "violates per-class deadline order" in v[0]
+
+
+def test_mutated_trace_dropped_durable_entry_fails_durable_log(recorded):
+    """Dropping a client-delivered commit from the durable log (a view
+    change losing part of the durable prefix) must fail check_durable_log."""
+    tr = _copy(recorded)
+    victim = tr.commit_uids[0]
+    keep = tr.log_uids != victim
+    assert not keep.all()                   # the victim was in the log
+    tr.log = {c: a[keep] for c, a in tr.log.items()}
+    v = check_durable_log(tr)
+    assert len(v) == 1 and "missing from the durable log" in v[0]
+    with pytest.raises(AssertionError, match="missing"):
+        assert_trace_ok(tr)
+
+
+# ---------------------------------------------------------------------------
 # differential traces: event vs vectorized through the crash scenarios
 # ---------------------------------------------------------------------------
 def _short_crash(name: str, n_clients: int = 3) -> Scenario:
