@@ -186,6 +186,109 @@ def _bench_engine_epoch(quick: bool) -> list[dict]:
     return rows
 
 
+def _bench_epochs_per_dispatch(quick: bool) -> list[dict]:
+    """Sustained full-epoch throughput vs epochs-per-dispatch K.
+
+    Streams EPOCHS=64 epochs through `DomEngine` -- sampling, stamping,
+    admission, commit classification, delivery, host-mirror bookkeeping --
+    dispatching the device data plane K epochs at a time via
+    `run_epoch_window` (K=1 is the sequential per-epoch fused path).  N is
+    the TOTAL requests per 64-epoch measurement, so the per-epoch batch is
+    N/64 and every K processes identical work; the committed counts are
+    asserted equal across K (the scan is bit-compatible, so this is a
+    throughput sweep, not an accuracy trade).
+
+    Honesty note (same convention as the admission section): off-TPU the
+    XLA-CPU epoch program dominates wall time at every swept N, so the
+    K-scan -- a dispatch-latency/host-sync amortization -- measures near
+    parity here (~1.0-1.3x, largest at the smallest per-epoch batch where
+    per-dispatch overhead is the biggest fraction).  The budget it
+    eliminates (per-epoch dispatch + device->host sync) is the term that
+    dominates on real accelerators; the lint inventory's scan-path
+    host-sync count (0 per-epoch, 1 per-window) is the device-residency
+    claim itself, checked in CI.
+    """
+    from repro.core.engine import PENDING_DTYPE, DomEngine
+    from repro.core.vectorized_cluster import VectorizedConfig
+    from repro.sim.network import CloudNetwork
+
+    EPOCHS = 64
+    Ks = [1, 4, 16, 64]
+    Ns = [10_000, 100_000, 1_000_000]
+    reps = 1 if quick else 3
+    rows = []
+    for n_total in Ns:
+        n_ep = n_total // EPOCHS
+        cfg = VectorizedConfig(f=1, n_clients=64, seed=0)
+        rng = np.random.default_rng(0)
+        due = np.zeros(n_ep, PENDING_DTYPE)
+        due["t"] = np.sort(rng.uniform(0, n_ep / 2e5, n_ep))
+        due["t0"] = due["t"]
+        due["cid"] = rng.integers(0, cfg.n_clients, n_ep)
+        due["rid"] = np.arange(n_ep)
+        due["kcls"] = rng.integers(0, 1000, n_ep)
+        alive = np.ones(3, bool)
+        committed = {}
+        k1_rps = None
+        for k in Ks:
+            net = CloudNetwork(3 + cfg.n_proxies + cfg.n_clients, cfg.net,
+                               seed=0)
+            eng = DomEngine(cfg, net, 3, tier="jit", track_logs=False)
+
+            def run_stream(k=k, eng=eng):
+                done = 0
+                if k == 1:
+                    for _ in range(EPOCHS):
+                        s = eng.run_epoch(due.copy(), alive, leader=0)
+                        done += int(s.committed.sum())
+                else:
+                    for _ in range(EPOCHS // k):
+                        states = eng.run_epoch_window(
+                            [due.copy() for _ in range(k)], alive, leader=0)
+                        done += sum(int(s.committed.sum()) for s in states)
+                committed[k] = done
+
+            wall = _time_call(run_stream, reps)
+            rps = EPOCHS * n_ep / wall
+            if k == 1:
+                k1_rps = rps
+            rows.append({"kind": "epochs_per_dispatch", "tier": "jit",
+                         "k": k, "n": n_total, "n_epoch": n_ep,
+                         "epochs": EPOCHS, "requests_per_sec": rps,
+                         "wall_s": wall, "speedup_vs_k1": rps / k1_rps,
+                         "committed": committed[k]})
+            print(f"  epoch-stream jit K={k:3d} N={n_total:>9,d} "
+                  f"(n/epoch={n_ep:>6,d}) {rps:>12,.0f} req/s  "
+                  f"({rps / k1_rps:.2f}x K=1)")
+        # identical work across K: the scan is bit-compatible with the
+        # sequential path, so committed counts must agree exactly
+        assert len({committed[k] for k in Ks}) == 1, committed
+    return rows
+
+
+def device_resident(quick: bool = True) -> list[dict]:
+    rows = _bench_epochs_per_dispatch(quick)
+    os.makedirs("results", exist_ok=True)
+    out = {
+        "benchmark": "device_resident",
+        "quick": quick,
+        "epochs_per_measurement": 64,
+        "cpu_note": (
+            "off-TPU wall time is dominated by the XLA-CPU epoch program "
+            "at every swept N, so the K-scan's dispatch/host-sync "
+            "amortization measures ~1.0-1.3x here; the eliminated term "
+            "(per-epoch dispatch latency + device->host scalar sync) is "
+            "the dominant one on real accelerators. Device residency is "
+            "asserted structurally by the lint inventory: 0 per-epoch "
+            "host round trips on the scan fast path."),
+        "rows": rows,
+    }
+    with open("results/BENCH_device_resident.json", "w") as f:
+        json.dump(out, f, indent=1)
+    print("  -> results/BENCH_device_resident.json")
+    return rows
+
+
 def dom_scale(quick: bool = True) -> list[dict]:
     rows = _bench_admission(quick) + _bench_engine_epoch(quick)
     os.makedirs("results", exist_ok=True)
@@ -202,4 +305,17 @@ def dom_scale(quick: bool = True) -> list[dict]:
 
 
 if __name__ == "__main__":
-    dom_scale(quick=True)
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="trim reps/caps (~1-2 min; full N sweep kept)")
+    ap.add_argument("--epochs-per-dispatch", action="store_true",
+                    help="run the K-epochs-per-dispatch sweep "
+                         "(K in {1,4,16,64}, writes "
+                         "results/BENCH_device_resident.json)")
+    args = ap.parse_args()
+    if args.epochs_per_dispatch:
+        device_resident(quick=args.quick)
+    else:
+        dom_scale(quick=args.quick)

@@ -5,7 +5,7 @@ the same deadline order; this reproduction's analogue is a repo-level
 contract (see ROADMAP.md "Determinism contract"):
 
   * the jit tier is bit-for-bit identical to staged numpy through recovery,
-  * pallas parity holds outside the documented f32 tie window,
+  * pallas parity is unconditional (exact int32 time keys, no tie window),
   * the host<->device boundary is exactly where the architecture says it is.
 
 Example-based tests catch violations after the fact; these analyzers name
@@ -23,9 +23,10 @@ them at PR time. Three layers:
                     key reuse.
 
   jaxpr trace-safety (repro.analysis.lint.trace_safety):
-    TS001-TS003 -- traces `_build_fused_step` and the kernel wrappers,
-    walks the jaxpr for f32 compute on time operands and host callbacks,
-    and bounds the compile count across the scenario catalog.
+    TS001-TS003 -- traces the fused step, the K-epoch scan, and the kernel
+    wrappers, walks the jaxpr for f32 compute on time operands and host
+    callbacks, and bounds the compile count across the scenario catalog
+    (pow2 batch buckets x specialization keys x K buckets).
 
   runtime sanitizer (repro.core.sanitizer.SanitizerTier):
     not a static pass -- wraps any ComputeTier and checks per-epoch
@@ -33,9 +34,7 @@ them at PR time. Three layers:
 
 CLI:  python -m repro.analysis.lint src/
 Suppressions: `lint-suppressions.txt` at the repo root (justification
-required per entry) plus inline `# lint: allow[RULE] reason` pragmas and
-function-scope `# lint: span-relative-f32 -- reason` annotations for the
-documented Pallas span-relative key code.
+required per entry) plus inline `# lint: allow[RULE] reason` pragmas.
 """
 from repro.analysis.lint.findings import Finding, RULES
 from repro.analysis.lint.runner import LintReport, lint_paths, run_lint

@@ -5,11 +5,10 @@ from dataclasses import asdict, dataclass, field
 
 # rule id -> (pass, one-line description)
 RULES: dict[str, tuple[str, str]] = {
-    # dtype-parity: the time plane is float64 end to end, except the
-    # explicitly-annotated Pallas span-relative key code.
+    # dtype-parity: the time plane is float64 end to end (the Pallas
+    # kernels compare exact int32 key words, never f32 time values).
     "DP001": ("dtype-parity",
-              "float32 literal/cast on a time-valued expression outside "
-              "annotated span-relative key code"),
+              "float32 literal/cast on a time-valued expression"),
     "DP002": ("dtype-parity",
               "jnp compute on time-valued operands in a function with no "
               "enable_x64 on any intra-module path"),

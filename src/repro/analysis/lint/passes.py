@@ -1,19 +1,18 @@
 """AST linter passes: dtype-parity (DP), host-sync (HS), rng-discipline (RNG).
 
 All three passes share one per-module index (`ModuleIndex`): function ranges
-and qualnames, an intra-module name-based call graph for x64-reachability,
-and the span-relative-f32 function annotations. They are heuristic by
-design -- the point is to name the *likely* parity hazards at PR time, with
-pragmas/suppressions (see `pragmas.py`) carrying the justification whenever
-a hazard is intentional (the documented tier boundaries, the Pallas f32 key
-code).
+and qualnames, and an intra-module name-based call graph for
+x64-reachability. They are heuristic by design -- the point is to name the
+*likely* parity hazards at PR time, with pragmas/suppressions (see
+`pragmas.py`) carrying the justification whenever a hazard is intentional
+(the documented tier boundaries, integer hash/key lanes).
 
 Device-array dataflow is a per-scope name heuristic: a name assigned from a
 ``jnp.*``/``jax.*`` call, from a call whose terminal name matches
-``(_traced|_jit|_jnp|_pallas)$`` or ``epoch_step``, or from another device
-name, is treated as device-resident. That is exactly the vocabulary this
-repo uses for its traced entry points, which is what makes a repo-specific
-linter worth having over a generic one.
+``(_traced|_jit|_jnp|_pallas)$`` or ``epoch_step``/``epoch_scan``, or from
+another device name, is treated as device-resident. That is exactly the
+vocabulary this repo uses for its traced entry points, which is what makes
+a repo-specific linter worth having over a generic one.
 """
 from __future__ import annotations
 
@@ -32,7 +31,7 @@ _TIME_WORDS = ("deadline", "arriv", "release", "stamp", "owd", "clock",
 _TIME_RE = re.compile("|".join(_TIME_WORDS))
 
 # terminal call names that produce device arrays in this repo
-_DEVICE_FN_RE = re.compile(r"(_traced|_jit|_jnp|_pallas)$|^epoch_step$")
+_DEVICE_FN_RE = re.compile(r"(_traced|_jit|_jnp|_pallas)$|^epoch_(step|scan)$")
 
 # np.random.<attr> entries that are NOT global-state RNG use
 _NP_RANDOM_OK = {"default_rng", "Generator", "SeedSequence", "PCG64",
@@ -109,7 +108,6 @@ class FunctionInfo:
     has_x64: bool = False       # contains an enable_x64 usage itself
     traced: bool = False        # jit-decorated or *_traced by name
     parent: Optional[str] = None
-    span_f32: Optional[str] = None   # reason, when annotated span-relative-f32
 
 
 class ModuleIndex(ast.NodeVisitor):
@@ -118,7 +116,6 @@ class ModuleIndex(ast.NodeVisitor):
     def __init__(self, tree: ast.Module, pragmas: FilePragmas):
         self.functions: dict[str, FunctionInfo] = {}
         self._stack: list[str] = []
-        self._pragmas = pragmas
         self.visit(tree)
         self._propagate_x64()
 
@@ -154,12 +151,6 @@ class ModuleIndex(ast.NodeVisitor):
             if _terminal_name(n) == "enable_x64" or (
                     isinstance(n, ast.Name) and n.id == "enable_x64"):
                 info.has_x64 = True
-        # span-relative-f32 annotation: a marker comment anywhere in the
-        # function body (or on the line just above the def)
-        for line, reason in self._pragmas.span_f32_lines.items():
-            if info.start - 1 <= line <= info.end:
-                info.span_f32 = reason or "span-relative-f32"
-                break
         self.functions[qual] = info
         self._stack.append(node.name)
         self.generic_visit(node)
@@ -212,9 +203,9 @@ class ModuleIndex(ast.NodeVisitor):
 class ModuleLinter(ast.NodeVisitor):
     """Runs DP/HS/RNG checks in one source-order walk.
 
-    Pragma and span-relative-f32 handling happens here (findings are
-    emitted pre-suppressed with the pragma's justification); the
-    suppression *file* is applied later by the runner.
+    Pragma handling happens here (findings are emitted pre-suppressed with
+    the pragma's justification); the suppression *file* is applied later by
+    the runner.
     """
 
     def __init__(self, path: str, tree: ast.Module, pragmas: FilePragmas):
@@ -240,9 +231,6 @@ class ModuleLinter(ast.NodeVisitor):
         reason = self.pragmas.allows(rule, line)
         if reason is not None:
             suppressed, justification = True, reason
-        elif fn is not None and fn.span_f32 is not None \
-                and rule in ("DP001", "DP002"):
-            suppressed, justification = True, fn.span_f32
         self.findings.append(Finding(
             rule=rule, path=self.path, line=line, col=col, message=message,
             symbol=symbol, suppressed=suppressed,
@@ -356,9 +344,7 @@ class ModuleLinter(ast.NodeVisitor):
         root = chain.split(".")[0] if chain else ""
         if root == "jnp" or chain.startswith("jax.numpy"):
             fn = self._fstack[-1] if self._fstack else None
-            safe = fn is not None and (
-                fn.qualname in self.index.x64_safe
-                or fn.span_f32 is not None)
+            safe = fn is not None and fn.qualname in self.index.x64_safe
             if not safe and _mentions_time(node):
                 self._emit(
                     "DP002", node,

@@ -1,14 +1,9 @@
-"""Suppression machinery: inline pragmas, function annotations, and the
-repo-level suppression file.
+"""Suppression machinery: inline pragmas and the repo-level suppression file.
 
-Three suppression channels, all justification-carrying:
+Two suppression channels, both justification-carrying:
 
   line pragma       ``# lint: allow[DP001] reason...`` on (or immediately
                     above) the flagged line silences that rule there;
-  function pragma   ``# lint: span-relative-f32 -- reason...`` anywhere in a
-                    function body marks the whole function as documented
-                    Pallas span-relative key code: DP001/DP002/TS001 are
-                    expected there (f32 keys are the *point*);
   suppression file  ``lint-suppressions.txt`` at the repo root, one entry per
                     line: ``RULE path[:qualname] -- justification``. Entries
                     without a justification are a configuration error
@@ -24,7 +19,6 @@ from dataclasses import dataclass, field
 from pathlib import Path
 
 _ALLOW_RE = re.compile(r"#\s*lint:\s*allow\[([A-Z]+\d+(?:\s*,\s*[A-Z]+\d+)*)\]\s*(.*)")
-_SPAN_F32_RE = re.compile(r"#\s*lint:\s*span-relative-f32\s*(?:--\s*(.*))?")
 
 
 @dataclass
@@ -34,8 +28,6 @@ class FilePragmas:
     # line -> {rule -> reason}; a pragma covers its own line and the next
     # code line (so it can sit above the statement it annotates).
     allow: dict[int, dict[str, str]] = field(default_factory=dict)
-    # lines bearing a span-relative-f32 marker -> reason
-    span_f32_lines: dict[int, str] = field(default_factory=dict)
 
     def allows(self, rule: str, line: int) -> str | None:
         for ln in (line, line - 1):
@@ -59,9 +51,6 @@ def collect_pragmas(source: str) -> FilePragmas:
                 entry = out.allow.setdefault(tok.start[0], {})
                 for r in rules:
                     entry[r] = reason
-            m = _SPAN_F32_RE.search(tok.string)
-            if m:
-                out.span_f32_lines[tok.start[0]] = (m.group(1) or "").strip()
     except tokenize.TokenError:
         pass
     return out

@@ -23,6 +23,16 @@ DEFAULT_SUPPRESSION_FILE = "lint-suppressions.txt"
 # directories never worth linting
 _SKIP_DIRS = {".git", "__pycache__", ".venv", "build", "dist", ".claude"}
 
+# The K-epochs-per-dispatch scan fast path (repro.core.engine /
+# vectorized_cluster). A host sync attributed to one of these functions is
+# PER-EPOCH data-plane overhead -- the thing the device-resident refactor
+# eliminated -- unless its justification marks it as the single amortized
+# "per-window" boundary pull. `--scan-budget N` gates on this count.
+_SCAN_PATH_SYMBOLS = frozenset({
+    "run_epoch_window", "_run_scan_window", "_build_fused_scan",
+    "scan_fn", "one_epoch", "epoch_scan",
+})
+
 
 @dataclass
 class LintReport:
@@ -48,6 +58,17 @@ class LintReport:
         refactor has to absorb."""
         return [f.as_dict() for f in self.findings
                 if f.rule.startswith("HS")]
+
+    def scan_path_syncs(self) -> list[Finding]:
+        """Per-epoch host round trips on the K-scan fast path: HS findings
+        inside the scan-path functions, excluding the one justified
+        per-window boundary pull (which amortizes over K epochs)."""
+        return [
+            f for f in self.findings
+            if f.rule.startswith("HS")
+            and any(p in _SCAN_PATH_SYMBOLS for p in f.symbol.split("."))
+            and "per-window" not in f.justification
+        ]
 
     def format(self, verbose: bool = False) -> str:
         lines = []
@@ -134,6 +155,10 @@ def run_lint(argv: list[str] | None = None) -> int:
     ap.add_argument("--inventory", metavar="OUT.json", default=None,
                     help="write the host<->device round-trip inventory "
                          "(all HS findings incl. suppressed) as JSON")
+    ap.add_argument("--scan-budget", metavar="N", type=int, default=None,
+                    help="fail (exit 1) when the per-epoch host-sync count "
+                         "on the K-scan fast path exceeds N (the "
+                         "device-resident budget is 0)")
     ap.add_argument("--json", action="store_true",
                     help="print the full report as JSON")
     ap.add_argument("--verbose", "-v", action="store_true",
@@ -168,6 +193,14 @@ def run_lint(argv: list[str] | None = None) -> int:
         out = report.format(verbose=args.verbose)
         if out:
             print(out)
+    if args.scan_budget is not None:
+        over = report.scan_path_syncs()
+        print(f"scan fast path: {len(over)} per-epoch host sync(s) "
+              f"(budget {args.scan_budget})")
+        if len(over) > args.scan_budget:
+            for f in over:
+                print(f"  {f.format()}")
+            return 1
     return report.exit_code
 
 

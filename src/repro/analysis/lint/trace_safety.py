@@ -1,21 +1,23 @@
 """Layer 2: jaxpr trace-safety checks (TS001-TS003).
 
 Static source checks can miss what jit *actually* stages, so this layer
-traces the real programs -- `repro.core.engine._build_fused_step` across
-its specialization axes and the kernel wrappers -- and walks the jaxprs:
+traces the real programs -- the fused epoch step and the K-epoch
+`lax.scan` program (`repro.core.engine`) across their specialization axes,
+plus the Pallas kernel wrappers -- and walks the jaxprs:
 
-  TS001  the jit tier's fused step is the bit-for-bit contract's hot path;
-         every floating aval in its trace must be float64 (an f32 aval
-         means an operand silently dropped out of the time plane);
+  TS001  the fused step/scan are the bit-for-bit contract's hot path;
+         every floating aval in their traces must be float64 (an f32 aval
+         means an operand silently dropped out of the time plane). The
+         kernel wrappers are held to the same rule: their sort keys are
+         exact int32 (hi, lo) words bitcast from the caller-precision
+         deadlines, so no sub-f64 float compute belongs in those traces
+         either;
   TS002  no host-callback primitives inside any fused/kernel trace (a
          callback is a hidden host sync AND a nondeterminism hazard);
   TS003  shape stability: fused tiers must pad epoch batches to pow2
          buckets, and the worst-case compile count across the scenario
-         catalog (specialization keys x pow2 buckets) must stay bounded.
-
-The Pallas wrappers are deliberately excluded from TS001 -- their f32
-span-relative keys are the documented caveat -- but they are traced for
-TS002.
+         catalog (specialization keys x pow2 buckets x K-epoch scan
+         buckets) must stay bounded.
 """
 from __future__ import annotations
 
@@ -88,9 +90,13 @@ def callback_prims(jaxpr) -> list[str]:
 # ---------------------------------------------------------------------------
 # tracing the real programs
 # ---------------------------------------------------------------------------
-def _fused_step_args(n: int, r: int, *, dies_at=False, clock=False) -> dict:
+def _fused_step_args(n: int, r: int, *, dies_at=False, clock=False,
+                     window: int = 16) -> dict:
     rng = np.random.default_rng(0)
     kw = dict(
+        pool=np.full(window * r, np.inf),
+        ptr=np.int64(0),
+        cnt=np.int64(0),
         t=rng.uniform(0.0, 1.0, n),
         c2p=rng.uniform(0.0, 1e-3, n),
         owd_pr=rng.uniform(0.0, 1e-3, (n, r)),
@@ -99,8 +105,10 @@ def _fused_step_args(n: int, r: int, *, dies_at=False, clock=False) -> dict:
         alive=np.ones(r, bool),
         kcls=np.zeros(n, np.int64),
         leader=0,
-        bound=1e-3,
-        fetch=1e-3,
+        n_valid=n,
+        pq01=0.95,
+        margin=1e-4,
+        clamp_d=1e-3,
         batch_delay=0.0,
         cap=1.0,
         floor=0.0,
@@ -113,9 +121,54 @@ def _fused_step_args(n: int, r: int, *, dies_at=False, clock=False) -> dict:
     return kw
 
 
+def _fused_scan_args(k: int, n: int, r: int, *, window: int = 16) -> dict:
+    rng = np.random.default_rng(0)
+    return dict(
+        pool=np.full(window * r, np.inf),
+        ptr=np.int64(0),
+        cnt=np.int64(0),
+        t=rng.uniform(0.0, 1.0, (k, n)),
+        c2p=rng.uniform(0.0, 1e-3, (k, n)),
+        owd_pr=rng.uniform(0.0, 1e-3, (k, n, r)),
+        drop_pr=np.zeros((k, n, r), bool),
+        reply_owd=rng.uniform(0.0, 1e-3, (k, n, r)),
+        kcls=np.zeros((k, n), np.int64),
+        n_valid=np.full(k, n, np.int64),
+        alive=np.ones(r, bool),
+        leader=0,
+        pq01=0.95,
+        margin=1e-4,
+        clamp_d=1e-3,
+        batch_delay=0.0,
+        cap=1.0,
+        floor=0.0,
+    )
+
+
+def _trace_contract(jaxpr, label: str, path: str) -> list[Finding]:
+    """TS001 + TS002 on one jaxpr."""
+    findings: list[Finding] = []
+    bad = non_f64_float_ops(jaxpr)
+    if bad:
+        prims = ", ".join(f"{p}[{d}]" for p, d in bad[:4])
+        findings.append(Finding(
+            rule="TS001", path=path, line=0, col=0, symbol=label,
+            message=f"{len(bad)} non-float64 float op(s) in the trace: "
+                    f"{prims}",
+            extra={"ops": bad[:32]}))
+    cbs = callback_prims(jaxpr)
+    if cbs:
+        findings.append(Finding(
+            rule="TS002", path=path, line=0, col=0, symbol=label,
+            message=f"host callback primitive(s) in the trace: "
+                    f"{', '.join(sorted(set(cbs)))}"))
+    return findings
+
+
 def check_fused_step(f: int = 1, n: int = 8) -> list[Finding]:
-    """Trace the jit tier's fused step across its specialization axes and
-    assert the float64-end-to-end + no-callback contract on each jaxpr."""
+    """Trace the jit tier's fused step (and the K-epoch scan program)
+    across their specialization axes and assert the float64-end-to-end +
+    no-callback contract on each jaxpr."""
     import jax
     from jax.experimental import enable_x64
 
@@ -140,28 +193,25 @@ def check_fused_step(f: int = 1, n: int = 8) -> list[Finding]:
         kw = _fused_step_args(n, r, **fault)
         with enable_x64():
             jaxpr = jax.make_jaxpr(step)(**kw)
-        bad = non_f64_float_ops(jaxpr)
-        if bad:
-            prims = ", ".join(f"{p}[{d}]" for p, d in bad[:4])
-            findings.append(Finding(
-                rule="TS001", path=ENGINE_PATH, line=0, col=0,
-                symbol=label,
-                message=f"{len(bad)} non-float64 float op(s) in the jit "
-                        f"fused-step trace: {prims}",
-                extra={"ops": bad[:32]}))
-        cbs = callback_prims(jaxpr)
-        if cbs:
-            findings.append(Finding(
-                rule="TS002", path=ENGINE_PATH, line=0, col=0,
-                symbol=label,
-                message=f"host callback primitive(s) in the fused-step "
-                        f"trace: {', '.join(sorted(set(cbs)))}"))
+        findings.extend(_trace_contract(jaxpr, label, ENGINE_PATH))
+    # the K-epoch scan shares the epoch body but stages it under lax.scan
+    # with the ring-pool carry threaded through -- trace it separately so
+    # a scan-only regression (e.g. an f32 carry init) cannot hide
+    for use_kcls in (False, True):
+        label = f"_build_fused_scan(K=4, use_kcls={use_kcls})"
+        scan = tier.epoch_scan(f, use_kcls=use_kcls)
+        kw = _fused_scan_args(4, n, r)
+        with enable_x64():
+            jaxpr = jax.make_jaxpr(scan)(**kw)
+        findings.extend(_trace_contract(jaxpr, label, ENGINE_PATH))
     return findings
 
 
 def check_kernel_wrappers(n: int = 8, r: int = 3) -> list[Finding]:
-    """TS002 on the Pallas kernel wrappers (their f32 keys are the
-    documented caveat, so TS001 does not apply)."""
+    """TS001 + TS002 on the Pallas kernel wrappers: the int32 (hi, lo) key
+    encoding means the whole trace is integer lanes plus float64 inputs --
+    any sub-f64 float op is a regression toward the old span-relative-f32
+    keys and their tie window."""
     import jax
     from jax.experimental import enable_x64
 
@@ -188,12 +238,7 @@ def check_kernel_wrappers(n: int = 8, r: int = 3) -> list[Finding]:
             rule="TS002", path=OPS_PATH, line=0, col=0,
             message=f"failed to trace kernel wrappers: {exc!r}")]
     for name, jaxpr in traces.items():
-        cbs = callback_prims(jaxpr)
-        if cbs:
-            findings.append(Finding(
-                rule="TS002", path=OPS_PATH, line=0, col=0, symbol=name,
-                message=f"host callback primitive(s) in the kernel trace: "
-                        f"{', '.join(sorted(set(cbs)))}"))
+        findings.extend(_trace_contract(jaxpr, name, OPS_PATH))
     return findings
 
 
@@ -215,7 +260,7 @@ def _scenario_batch_estimate(sc) -> int:
 
 
 def check_compile_stability(scenarios: Iterable = None) -> list[Finding]:
-    from repro.core.engine import TIERS, _pow2_bucket
+    from repro.core.engine import SCAN_K_BUCKETS, TIERS, _pow2_bucket
 
     findings: list[Finding] = []
     # fused tiers must pad: without pow2 bucketing every distinct batch
@@ -233,6 +278,10 @@ def check_compile_stability(scenarios: Iterable = None) -> list[Finding]:
         scenarios = SCENARIOS.values()
     buckets: set[int] = set()
     spec_keys: set[tuple] = set()
+    # K=1 is the fused step; each K in SCAN_K_BUCKETS a scenario's
+    # epochs-per-dispatch setting can reach is a distinct scan program
+    # (the scan length is a static shape axis of its stacked operands)
+    k_buckets: set[int] = {1}
     for sc in scenarios:
         n_max = _pow2_bucket(_scenario_batch_estimate(sc))
         b = 1
@@ -242,17 +291,21 @@ def check_compile_stability(scenarios: Iterable = None) -> list[Finding]:
         use_kcls = bool(sc.overrides.get("commutative", False))
         use_cap = float(sc.overrides.get("deadline_cap", 0.0) or 0.0) > 0.0
         spec_keys.add((sc.f, use_kcls, use_cap))
-    worst = len(buckets) * len(spec_keys)
+        epd = int(sc.overrides.get("epochs_per_dispatch", 1) or 1)
+        k_buckets.update(k for k in SCAN_K_BUCKETS if k <= epd)
+    worst = len(buckets) * len(spec_keys) * len(k_buckets)
     if worst > COMPILE_LIMIT:
         findings.append(Finding(
             rule="TS003", path="src/repro/sim/scenario.py", line=0, col=0,
             symbol="SCENARIOS",
             message=f"catalog sweep worst-case compile count {worst} "
                     f"({len(spec_keys)} specialization keys x "
-                    f"{len(buckets)} pow2 buckets) exceeds "
+                    f"{len(buckets)} pow2 buckets x "
+                    f"{len(k_buckets)} K buckets) exceeds "
                     f"{COMPILE_LIMIT}",
             extra={"buckets": sorted(buckets),
-                   "keys": sorted(spec_keys)}))
+                   "keys": sorted(spec_keys),
+                   "k_buckets": sorted(k_buckets)}))
     return findings
 
 

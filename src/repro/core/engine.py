@@ -34,27 +34,42 @@ property-test oracle):
            `repro.kernels.dom_admit` bitonic-event-sort + prefix-max kernel
            and release ordering in the `repro.kernels.ops.dom_release`
            bitonic kernel (interpret mode off-TPU). Event times are compared
-           in float32 inside both kernels, so ties closer than ~2^-23 of the
-           batch's time span may order differently from the float64 tiers
-           and can flip a boundary admission/classification; continuous-time
-           instances collide with probability ~0.
+           as exact two-word int32 keys (repro.kernels.timekeys), so kernel
+           sort order equals the float64 tiers' order unconditionally --
+           ties included; there is no precision caveat.
 
 **Fused single-dispatch epochs**: tiers with ``fused = True`` (jit, pallas)
 replace the Stamp/Dom/Commit stages with one `FusedEpochStage` whose body is
-a single jitted program -- deadline bounding, watermark admission, release
+a single jitted program -- ring-pool OWD fold + sliding-percentile deadline
+bounding, the mean-reply fetch estimate, watermark admission, release
 times, and the quorum arithmetic of `classify_commits` as jnp ops over the
 pow2-padded batch, traced under float64 (`jax.experimental.enable_x64`) so
 the release/commit boundary no longer needs the host-side float64 recompute
-the old per-stage jit path did. Per epoch the host keeps only what is
-inherently sequential-stateful: network sampling, the sliding OWD pool
-percentile (the `bound` scalar), and the mean-reply fetch estimate, all
-passed in as scalars. The numpy tier keeps the five-stage pipeline as the
-readable staged reference; `FusedEpochStage` is regression-tested
-bit-for-bit against it.
+the old per-stage jit path did. The two formerly host-owned per-epoch
+scalars -- the sliding-pool percentile ``bound`` and the mean-reply
+``fetch`` -- are computed ON DEVICE from carried ring-buffer pool state,
+bit-identical to the host estimators (`_partition_percentile` /
+`_fetch_estimate`); the host keeps a cheap numpy mirror of the pool for
+bookkeeping and fault-path epochs. The numpy tier keeps the five-stage
+pipeline as the readable staged reference; `FusedEpochStage` is
+regression-tested bit-for-bit against it.
+
+**K-epochs-per-dispatch scan**: `DomEngine.run_epoch_window` wraps the same
+epoch body in a `jax.lax.scan` over K epochs (K in `SCAN_K_BUCKETS`), with
+the (pool, ptr, cnt) ring carry threaded through the scan and donated to
+XLA off-CPU -- the data plane compiles to ONE program and performs ONE
+device->host pull per K epoch generations instead of one per generation.
+Fault and recovery boundaries (crash, relaunch, StartView, `release_floor`
+changes, clock faults) segment the scan: the cluster's fast path
+(`repro.core.vectorized_cluster`) only dispatches windows that are provably
+fault-free and retry-closed, so K=1 sequential epochs remain bit-for-bit
+identical to the staged numpy tier AND K>1 windows are bit-for-bit
+identical to the same epochs run sequentially.
 
 Epoch batches are padded to power-of-two buckets before tier dispatch so jit
 recompilation is bounded by O(log N) distinct shapes per run instead of one
-per epoch size.
+per epoch size; scan windows additionally share one bucket across their K
+epochs (pad lanes are invisible to real rows by construction).
 
 `classify_commits` is the tier-independent commit classifier (quorum order
 statistics via O(R) `np.partition`, not full sorts); the legacy
@@ -64,7 +79,6 @@ one-shot (admission + classification) form.
 from __future__ import annotations
 
 import os
-import warnings
 from dataclasses import dataclass, field
 from typing import Optional, Union
 
@@ -196,11 +210,9 @@ class ComputeTier:
     # pointless extra work for the numpy tier.
     pad_batches = False
     # Fused tiers run stamp->dom->commit as ONE jitted device dispatch per
-    # epoch generation (FusedEpochStage) instead of the staged numpy path.
+    # epoch generation (FusedEpochStage) instead of the staged numpy path,
+    # and support the K-epochs-per-dispatch lax.scan window (`epoch_scan`).
     fused = False
-    # Compares time values through span-relative float32 keys (the Pallas
-    # kernels' documented tie caveat); drives the per-epoch tie-risk guard.
-    f32_time_keys = False
 
     def release_schedule(self, deadlines: np.ndarray,
                          arrivals: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
@@ -226,6 +238,14 @@ class ComputeTier:
         key = (f, use_kcls, use_cap)
         if key not in cache:
             cache[key] = _build_fused_step(self, f, use_kcls, use_cap)
+        return cache[key]
+
+    def epoch_scan(self, f: int, use_kcls: bool, use_cap: bool = False):
+        """The K-epochs-per-dispatch `lax.scan` program (fault-free path)."""
+        cache = self.__dict__.setdefault("_scan_cache", {})
+        key = (f, use_kcls, use_cap)
+        if key not in cache:
+            cache[key] = _build_fused_scan(self, f, use_kcls, use_cap)
         return cache[key]
 
 
@@ -280,13 +300,12 @@ class PallasTier(JitTier):
     Admission runs in `repro.kernels.dom_admit` (bitonic event sort fused
     with the watermark prefix-max, one grid program per receiver); the
     release/deadline ordering runs in the `repro.kernels.ops.dom_release`
-    bitonic kernel. Interpret mode off-TPU. Both compare times in float32
-    (span-relative after a shift by the batch minimum) -- the documented
-    sub-resolution-tie caveat.
+    bitonic kernel. Interpret mode off-TPU. Both compare times as exact
+    two-word int32 keys (repro.kernels.timekeys), so the kernel order
+    equals the float64 tiers' order unconditionally -- ties included.
     """
 
     name = "pallas"
-    f32_time_keys = True
 
     def release_schedule(self, deadlines, arrivals):
         from repro.kernels.ops import dom_admit
@@ -325,17 +344,45 @@ def make_tier(tier: Union[str, ComputeTier]) -> ComputeTier:
         raise KeyError(f"unknown compute tier {tier!r}; available: {', '.join(TIERS)}")
 
 
-class F32TieRiskWarning(UserWarning):
-    """An epoch's minimum positive deadline separation fell below
-    span * 2^-23: distinct deadlines may collapse to the same span-relative
-    float32 key in the Pallas kernels and order arbitrarily (the documented
-    tie caveat). Exact duplicates are NOT at risk -- the kernels break them
-    through the integer aux key, like the float64 tiers."""
-
-
 # ---------------------------------------------------------------------------
 # Commit classification (tier-independent)
 # ---------------------------------------------------------------------------
+def _tree_sum(x: np.ndarray) -> float:
+    """Fold-halves binary-tree sum of a 1-D float64 array.
+
+    Deterministic and pow2-padding-invariant: zero-padding to ANY larger
+    power of two folds away exactly (v + 0.0 == v bitwise), so the fused
+    device programs -- which reduce the same values at pow2-padded batch
+    shape with masked lanes contributing 0.0 -- produce the bit-identical
+    total.  This is the ONE summation order shared by the numpy tier, the
+    fused step, and the K-epoch scan for the mean-reply fetch estimate.
+    """
+    m = x.size
+    if m == 0:
+        return 0.0
+    p = _pow2_bucket(m)
+    if p != m:
+        x = np.concatenate([x, np.zeros(p - m)])
+    while x.size > 1:
+        h = x.size // 2
+        x = x[:h] + x[h:]
+    return float(x[0])
+
+
+def _fetch_estimate(reply_owd: np.ndarray) -> float:
+    """3x the mean finite reply delay: the slow-path fetch detour estimate.
+
+    Reduced in the canonical `_tree_sum` order so the device-resident
+    mirror inside the fused programs matches bit for bit.
+    """
+    fin = np.isfinite(reply_owd)
+    cnt = int(fin.sum())
+    if cnt == 0:
+        return float(np.inf)
+    return 3.0 * (_tree_sum(np.where(fin, reply_owd, 0.0).ravel()) / cnt)
+
+
+
 def classify_commits(
     deadlines: np.ndarray,          # [N] request deadlines (proxy-stamped)
     arrivals: np.ndarray,           # [N, R] request arrival at each replica
@@ -435,8 +482,7 @@ def classify_commits(
     # Follower can only sync m after receiving it (or fetching: +2 hops).
     # Crashed replicas are modeled by inf reply_owd; exclude them from the
     # fetch-delay estimate so live replicas keep a finite fetch path.
-    fin_reply = reply_owd[np.isfinite(reply_owd)]
-    fetch = 3 * float(fin_reply.mean()) if fin_reply.size else np.inf
+    fetch = _fetch_estimate(reply_owd)
     have_t = np.where(np.isfinite(arrivals), arrivals, leader_t[:, None] + fetch)
     slow_ready = np.maximum(sync_t, have_t)
     slow_reply_t = slow_ready + reply_owd
@@ -458,17 +504,33 @@ def classify_commits(
 # ---------------------------------------------------------------------------
 # Fused epoch program (single device dispatch per epoch generation)
 # ---------------------------------------------------------------------------
-def _build_fused_step(tier: ComputeTier, f: int, use_kcls: bool,
-                      use_cap: bool = False):
-    """Jit the stamp->dom->commit pipeline as one program for ``tier``.
+# Allowed K-epochs-per-dispatch scan lengths for the fault-free fast path.
+# A fixed menu (like the pow2 batch buckets) bounds the compile-count model
+# (lint TS003): windows are padded with empty epochs up to a bucket size.
+SCAN_K_BUCKETS = (4, 16, 64)
 
-    A jnp mirror of StampStage + DomStage + `classify_commits`, traced under
+
+def _build_epoch_body(tier: ComputeTier, f: int, use_kcls: bool,
+                      use_cap: bool = False):
+    """The shared jnp epoch body behind the K=1 step and the K-epoch scan.
+
+    A mirror of StampStage + DomStage + `classify_commits`, traced under
     float64 (the caller enters `enable_x64`), eliminating the per-stage
-    host<->device ping-pong. Host-stateful scalars (the sliding-pool
-    percentile ``bound`` and the mean-reply ``fetch`` estimate) are inputs,
-    so the program is pure. Mirrors the numpy op order exactly -- the
-    jit-tier output is regression-tested bit-for-bit against the staged
-    path (tests/test_engine.py).
+    host<->device ping-pong.  The two formerly host-owned per-epoch scalars
+    are computed IN-PROGRAM from carried state:
+
+      bound  -- this epoch's observed OWDs fold into a fixed-size ring
+                pool (the device twin of `DomEngine.owd_pool`), then the
+                sliding percentile + clock margin is selected on device,
+                bit-identical to `update_bound`/`_partition_percentile`;
+      fetch  -- the mean-reply estimate via the canonical `_tree_sum`
+                fold, bit-identical to `_fetch_estimate`.
+
+    Signature: body(pool, ptr, cnt, <epoch operands>) ->
+    ((pool, ptr, cnt), (stamp, deadlines, arrivals, admitted, release,
+    commit_t, fast, committed, bound)).  The carry is the ring pool; all
+    epoch outputs are bit-for-bit equal to the staged numpy tier
+    (tests/test_engine.py).
     """
     import jax
     import jax.numpy as jnp
@@ -476,11 +538,78 @@ def _build_fused_step(tier: ComputeTier, f: int, use_kcls: bool,
     fq = fast_quorum_size(f)
     sq = slow_quorum_size(f)
 
-    @jax.jit
-    def step(t, c2p, owd_pr, drop_pr, reply_owd, alive, kcls, leader,
-             bound, fetch, batch_delay, cap, floor, dies_at=None,
-             stamp_off=None, arr_off=None):
+    def pool_fold(pool, ptr, cnt, obs, n_valid):
+        # Ring-buffer fold of this epoch's observed OWD samples, row-major
+        # over the valid rows -- the device twin of update_bound's
+        # `concat(pool, obs)[-W:]`: when more than W samples would land,
+        # the oldest overflow is skipped before writing.  Write targets are
+        # distinct (mode="drop" discards masked lanes at index W), so the
+        # scatter is deterministic.
+        W = pool.shape[0]
+        n_pad, R = obs.shape
+        m = n_valid * R
+        m_kept = jnp.minimum(m, W)
+        skip = m - m_kept
+        k = jnp.arange(n_pad * R)
+        write = (k >= skip) & (k < m)
+        tgt = jnp.where(write, (ptr + k - skip) % W, W)
+        pool = pool.at[tgt].set(obs.ravel(), mode="drop")
+        return pool, (ptr + m_kept) % W, jnp.minimum(cnt + m, W)
+
+    def pool_percentile(pool, cnt, pq01, margin, clamp_d):
+        # Device mirror of update_bound: sort-select the two order
+        # statistics (+inf fills the unfilled tail) and interpolate exactly
+        # like `_partition_percentile` (numpy _lerp branch structure).
+        # pq01 is percentile/100 PRE-divided on the host: XLA strength-
+        # reduces an in-program `pq / 100.0` into a reciprocal multiply
+        # (pq * 0.01), which is 1 ulp off the host's true division and
+        # breaks bit-parity with the numpy oracle.
+        W = pool.shape[0]
+        srt = jnp.sort(pool)
+        pos = pq01 * (cnt - 1).astype(pool.dtype)
+        lo = jnp.clip(jnp.floor(pos).astype(jnp.int32), 0, W - 1)
+        hi = jnp.clip(jnp.ceil(pos).astype(jnp.int32), 0, W - 1)
+        lo_v = srt[lo]
+        hi_v = srt[hi]
+        t = pos - jnp.floor(pos)
+        r = jnp.where(t < 0.5, lo_v + t * (hi_v - lo_v),
+                      hi_v - (hi_v - lo_v) * (1.0 - t))
+        pct = jnp.where((t == 0.0) | (lo_v == hi_v), lo_v, r)
+        bound = pct + margin
+        bound = jnp.where((bound > 0.0) & (bound < clamp_d), bound, clamp_d)
+        return jnp.where(cnt > 0, bound, clamp_d)
+
+    def tree_mean_fetch(reply):
+        # `_fetch_estimate` on device: the fold-halves tree sum is
+        # pow2-padding-invariant, so the padded batch reduces to the exact
+        # numpy-tier value (pad lanes are +inf -> masked to 0.0).
+        fin = jnp.isfinite(reply)
+        cnt = jnp.sum(fin)
+        x = jnp.where(fin, reply, 0.0).ravel()
+        p = _pow2_bucket(x.shape[0])
+        if p != x.shape[0]:
+            x = jnp.concatenate([x, jnp.zeros((p - x.shape[0],), x.dtype)])
+        while x.shape[0] > 1:
+            h = x.shape[0] // 2
+            x = x[:h] + x[h:]
+        return jnp.where(cnt > 0, 3.0 * (x[0] / jnp.maximum(cnt, 1)),
+                         jnp.inf)
+
+    def body(pool, ptr, cnt, t, c2p, owd_pr, drop_pr, reply_owd, alive,
+             kcls, leader, n_valid, pq01, margin, clamp_d, batch_delay, cap,
+             floor, dies_at=None, stamp_off=None, arr_off=None):
         N, R = owd_pr.shape
+        # --- bound: device-resident sliding-percentile deadline bound ------
+        # Fold BEFORE selecting, mirroring StampStage's update_bound call
+        # (this epoch's samples are part of its own bound).
+        obs = owd_pr
+        if stamp_off is not None:
+            obs = owd_pr + arr_off - stamp_off[:, None]
+        pool, ptr, cnt = pool_fold(pool, ptr, cnt, obs, n_valid)
+        bound = pool_percentile(pool, cnt, pq01, margin, clamp_d)
+        # --- fetch: device-resident mean-reply estimate --------------------
+        reply = jnp.where(alive[None, :], reply_owd, jnp.inf)
+        fetch = tree_mean_fetch(reply)
         # --- stamp: proxy stamping + deadline bounding ---------------------
         # stamp_off: proxy clock-read error folded into the deadline value;
         # arr_off: replica clock-read error shifting each receiver's local
@@ -502,7 +631,6 @@ def _build_fused_step(tier: ComputeTier, f: int, use_kcls: bool,
             # clock offsets -- crash-free epochs carry none of this)
             arrivals = jnp.where(arrivals > dies_at[None, :], jnp.inf,
                                  arrivals)
-        reply = jnp.where(alive[None, :], reply_owd, jnp.inf)
         # --- dom: watermark admission + release (receiver-local frames) ----
         a_loc = arrivals if arr_off is None else arrivals + arr_off
         admitted = tier.admit_traced(deadlines, a_loc)
@@ -568,10 +696,73 @@ def _build_fused_step(tier: ComputeTier, f: int, use_kcls: bool,
         commit_t = jnp.minimum(fast_commit_t, slow_commit_t)
         fast = fast_commit_t <= slow_commit_t
         committed = jnp.isfinite(commit_t)
-        return (stamp, deadlines, arrivals, admitted, release,
-                commit_t, fast & committed, committed)
+        return ((pool, ptr, cnt),
+                (stamp, deadlines, arrivals, admitted, release,
+                 commit_t, fast & committed, committed, bound))
+
+    return body
+
+
+def _build_fused_step(tier: ComputeTier, f: int, use_kcls: bool,
+                      use_cap: bool = False):
+    """Jit the K=1 epoch body: one device dispatch per epoch generation.
+
+    Returns the 9 epoch outputs followed by the updated (pool, ptr, cnt)
+    ring carry.  The optional fault operands (dies_at / clock offsets)
+    dispatch at trace time, so fault-free epochs carry none of that work.
+    """
+    import jax
+
+    body = _build_epoch_body(tier, f, use_kcls, use_cap)
+
+    @jax.jit
+    def step(pool, ptr, cnt, t, c2p, owd_pr, drop_pr, reply_owd, alive,
+             kcls, leader, n_valid, pq01, margin, clamp_d, batch_delay, cap,
+             floor, dies_at=None, stamp_off=None, arr_off=None):
+        carry, outs = body(pool, ptr, cnt, t, c2p, owd_pr, drop_pr,
+                           reply_owd, alive, kcls, leader, n_valid, pq01,
+                           margin, clamp_d, batch_delay, cap, floor,
+                           dies_at=dies_at, stamp_off=stamp_off,
+                           arr_off=arr_off)
+        return outs + carry
 
     return step
+
+
+def _build_fused_scan(tier: ComputeTier, f: int, use_kcls: bool,
+                      use_cap: bool = False):
+    """K-epochs-per-dispatch: the epoch body under a `jax.lax.scan`.
+
+    The stacked per-epoch operands (leading K axis) scan over the shared
+    body with the (pool, ptr, cnt) ring carry threaded through -- one
+    compiled program and ONE device->host pull per K epoch generations.
+    Fault-free segments only: the scan variant carries no dies_at /
+    clock-offset operands; the cluster's fast-path guards ensure crashes,
+    relaunches, StartView stalls and `release_floor` changes land on
+    dispatch boundaries.  Off-CPU the carry buffers are donated so XLA
+    updates the ring pool in place.
+    """
+    import jax
+
+    body = _build_epoch_body(tier, f, use_kcls, use_cap)
+
+    def scan_fn(pool, ptr, cnt, t, c2p, owd_pr, drop_pr, reply_owd, kcls,
+                n_valid, alive, leader, pq01, margin, clamp_d, batch_delay,
+                cap, floor):
+        def one_epoch(carry, xs):
+            pool, ptr, cnt = carry
+            tk, c2pk, owdk, dropk, replyk, kclsk, nvk = xs
+            return body(pool, ptr, cnt, tk, c2pk, owdk, dropk, replyk,
+                        alive, kclsk, leader, nvk, pq01, margin, clamp_d,
+                        batch_delay, cap, floor)
+
+        carry, ys = jax.lax.scan(
+            one_epoch, (pool, ptr, cnt),
+            (t, c2p, owd_pr, drop_pr, reply_owd, kcls, n_valid))
+        return ys + carry
+
+    donate = (0, 1, 2) if jax.default_backend() != "cpu" else ()
+    return jax.jit(scan_fn, donate_argnums=donate)
 
 
 # ---------------------------------------------------------------------------
@@ -765,9 +956,11 @@ class FusedEpochStage(Stage):
     Replaces StampStage+DomStage+CommitStage when ``tier.fused``: the whole
     data plane between network sampling and client delivery runs as a
     single float64-traced program over the pow2-padded batch (see
-    `_build_fused_step`). The host contributes only the sequential-stateful
-    scalars: the sliding-pool percentile bound and the mean-reply fetch
-    estimate, both computed exactly as the staged path does.
+    `_build_epoch_body`). The formerly host-owned per-epoch scalars -- the
+    sliding-pool percentile ``bound`` and the mean-reply ``fetch`` -- are
+    computed in-program from the uploaded ring-pool state; the host only
+    advances its cheap numpy pool mirror (`update_bound`), whose value is
+    bit-identical to the device fold by construction.
     """
 
     name = "fused"
@@ -776,16 +969,15 @@ class FusedEpochStage(Stage):
         from jax.experimental import enable_x64
 
         cfg = eng.cfg
-        bound = eng.update_bound(eng.observed_owd_samples(s))
-        s.bound = bound
         N = s.t.size
         R = eng.n
-        # fetch estimate from the alive-masked reply delays (pre-padding),
-        # exactly the multiset classify_commits would reduce on host
+        # Upload the PRE-fold ring-pool snapshot; the program folds this
+        # epoch's samples itself.  The host mirror advances in lockstep so
+        # fault-path (staged) epochs and bookkeeping see the same pool.
+        pool, ptr, cnt = eng.device_pool_state()
+        s.bound = eng.update_bound(eng.observed_owd_samples(s))
         rep = s.reply_owd.copy()
         rep[:, ~s.alive] = np.inf
-        fin_reply = rep[np.isfinite(rep)]
-        fetch = 3 * float(fin_reply.mean()) if fin_reply.size else np.inf
         n_pad = _pow2_bucket(N) if eng.tier.pad_batches else N
         # Pad lanes: +inf attempt time -> +inf stamp/deadline/arrival, never
         # admitted, never committed -- invisible to the real rows.
@@ -797,7 +989,9 @@ class FusedEpochStage(Stage):
         owd[:N] = s.owd_pr
         drop = np.ones((n_pad, R), dtype=bool)
         drop[:N] = s.drop_pr
-        reply = np.zeros((n_pad, R))
+        # +inf reply pads: row-local quorum arithmetic never sees them AND
+        # the in-program fetch mean excludes them (pads must not count)
+        reply = np.full((n_pad, R), np.inf)
         reply[:N] = s.reply_owd
         kcls = np.full(n_pad, -1, np.int64)
         if s.kcls is not None:
@@ -813,17 +1007,20 @@ class FusedEpochStage(Stage):
             stamp_off[:N] = s.clock_stamp_off
             arr_off = np.zeros((n_pad, R))
             arr_off[:N] = s.clock_arr_off
-            fault_kw = dict(stamp_off=stamp_off, arr_off=arr_off)
+            fault_kw["stamp_off"] = stamp_off
+            fault_kw["arr_off"] = arr_off
         cap = float(getattr(cfg, "deadline_cap", 0.0) or 0.0)
         step = eng.tier.epoch_step(cfg.f, use_kcls=s.kcls is not None,
                                    use_cap=cap > 0.0)
         with enable_x64():
-            out = step(t, c2p, owd, drop, reply,
-                       np.asarray(s.alive, bool), kcls, s.leader,
-                       float(bound), fetch, float(cfg.leader_batch_delay),
+            out = step(pool, ptr, cnt, t, c2p, owd, drop, reply,
+                       np.asarray(s.alive, bool), kcls, s.leader, N,
+                       float(cfg.dom.percentile) / 100.0, eng.bound_margin(),
+                       float(cfg.dom.clamp_d),
+                       float(cfg.leader_batch_delay),
                        cap, float(s.release_floor), **fault_kw)
             # lint: allow[HS003] THE one epoch-end device->host pull of the fused program's outputs
-            out = [np.asarray(o)[:N] for o in out]
+            out = [np.asarray(o)[:N] for o in out[:8]]
         (s.stamp, s.deadlines, s.arrivals, s.admitted, s.release,
          s.commit_time, s.fast, s.committed) = out
         s.reply_owd = rep
@@ -1162,9 +1359,6 @@ class DomEngine:
         self.track_logs = track_logs    # benchmarks measuring the pure data
         #   plane (benchmarks/dom_scale.py) opt out of log accumulation
         self.logs = ReplicaLogState(n_replicas, cfg.f)
-        # Pallas f32 tie guard (see F32TieRiskWarning): epochs whose minimum
-        # positive deadline separation fell inside the f32 tie window
-        self.f32_tie_risk_epochs = 0
         if stages is None:
             stages = FUSED_STAGES if self.tier.fused else DEFAULT_STAGES
         self.stages = [s() for s in stages]
@@ -1207,6 +1401,25 @@ class DomEngine:
         if s.clock_arr_off is None and s.clock_stamp_off is None:
             return s.owd_pr
         return s.owd_pr + s.clock_arr_off - s.clock_stamp_off[:, None]
+
+    def device_pool_state(self) -> tuple[np.ndarray, np.int64, np.int64]:
+        """(pool, ptr, cnt) ring-buffer operands mirroring `owd_pool`.
+
+        The ring's live multiset equals the host sliding pool exactly; +inf
+        fills the unfilled tail so the device sort-select sees the live
+        samples first. Uploaded per dispatch -- a host->device transfer,
+        not a synchronizing pull (the fold itself runs in-program).
+        """
+        W = self.cfg.dom.window * self.n
+        pool = np.full(W, np.inf)
+        L = self.owd_pool.size
+        pool[:L] = self.owd_pool
+        return pool, np.int64(L % W), np.int64(L)
+
+    def bound_margin(self) -> float:
+        """The clock-error margin added to the OWD percentile (one float64
+        operand; host and device add the identical value)."""
+        return self.cfg.dom.beta * 2.0 * self.cfg.clock.residual_sigma
 
     def update_bound(self, owd_new: np.ndarray) -> float:
         """Fold new OWD samples into the sliding pool; return the DOM bound.
@@ -1259,40 +1472,135 @@ class DomEngine:
         )
         for stage in self.stages:
             stage.run(s, self)
-        if self.tier.f32_time_keys and s.deadlines is not None:
-            self._check_f32_tie_risk(s.deadlines)
         check = getattr(self.tier, "check_epoch", None)
         if check is not None:       # SanitizerTier (repro.core.sanitizer)
             check(s, self)
         return s
 
-    def _check_f32_tie_risk(self, deadlines: np.ndarray) -> None:
-        """Runtime guard for the documented Pallas f32 tie caveat: warn and
-        count when an epoch's minimum positive deadline separation falls
-        below span * 2^-23 (exact duplicates are safe -- the kernels break
-        them through the integer aux key)."""
-        d = np.sort(deadlines[np.isfinite(deadlines)])
-        if d.size < 2:
-            return
-        span = float(d[-1] - d[0])
-        if span <= 0.0:
-            return
-        diffs = np.diff(d)
-        pos = diffs[diffs > 0.0]
-        if pos.size and float(pos.min()) < span * 2.0 ** -23:
-            self.f32_tie_risk_epochs += 1
-            warnings.warn(
-                f"epoch deadline separation {float(pos.min()):.3e}s is "
-                f"below the f32 tie resolution span*2^-23 = "
-                f"{span * 2.0 ** -23:.3e}s; pallas ordering may break "
-                "sub-resolution ties arbitrarily",
-                F32TieRiskWarning, stacklevel=3)
+    def run_epoch_window(self, dues, alive: np.ndarray, leader: int,
+                         release_floor: float = 0.0) -> list:
+        """Run a window of fault-free epochs as ONE scanned device dispatch.
+
+        ``dues`` is a sequence of PENDING_DTYPE batches, one per epoch in
+        epoch order; its length should be a `SCAN_K_BUCKETS` value (callers
+        pad with empty batches).  Empty batches are inert lanes of the scan
+        (n_valid = 0: nothing folds, nothing commits) and yield None.
+
+        Preconditions -- the cluster's fast-path guards own them: a fused
+        tier, synced clocks, no crash inside the window (``dies_at`` is
+        never carried), and alive/leader/release_floor constant across it.
+        Host-side sampling, delivery, and log bookkeeping still run per
+        epoch IN ORDER (identical rng streams), so the returned EpochStates
+        are bit-for-bit identical to sequential `run_epoch` calls; the
+        device data plane runs as one `lax.scan` with a single
+        end-of-window pull -- zero per-epoch device round trips.
+        """
+        from jax.experimental import enable_x64
+
+        if not self.tier.fused or self.clocks_faulty:
+            return [self.run_epoch(d, alive, leader, release_floor)
+                    if d.size else None for d in dues]
+        sample = next((st for st in self.stages
+                       if isinstance(st, SampleStage)), None)
+        deliver = next((st for st in self.stages
+                        if isinstance(st, DeliverStage)), None)
+        log = next((st for st in self.stages
+                    if isinstance(st, LogStage)), None)
+        fused_ok = any(isinstance(st, FusedEpochStage) for st in self.stages)
+        if sample is None or deliver is None or log is None or not fused_ok:
+            # customized stage list: no fused pipeline to mirror
+            return [self.run_epoch(d, alive, leader, release_floor)
+                    if d.size else None for d in dues]
+        cfg = self.cfg
+        alive = np.asarray(alive, bool)
+        commutative = bool(getattr(cfg, "commutative", False))
+        K = len(dues)
+        states: list = [None] * K
+        for i, due in enumerate(dues):
+            if due.size == 0:
+                continue
+            s = EpochState(
+                t=np.ascontiguousarray(due["t"]),
+                t0=np.ascontiguousarray(due["t0"]),
+                cid=np.ascontiguousarray(due["cid"]),
+                rid=np.ascontiguousarray(due["rid"]),
+                kcls=(np.ascontiguousarray(due["kcls"])
+                      if commutative else None),
+                alive=alive,
+                leader=int(leader),
+                release_floor=float(release_floor),
+            )
+            sample.run(s, self)
+            states[i] = s
+        if all(s is None for s in states):
+            return states
+        R = self.n
+        n_pad = max(_pow2_bucket(s.t.size) if self.tier.pad_batches
+                    else s.t.size for s in states if s is not None)
+        # Stacked [K, n_pad(, R)] operands; one shared bucket across the
+        # window (pad lanes are invisible to real rows by construction, so
+        # sharing the max bucket is bitwise-inert).
+        t = np.full((K, n_pad), np.inf)
+        c2p = np.zeros((K, n_pad))
+        owd = np.zeros((K, n_pad, R))
+        drop = np.ones((K, n_pad, R), dtype=bool)
+        reply = np.full((K, n_pad, R), np.inf)
+        kcls = np.full((K, n_pad), -1, np.int64)
+        n_valid = np.zeros(K, np.int64)
+        for i, s in enumerate(states):
+            if s is None:
+                continue
+            N = s.t.size
+            t[i, :N] = s.t
+            c2p[i, :N] = s.c2p
+            owd[i, :N] = s.owd_pr
+            drop[i, :N] = s.drop_pr
+            reply[i, :N] = s.reply_owd
+            if s.kcls is not None:
+                kcls[i, :N] = s.kcls
+            n_valid[i] = N
+        cap = float(getattr(cfg, "deadline_cap", 0.0) or 0.0)
+        scan = self.tier.epoch_scan(cfg.f, use_kcls=commutative,
+                                    use_cap=cap > 0.0)
+        pool, ptr, cnt = self.device_pool_state()
+        with enable_x64():
+            out = scan(pool, ptr, cnt, t, c2p, owd, drop, reply, kcls,
+                       n_valid, alive, int(leader),
+                       float(cfg.dom.percentile) / 100.0, self.bound_margin(),
+                       float(cfg.dom.clamp_d),
+                       float(cfg.leader_batch_delay), cap,
+                       float(release_floor))
+            # lint: allow[HS003] the ONE per-window pull: K scanned epochs of fused outputs in a single transfer
+            ys = [np.asarray(o) for o in out[:8]]
+        check = getattr(self.tier, "check_epoch", None)
+        for i, s in enumerate(states):
+            if s is None:
+                continue
+            N = s.t.size
+            (s.stamp, s.deadlines, s.arrivals, s.admitted, s.release,
+             s.commit_time, s.fast, s.committed) = \
+                [y[i][:N] for y in ys]
+            # advance the host pool mirror in epoch order; bit-identical to
+            # the scanned device fold by construction
+            s.bound = self.update_bound(self.observed_owd_samples(s))
+            rep = s.reply_owd.copy()
+            rep[:, ~alive] = np.inf
+            s.reply_owd = rep
+            # every tier's device order now equals the stable argsort
+            # exactly (int-key kernels break ties by message id), so the
+            # log's execution order needs no extra device round trip
+            s.exec_order = np.argsort(s.deadlines, kind="stable")
+            deliver.run(s, self)
+            log.run(s, self)
+            if check is not None:   # SanitizerTier (repro.core.sanitizer)
+                check(s, self)
+        return states
 
 
 __all__ = [
     "PENDING_DTYPE", "PendingBuffer",
     "ComputeTier", "NumpyTier", "JitTier", "PallasTier", "TIERS", "make_tier",
-    "F32TieRiskWarning", "classify_commits",
+    "classify_commits", "SCAN_K_BUCKETS",
     "EpochState", "Stage", "SampleStage", "StampStage", "DomStage",
     "CommitStage", "DeliverStage", "LogStage", "FusedEpochStage",
     "DEFAULT_STAGES", "FUSED_STAGES", "ReplicaLogState", "DomEngine",

@@ -67,10 +67,6 @@ class SanitizerTier(ComputeTier):
     def fused(self) -> bool:
         return self.inner.fused
 
-    @property
-    def f32_time_keys(self) -> bool:
-        return self.inner.f32_time_keys
-
     def release_schedule(self, deadlines, arrivals):
         return self.inner.release_schedule(deadlines, arrivals)
 
@@ -85,6 +81,9 @@ class SanitizerTier(ComputeTier):
 
     def epoch_step(self, f: int, use_kcls: bool, use_cap: bool = False):
         return self.inner.epoch_step(f, use_kcls, use_cap=use_cap)
+
+    def epoch_scan(self, f: int, use_kcls: bool, use_cap: bool = False):
+        return self.inner.epoch_scan(f, use_kcls, use_cap=use_cap)
 
     # -- the invariant checks ------------------------------------------------
     def check_epoch(self, s: "EpochState", eng: "DomEngine") -> None:

@@ -74,7 +74,7 @@ import numpy as np
 
 from repro.core.cluster import CommonConfig, Cluster, summarize_commits
 from repro.core.dom import DomParams
-from repro.core.engine import DomEngine, PendingBuffer
+from repro.core.engine import SCAN_K_BUCKETS, DomEngine, PendingBuffer
 from repro.core.recovery import pack_uids
 from repro.core.quorum import leader_of_view, n_replicas
 from repro.sim.network import CloudNetwork
@@ -94,6 +94,11 @@ class VectorizedConfig(CommonConfig):
     leader_batch_delay: float = 50e-6   # leader log-mod batching (slow path)
     tier: str = "numpy"                 # compute tier: numpy | jit | pallas
     epoch_duration: float = 10e-3       # batching granularity of the data plane
+    epochs_per_dispatch: int = 1        # K-epoch lax.scan fast path (fused
+    #   tiers): provably fault-free, retry-closed windows of up to this many
+    #   epochs run as ONE device dispatch (engine.run_epoch_window); actual
+    #   window lengths snap to engine.SCAN_K_BUCKETS. 1 = off. Bit-for-bit
+    #   identical outputs either way (tests/test_engine.py).
     heartbeat_timeout: float = 25e-3    # failure-detector timeout (mirrors
     #   ReplicaParams.heartbeat_timeout; starts the view-change pipeline)
     viewchange_resend: float = 10e-3    # recovery-message retransmit interval
@@ -460,6 +465,10 @@ class VectorizedNezhaCluster(Cluster):
                 self.epoch_leaders.append(
                     self._vc.leader if self._vc is not None else -1)
             else:
+                k_scan = self._scan_window_len(horizon)
+                if k_scan:
+                    self._run_scan_window(k_scan)
+                    continue
                 leader = leader_of_view(self._view, self.f)
                 self._run_epoch_batches(epoch_end, leader,
                                         self._deaths_at(epoch_end))
@@ -467,6 +476,77 @@ class VectorizedNezhaCluster(Cluster):
                 self.epoch_leaders.append(leader)
             self._epochs += 1
             self._now = epoch_end
+
+    # -- the K-epoch scan fast path ----------------------------------------------
+    def _scan_window_len(self, horizon: float) -> int:
+        """Largest SCAN_K_BUCKETS window the fast path may dispatch now.
+
+        0 when the scan path is off or ineligible.  A window of K epochs is
+        eligible only when the device program can be segment-free: a fused
+        tier, no view change in flight (caller's branch), synced clocks, no
+        callbacks (closed-loop resubmission re-times epochs), every epoch a
+        full ``epoch_duration`` inside the horizon, no fault event at or
+        before the window's end (liveness, clocks, and the network regime
+        stay constant; no ``dies_at`` cut-offs), and the retry-closure
+        guarantee: the window ends strictly before the earliest pending
+        request could produce a due retry (`t >= min_time + client_timeout`),
+        so each epoch is exactly one generation and no in-window attempt's
+        retry falls due in-window.  Epoch boundaries accumulate one
+        ``epoch_duration`` at a time, exactly like the sequential loop, so
+        timing is bit-identical.
+        """
+        cfg = self.cfg
+        k_max = int(getattr(cfg, "epochs_per_dispatch", 1))
+        if k_max < min(SCAN_K_BUCKETS) or not self.engine.tier.fused \
+                or self.on_commit is not None or self.engine.clocks_faulty:
+            return 0
+        t_min = self._pending.min_time()
+        retry_closed = t_min + cfg.client_timeout
+        fault = self._next_fault_time()
+        for k in sorted(SCAN_K_BUCKETS, reverse=True):
+            if k > k_max:
+                continue
+            end = self._now
+            for _ in range(k):
+                end = end + cfg.epoch_duration
+            if end <= horizon and fault > end and end < retry_closed \
+                    and t_min < end:
+                return k
+        return 0
+
+    def _run_scan_window(self, k: int) -> None:
+        """Dispatch K consecutive fault-free epochs through the engine's
+        `run_epoch_window` scan (one device program, one pull), then do the
+        per-epoch client bookkeeping in epoch order -- identical results to
+        K sequential `_run_epoch_batches` iterations (retry closure makes
+        the up-front `pop_due` sequence equal to the interleaved one)."""
+        ep = self.cfg.epoch_duration
+        leader = leader_of_view(self._view, self.f)
+        ends = []
+        e = self._now
+        for _ in range(k):
+            e = e + ep
+            ends.append(e)
+        dues = [self._pending.pop_due(t) for t in ends]
+        states = self.engine.run_epoch_window(dues, self._alive, leader,
+                                              self._release_floor)
+        for due, s in zip(dues, states):
+            if s is not None:
+                self._batches += 1
+                self._latencies.append(s.latency[s.delivered])
+                self._n_fast += int(np.sum(s.fast & s.delivered))
+                if s.delivered.any():
+                    idx = np.flatnonzero(s.delivered)
+                    self._trace_commits.append((
+                        s.commit_at_client[idx], s.cid[idx], s.rid[idx],
+                        (s.fast & s.delivered)[idx],
+                        np.zeros(idx.size, bool)))
+                if not s.delivered.all():
+                    self._retry(due[~s.delivered])
+            self._last_leader = leader
+            self.epoch_leaders.append(leader)
+            self._epochs += 1
+        self._now = ends[-1]
 
     def _deaths_at(self, epoch_end: float) -> Optional[np.ndarray]:
         """Death instants of replicas crashing exactly when this epoch ends:
@@ -548,7 +628,6 @@ class VectorizedNezhaCluster(Cluster):
             tier=self.engine.tier.name, view_changes=self.view_changes,
             recovered_entries=self._recovered_entries,
             dropped_speculative=self._dropped_speculative,
-            f32_tie_risk_epochs=self.engine.f32_tie_risk_epochs,
         )
 
 

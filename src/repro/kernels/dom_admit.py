@@ -14,13 +14,11 @@ The bitonic network maps onto the VPU as log^2(2n) compare-exchange sweeps
 of static permutations (reshape/swap, no data-dependent gathers); the
 prefix max is log(2n) shifted-max sweeps.
 
-Fidelity caveat: event times are compared in float32 inside the kernel
-(keys are shifted by the batch minimum host-side, so precision is relative
-to the batch's time *span*).  Ties closer than ~span * 2^-23 may order
-differently from the float64 tiers and flip an admission on the boundary;
-continuous-time instances collide with probability ~0, and exactly
-representable ties (e.g. duplicated deadlines) are broken by the same
-integer aux key as the float64 paths, hence identically.
+Event times are compared as exact two-word int32 keys
+(repro.kernels.timekeys): the lexicographic (hi, lo) order *is* the
+float64 total order, so admission matches the float64 tiers bit for bit --
+ties included, broken by the same integer aux key as the float64 paths.
+The kernel body is pure int32; no float compare happens on-device.
 
 Oracle: repro.core.vectorized.dom_admit_watermark_np (itself property-
 tested against the exact O(N^2) scan and the event-driven EarlyBuffer).
@@ -32,6 +30,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels.timekeys import HI_INF, I32_MIN, LO_INF, time_sort_keys
 
 
 def _compare_exchange_multi(keys, vals, stride, direction_up):
@@ -82,40 +82,60 @@ def _bitonic_sort_multi(keys, vals):
     return keys, vals
 
 
-def _prefix_max(x):
-    """Inclusive prefix max over [m] lanes, log(m) shifted-max sweeps."""
-    m = x.shape[0]
+def _prefix_max_pair(hi, lo):
+    """Inclusive lexicographic prefix max over (hi, lo) int32 key lanes."""
+    m = hi.shape[0]
     s = 1
     while s < m:
-        shifted = jnp.concatenate([jnp.full((s,), -jnp.inf, x.dtype), x[:-s]])
-        x = jnp.maximum(x, shifted)
+        fill = jnp.full((s,), I32_MIN, jnp.int32)
+        sh = jnp.concatenate([fill, hi[:-s]])
+        sl = jnp.concatenate([fill, lo[:-s]])
+        take = (sh > hi) | ((sh == hi) & (sl > lo))
+        hi = jnp.where(take, sh, hi)
+        lo = jnp.where(take, sl, lo)
         s *= 2
-    return x
+    return hi, lo
 
 
-def _dom_admit_kernel(deadline_ref, arrival_ref, admitted_ref):
-    # lint: span-relative-f32 -- kernel body: bitonic event sort over span-relative float32 keys (documented caveat)
-    n = deadline_ref.shape[0]
-    d = deadline_ref[...].astype(jnp.float32)
-    a = arrival_ref[...].reshape(n).astype(jnp.float32)
+def _dom_admit_kernel(dhi_ref, dlo_ref, ahi_ref, alo_ref, admitted_ref):
+    # Pure int32 body: inputs are the encoded (hi, lo) key words; every
+    # comparison is lexicographic over the pair == exact float64 compare.
+    n = dhi_ref.shape[0]
+    dhi = dhi_ref[...]
+    dlo = dlo_ref[...]
+    ahi = ahi_ref[...].reshape(n)
+    alo = alo_ref[...].reshape(n)
     idx = jax.lax.iota(jnp.int32, n)
+
+    # candidate release r = max(d, a)
+    d_gt_a = (dhi > ahi) | ((dhi == ahi) & (dlo > alo))
+    rhi = jnp.where(d_gt_a, dhi, ahi)
+    rlo = jnp.where(d_gt_a, dlo, alo)
 
     # 2n events: [tests | updates].  aux = (class*n + msg)*2 + kind packs the
     # (class, message, kind) tie-break into one int; see core.vectorized.
-    times = jnp.concatenate([a, jnp.maximum(d, a)])
-    cls = jnp.where(d > a, 0, n).astype(jnp.int32)
+    thi = jnp.concatenate([ahi, rhi])
+    tlo = jnp.concatenate([alo, rlo])
+    cls = jnp.where(d_gt_a, 0, n).astype(jnp.int32)
     aux = jnp.concatenate([(n + idx) * 2, (cls + idx) * 2 + 1])
-    contrib = jnp.concatenate([jnp.full((n,), -jnp.inf, jnp.float32),
-                               jnp.where(d < jnp.inf, d, -jnp.inf)])
-    dval = jnp.concatenate([d, d])
+    d_fin = (dhi != HI_INF) | (dlo != LO_INF)
+    bot = jnp.full((n,), I32_MIN, jnp.int32)
+    chi = jnp.concatenate([bot, jnp.where(d_fin, dhi, I32_MIN)])
+    clo = jnp.concatenate([bot, jnp.where(d_fin, dlo, I32_MIN)])
+    vhi = jnp.concatenate([dhi, dhi])
+    vlo = jnp.concatenate([dlo, dlo])
 
-    (t_s, aux_s), (contrib_s, dval_s) = _bitonic_sort_multi(
-        (times, aux), (contrib, dval))
+    (thi_s, tlo_s, aux_s), (chi_s, clo_s, vhi_s, vlo_s) = _bitonic_sort_multi(
+        (thi, tlo, aux), (chi, clo, vhi, vlo))
 
-    excl = jnp.concatenate([jnp.full((1,), -jnp.inf, jnp.float32),
-                            _prefix_max(contrib_s)[:-1]])
+    phi, plo = _prefix_max_pair(chi_s, clo_s)
+    one_bot = jnp.full((1,), I32_MIN, jnp.int32)
+    ehi = jnp.concatenate([one_bot, phi[:-1]])
+    elo = jnp.concatenate([one_bot, plo[:-1]])
     is_test = (aux_s & 1) == 0
-    adm = (is_test & (dval_s > excl) & (t_s < jnp.inf)).astype(jnp.int32)
+    d_gt_excl = (vhi_s > ehi) | ((vhi_s == ehi) & (vlo_s > elo))
+    t_fin = (thi_s != HI_INF) | (tlo_s != LO_INF)
+    adm = (is_test & d_gt_excl & t_fin).astype(jnp.int32)
 
     # unsort: tests back to lanes [0, n), updates parked at [n, 2n)
     half = aux_s >> 1
@@ -127,30 +147,35 @@ def _dom_admit_kernel(deadline_ref, arrival_ref, admitted_ref):
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def dom_admit_pallas(deadlines, arrivals, *, interpret=False):
-    """deadlines [n] f32, arrivals [R, n] f32 (+inf = dropped).
+    """deadlines [n] float, arrivals [R, n] float (+inf = dropped).
 
-    Returns admitted [R, n] bool.  n is padded to a power of two internally
-    (pad lanes carry +inf deadline and arrival: never admitted, never a
-    watermark).  The grid iterates receivers; each program runs one
-    receiver's full event network in VMEM.
+    Returns admitted [R, n] bool.  Times are encoded as exact int32
+    (hi, lo) key words at the caller's input precision -- float64 in,
+    float64-exact admission out.  n is padded to a power of two internally
+    (pad lanes carry the +inf key for deadline and arrival: never
+    admitted, never a watermark).  The grid iterates receivers; each
+    program runs one receiver's full event network in VMEM.
     """
-    # lint: span-relative-f32 -- pallas_call wrapper: float32 key plumbing + inf pow2 padding
     R, n = arrivals.shape
+    dhi, dlo = time_sort_keys(deadlines)
+    ahi, alo = time_sort_keys(arrivals)
     n_pad = 1 << (int(n - 1).bit_length() if n > 1 else 0)
     if n_pad != n:
-        deadlines = jnp.pad(deadlines, (0, n_pad - n),
-                            constant_values=jnp.inf)
-        arrivals = jnp.pad(arrivals, ((0, 0), (0, n_pad - n)),
-                           constant_values=jnp.inf)
+        dhi = jnp.pad(dhi, (0, n_pad - n), constant_values=HI_INF)
+        dlo = jnp.pad(dlo, (0, n_pad - n), constant_values=LO_INF)
+        ahi = jnp.pad(ahi, ((0, 0), (0, n_pad - n)), constant_values=HI_INF)
+        alo = jnp.pad(alo, ((0, 0), (0, n_pad - n)), constant_values=LO_INF)
     admitted = pl.pallas_call(
         _dom_admit_kernel,
         grid=(R,),
         in_specs=[pl.BlockSpec((n_pad,), lambda r: (0,)),
+                  pl.BlockSpec((n_pad,), lambda r: (0,)),
+                  pl.BlockSpec((1, n_pad), lambda r: (r, 0)),
                   pl.BlockSpec((1, n_pad), lambda r: (r, 0))],
         out_specs=pl.BlockSpec((1, n_pad), lambda r: (r, 0)),
         out_shape=jax.ShapeDtypeStruct((R, n_pad), jnp.int32),
         interpret=interpret,
-    )(deadlines.astype(jnp.float32), arrivals.astype(jnp.float32))
+    )(dhi, dlo, ahi, alo)
     return admitted[:, :n] != 0
 
 

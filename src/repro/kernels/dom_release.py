@@ -2,15 +2,20 @@
 
 At serving rates of 10^6 req/s the hot loop of a DOM receiver is "given the
 admitted message set, emit the release order by deadline" -- an O(n log^2 n)
-bitonic sorting network over (deadline, msg-id) pairs. The network maps onto
-the VPU as log^2(n) compare-exchange sweeps over [n]-lanes; every stage is a
-static permutation expressed with reshape/swap (no data-dependent gathers,
-which TPUs hate).
+bitonic sorting network over (deadline-key, msg-id) tuples. The network maps
+onto the VPU as log^2(n) compare-exchange sweeps over [n]-lanes; every stage
+is a static permutation expressed with reshape/swap (no data-dependent
+gathers, which TPUs hate).
 
-Non-released lanes (deadline > clock_now, or not admitted) are masked to
-+inf and sort to the tail. Output: msg indices in release order + the count.
+Deadlines are compared as exact two-word int32 keys
+(repro.kernels.timekeys) with the message index as the final sort key, so
+the emitted order is EXACTLY the stable argsort of the float64 deadlines --
+ties break by message id, identically to the float64 tiers; no precision
+caveat.  Non-released lanes (deadline > clock_now, or not admitted) are
+masked to the above-everything pad key and sort to the tail.  Output: msg
+indices in release order + the count.
 
-Oracle: masked argsort (repro.kernels.ops.dom_release_ref_order).
+Oracle: masked stable argsort (repro.kernels.ops.dom_release_ref_order).
 """
 from __future__ import annotations
 
@@ -20,86 +25,67 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-
-def _compare_exchange(keys, vals, stride, direction_up):
-    """One bitonic stage: compare lanes i and i^stride (static permutation)."""
-    n = keys.shape[0]
-    k2 = keys.reshape(n // (2 * stride), 2, stride)
-    v2 = vals.reshape(n // (2 * stride), 2, stride)
-    a_k, b_k = k2[:, 0], k2[:, 1]
-    a_v, b_v = v2[:, 0], v2[:, 1]
-    swap = a_k > b_k
-    lo_k = jnp.where(swap, b_k, a_k)
-    hi_k = jnp.where(swap, a_k, b_k)
-    lo_v = jnp.where(swap, b_v, a_v)
-    hi_v = jnp.where(swap, a_v, b_v)
-    # direction per group: ascending if direction_up[group] else descending
-    du = direction_up.reshape(n // (2 * stride), 1)
-    new_a_k = jnp.where(du, lo_k, hi_k)
-    new_b_k = jnp.where(du, hi_k, lo_k)
-    new_a_v = jnp.where(du, lo_v, hi_v)
-    new_b_v = jnp.where(du, hi_v, lo_v)
-    keys = jnp.stack([new_a_k, new_b_k], axis=1).reshape(n)
-    vals = jnp.stack([new_a_v, new_b_v], axis=1).reshape(n)
-    return keys, vals
+from repro.kernels.dom_admit import _bitonic_sort_multi
+from repro.kernels.timekeys import HI_INF, I32_MAX, LO_INF, time_sort_keys
 
 
-def _bitonic_sort(keys, vals):
-    """Full ascending bitonic sort; n must be a power of two (static)."""
-    n = keys.shape[0]
-    stages = int(n).bit_length() - 1
-    idx = jax.lax.iota(jnp.int32, n)
-    for k in range(1, stages + 1):          # block size 2^k
-        for j in range(k - 1, -1, -1):      # stride 2^j
-            stride = 1 << j
-            # ascending iff bit k of the lane index is 0
-            group_idx = idx.reshape(n // (2 * stride), 2 * stride)[:, 0]
-            direction_up = ((group_idx >> k) & 1) == 0
-            keys, vals = _compare_exchange(keys, vals, stride, direction_up)
-    return keys, vals
-
-
-def _dom_release_kernel(deadline_ref, admitted_ref, clock_ref, order_ref, count_ref):
-    # lint: span-relative-f32 -- kernel body: bitonic sort over span-relative float32 keys (documented caveat)
-    d = deadline_ref[...].astype(jnp.float32)
+def _dom_release_kernel(dhi_ref, dlo_ref, admitted_ref, nhi_ref, nlo_ref,
+                        order_ref, count_ref):
+    # Pure int32 body: (hi, lo) encoded deadline keys and clock key words.
+    n = dhi_ref.shape[0]
+    dhi = dhi_ref[...]
+    dlo = dlo_ref[...]
     adm = admitted_ref[...] != 0
-    now = clock_ref[0]
-    released = adm & (d <= now)
-    keys = jnp.where(released, d, jnp.inf)
-    vals = jax.lax.iota(jnp.int32, d.shape[0])
-    keys_s, vals_s = _bitonic_sort(keys, vals)
+    now_hi = nhi_ref[0]
+    now_lo = nlo_ref[0]
+    # released = admitted & (d <= now), lexicographic over the key pair
+    d_le_now = (dhi < now_hi) | ((dhi == now_hi) & (dlo <= now_lo))
+    released = adm & d_le_now
+    top = jnp.int32(I32_MAX)
+    khi = jnp.where(released, dhi, top)
+    klo = jnp.where(released, dlo, top)
+    idx = jax.lax.iota(jnp.int32, n)
+    # message id is the final sort key: ties (and the masked tail) order by
+    # id, making the released prefix the exact stable argsort by deadline
+    (_, _, idx_s), _ = _bitonic_sort_multi((khi, klo, idx), ())
     # dtype-pinned: under an enable_x64 trace the sum would promote to int64
     n_rel = jnp.sum(released.astype(jnp.int32)).astype(jnp.int32)
-    seq = jax.lax.iota(jnp.int32, d.shape[0])
-    order_ref[...] = jnp.where(seq < n_rel, vals_s, -1)
+    seq = jax.lax.iota(jnp.int32, n)
+    order_ref[...] = jnp.where(seq < n_rel, idx_s, -1)
     count_ref[0] = n_rel
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def dom_release_pallas(deadlines, admitted, clock_now, *, interpret=False):
-    """deadlines [n] f32, admitted [n] int8/bool, clock_now [] f32.
+    """deadlines [n] float, admitted [n] int8/bool, clock_now [] float.
 
     Returns (order [n] int32: message ids in release order, -1 padded;
              count [] int32). n is padded to a power of two internally.
+    Keys are exact int32 (hi, lo) words at the caller's input precision;
+    the released prefix equals the stable argsort of the deadlines.
     """
-    # lint: span-relative-f32 -- pallas_call wrapper: float32 key plumbing + inf pow2 padding
     n = deadlines.shape[0]
+    dhi, dlo = time_sort_keys(deadlines)
+    now = jnp.asarray(clock_now).reshape(1)
+    nhi, nlo = time_sort_keys(now)
     n_pad = 1 << (int(n - 1).bit_length() if n > 1 else 0)
     if n_pad != n:
-        deadlines = jnp.pad(deadlines, (0, n_pad - n), constant_values=jnp.inf)
+        dhi = jnp.pad(dhi, (0, n_pad - n), constant_values=HI_INF)
+        dlo = jnp.pad(dlo, (0, n_pad - n), constant_values=LO_INF)
         admitted = jnp.pad(admitted.astype(jnp.int8), (0, n_pad - n))
     order, count = pl.pallas_call(
         _dom_release_kernel,
         in_specs=[pl.BlockSpec((n_pad,), lambda: (0,)),
                   pl.BlockSpec((n_pad,), lambda: (0,)),
+                  pl.BlockSpec((n_pad,), lambda: (0,)),
+                  pl.BlockSpec((1,), lambda: (0,)),
                   pl.BlockSpec((1,), lambda: (0,))],
         out_specs=[pl.BlockSpec((n_pad,), lambda: (0,)),
                    pl.BlockSpec((1,), lambda: (0,))],
         out_shape=[jax.ShapeDtypeStruct((n_pad,), jnp.int32),
                    jax.ShapeDtypeStruct((1,), jnp.int32)],
         interpret=interpret,
-    )(deadlines.astype(jnp.float32), admitted.astype(jnp.int8),
-      clock_now.reshape(1).astype(jnp.float32))
+    )(dhi, dlo, admitted.astype(jnp.int8), nhi, nlo)
     # Padded lanes are never released (admitted=0), so they sort to the tail
     # as -1 markers; slicing to n restores the caller's shape contract.
     return order[:n], count[0]

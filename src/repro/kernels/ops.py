@@ -3,6 +3,11 @@
 On TPU the Pallas kernels run compiled; this container is CPU-only so the
 default is the jnp path, with `use_pallas=True` running interpret mode
 (used by the test suite; identical numerics asserts).
+
+Time keys: the DOM kernels compare event times as exact two-word int32
+keys (repro.kernels.timekeys), so the pallas path needs no span shift, no
+sentinel remapping, and matches the float64 tiers bit for bit -- callers
+pass absolute float64 times straight through.
 """
 from __future__ import annotations
 
@@ -44,26 +49,18 @@ def ssd_scan(x, dt, A, B, C, *, chunk=128, use_pallas=None):
 def dom_admit_traced(deadlines, arrivals, *, use_pallas=True):
     """Traceable early-buffer admission: [N] x [N, R] -> [N, R] bool.
 
-    The jnp mirror of the host-level `dom_admit`: shifts event times by
-    their finite minimum (so float32 kernel precision is relative to the
-    batch's time span, not its absolute epoch) and runs the fused
-    `dom_admit_pallas` bitonic-watermark kernel, one grid program per
-    receiver.  Composable inside jit -- the engine's fused epoch step for
-    the pallas tier calls this directly.
+    The jnp mirror of the host-level `dom_admit`: runs the fused
+    `dom_admit_pallas` bitonic-watermark kernel on exact int32 key words,
+    one grid program per receiver.  Composable inside jit -- the engine's
+    fused epoch step for the pallas tier calls this directly (under
+    enable_x64, so the kernel sees float64 keys and admission is exact).
     """
-    # lint: span-relative-f32 -- documented Pallas caveat: kernel keys are float32 relative to the batch span
-    d, a = deadlines, arrivals
-    fin_d, fin_a = jnp.isfinite(d), jnp.isfinite(a)
-    mn = jnp.minimum(jnp.min(jnp.where(fin_d, d, jnp.inf), initial=jnp.inf),
-                     jnp.min(jnp.where(fin_a, a, jnp.inf), initial=jnp.inf))
-    shift = jnp.where(jnp.isfinite(mn), mn, 0.0)
-    dj = jnp.where(fin_d, d - shift, jnp.inf).astype(jnp.float32)
-    aj = jnp.where(fin_a, a - shift, jnp.inf).astype(jnp.float32)
     if use_pallas:
-        return dom_admit_pallas(dj, aj.T, interpret=not _on_tpu()).T
+        return dom_admit_pallas(deadlines, arrivals.T,
+                                interpret=not _on_tpu()).T
     from repro.core.vectorized import dom_admit_watermark_jnp
 
-    return dom_admit_watermark_jnp(dj, aj)
+    return dom_admit_watermark_jnp(deadlines, arrivals)
 
 
 def dom_admit(deadlines, arrivals, *, use_pallas=None):
@@ -71,11 +68,12 @@ def dom_admit(deadlines, arrivals, *, use_pallas=None):
 
     Off-kernel the float64 numpy watermark path is the reference; with
     `use_pallas` the bitonic event sort + prefix-max kernel runs admission
-    on-device (interpret mode off-TPU).  See repro.kernels.dom_admit for
-    the float32 tie caveat.
+    on-device (interpret mode off-TPU) over exact int32 time keys --
+    bit-identical to the numpy watermark, ties included.
     """
-    # lint: span-relative-f32 -- host-side float64 shift, kernel sees span-relative float32 keys (documented caveat)
     import numpy as np
+
+    from jax.experimental import enable_x64
 
     if use_pallas is None:
         use_pallas = _on_tpu()
@@ -85,13 +83,9 @@ def dom_admit(deadlines, arrivals, *, use_pallas=None):
         from repro.core.vectorized import dom_admit_watermark_np
 
         return dom_admit_watermark_np(d, a)
-    # shift in float64 on host; the kernel sees span-relative float32 keys
-    fin_d, fin_a = np.isfinite(d), np.isfinite(a)
-    vals = np.concatenate([d[fin_d], a[fin_a].ravel()])
-    shift = float(vals.min()) if vals.size else 0.0
-    dj = jnp.asarray(np.where(fin_d, d - shift, np.inf), jnp.float32)
-    aj = jnp.asarray(np.where(fin_a, a - shift, np.inf).T, jnp.float32)
-    adm = dom_admit_pallas(dj, aj, interpret=not _on_tpu())
+    with enable_x64():
+        adm = dom_admit_pallas(jnp.asarray(d), jnp.asarray(a.T),
+                               interpret=not _on_tpu())
     return np.asarray(adm).T  # lint: allow[HS003] host-entry wrapper: one pull of the kernel result
 
 
@@ -105,14 +99,22 @@ def dom_release(deadlines, admitted, clock_now, *, use_pallas=None):
 
 
 def dom_release_ref_order(deadlines, admitted, clock_now):
-    """Oracle for dom_release: masked stable argsort by deadline."""
-    # lint: span-relative-f32 -- caller-precision oracle: receives the same span-relative float32 keys as the kernel
-    released = jnp.asarray(admitted, bool) & (deadlines <= clock_now)
-    keys = jnp.where(released, deadlines, jnp.inf)
-    order = jnp.argsort(keys, stable=True).astype(jnp.int32)
-    n_rel = jnp.sum(released.astype(jnp.int32))
-    seq = jnp.arange(deadlines.shape[0])
-    return jnp.where(seq < n_rel, order, -1), n_rel
+    """Oracle for dom_release: masked stable argsort by deadline.
+
+    Conversion happens under `enable_x64` so float64 inputs keep float64
+    comparison precision regardless of the caller's x64 context (jit-free,
+    plain jnp ops; float32 inputs stay float32).
+    """
+    from jax.experimental import enable_x64
+
+    with enable_x64():
+        deadlines = jnp.asarray(deadlines)
+        released = jnp.asarray(admitted, bool) & (deadlines <= clock_now)
+        keys = jnp.where(released, deadlines, jnp.inf)
+        order = jnp.argsort(keys, stable=True).astype(jnp.int32)
+        n_rel = jnp.sum(released.astype(jnp.int32))
+        seq = jnp.arange(deadlines.shape[0])
+        return jnp.where(seq < n_rel, order, -1), n_rel
 
 
 def dom_deadline_order(deadlines, *, use_pallas=None):
@@ -121,57 +123,38 @@ def dom_deadline_order(deadlines, *, use_pallas=None):
     This is the pallas compute tier's ordering primitive (repro.core.engine):
     with every message admitted and the clock at +inf, the early-buffer drain
     degenerates to the plain deadline sort the commit classifier needs.
-    Deadlines are shifted by their finite minimum before the float32 kernel
-    compare, so the usable precision is relative to the batch's time *span*,
-    not its absolute epoch. Ties within float32 resolution may order
-    arbitrarily (the bitonic network is not a stable sort); non-finite
-    deadlines (dropped stamps) are mapped to a finite sentinel above every
-    real key -- they sort to the tail in unspecified relative order, but
-    stay strictly below the kernel's own +inf pow2-padding lanes, so the
-    result is always a permutation of [0, n). Returns int64 message
-    indices, deadline-sorted.
+    Exact int32 key words with the message index as the final sort key make
+    the result EXACTLY ``np.argsort(deadlines, kind="stable")``: ties break
+    by message id, non-finite deadlines (dropped stamps) sort at the tail
+    (ahead of the kernel's own pow2-padding lanes), and the output is always
+    a permutation of [0, n). Returns int64 message indices, deadline-sorted.
     """
-    # lint: span-relative-f32 -- documented Pallas caveat: the sort compares span-relative float32 keys
     import numpy as np
+
+    from jax.experimental import enable_x64
 
     d = np.asarray(deadlines, np.float64)
     n = d.size
     if n == 0:
         return np.zeros(0, np.int64)
-    fin = np.isfinite(d)
-    if fin.any():
-        shift = float(d[fin].min())
-        span = float(d[fin].max()) - shift
-    else:
-        shift, span = 0.0, 0.0
-    sentinel = 2.0 * span + 1.0
-    dj = jnp.asarray(np.where(fin, d - shift, sentinel), jnp.float32)
-    order, _ = dom_release(dj, jnp.ones(n, jnp.int8),
-                           jnp.asarray(np.inf, jnp.float32),
-                           use_pallas=use_pallas)
+    with enable_x64():
+        order, _ = dom_release(jnp.asarray(d), jnp.ones(n, jnp.int8),
+                               jnp.asarray(np.inf), use_pallas=use_pallas)
     return np.asarray(order, dtype=np.int64)  # lint: allow[HS003] host-entry wrapper: one pull of the kernel result
 
 
 def dom_deadline_order_traced(deadlines, *, use_pallas=True):
     """Traceable mirror of `dom_deadline_order` for the fused epoch step.
 
-    Same shift-by-finite-min + sentinel mapping, but expressed in jnp so it
-    composes inside the jitted epoch program; off the pallas path it falls
-    back to a plain stable argsort.
+    Same exact-key contract, expressed in jnp so it composes inside the
+    jitted epoch program; off the pallas path it falls back to a plain
+    stable argsort.  Both paths produce the identical permutation.
     """
-    # lint: span-relative-f32 -- documented Pallas caveat: traced span-relative float32 sort keys
     d = deadlines
     if not use_pallas:
         return jnp.argsort(d, stable=True)
-    fin = jnp.isfinite(d)
-    mn = jnp.min(jnp.where(fin, d, jnp.inf), initial=jnp.inf)
-    mx = jnp.max(jnp.where(fin, d, -jnp.inf), initial=-jnp.inf)
-    shift = jnp.where(jnp.isfinite(mn), mn, 0.0)
-    span = jnp.where(jnp.isfinite(mn), mx - mn, 0.0)
-    sentinel = (2.0 * span + 1.0).astype(jnp.float32)
-    dj = jnp.where(fin, (d - shift).astype(jnp.float32), sentinel)
-    order, _ = dom_release_pallas(dj, jnp.ones(d.shape[0], jnp.int8),
-                                  jnp.full((), jnp.inf, jnp.float32),
+    order, _ = dom_release_pallas(d, jnp.ones(d.shape[0], jnp.int8),
+                                  jnp.full((), jnp.inf, d.dtype),
                                   interpret=not _on_tpu())
     return order
 

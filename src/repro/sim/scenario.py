@@ -322,7 +322,6 @@ SCENARIO_RESULT_KEYS = (
     "fast_commit_ratio", "median_latency", "p90_latency", "mean_latency",
     "throughput", "epochs", "view_changes", "recovered_entries",
     "dropped_speculative", "applied_faults", "skipped_faults",
-    "f32_tie_risk_epochs",
 )
 
 
@@ -362,11 +361,6 @@ class ScenarioResult:
     dropped_speculative: int
     applied_faults: int
     skipped_faults: int
-    # epochs whose minimum positive deadline separation fell inside the
-    # Pallas f32 tie window (engine F32TieRiskWarning); 0 on float64 tiers
-    # and event backends -- benchmark runs use it to prove the documented
-    # caveat never fired
-    f32_tie_risk_epochs: int = 0
     raw: dict = field(default_factory=dict, repr=False)
 
     @classmethod
@@ -390,7 +384,6 @@ class ScenarioResult:
             dropped_speculative=int(summary.get("dropped_speculative", 0)),
             applied_faults=applied_faults,
             skipped_faults=skipped_faults,
-            f32_tie_risk_epochs=int(summary.get("f32_tie_risk_epochs", 0)),
             raw=dict(summary),
         )
 

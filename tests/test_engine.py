@@ -22,8 +22,8 @@ RNG = np.random.default_rng(11)
 
 
 def _instance(n=200, r=3, seed=0):
-    """A realistic (deadlines, arrivals) DOM instance with distinct,
-    float32-separable deadlines (>=1us spacing over a ~ms span)."""
+    """A realistic (deadlines, arrivals) DOM instance with distinct
+    deadlines (>=1us spacing over a ~ms span)."""
     rng = np.random.default_rng(seed)
     send = np.sort(rng.uniform(0, 5e-3, n))
     send += np.arange(n) * 1e-6              # enforce distinct spacing
@@ -36,8 +36,9 @@ def _instance(n=200, r=3, seed=0):
 def _adversarial_instance(style, n, r, seed):
     """DOM instances the watermark admission must survive exactly: late
     arrivals beyond the deadline, duplicate deadlines, inf-dropped arrivals,
-    all-dropped receivers.  Grid-valued styles (k/64) are float32-exact so
-    the Pallas kernel's f32 compares cannot round, only tie-break."""
+    all-dropped receivers.  The Pallas kernels compare exact int32 key
+    words, so every style -- continuous or grid-valued -- must match the
+    float64 tiers bit-for-bit, ties included."""
     rng = np.random.default_rng(seed)
     if style == "late":            # arrivals up to 2x span past the deadline
         d = np.sort(rng.uniform(0, 1, n))
@@ -121,16 +122,43 @@ def test_watermark_tiers_match_exact_oracle_adversarial(style):
 @pytest.mark.pallas
 @pytest.mark.parametrize("style", ADVERSARIAL)
 def test_watermark_pallas_matches_oracle_adversarial(style):
-    """The fused dom_admit kernel agrees too: grid-valued adversarial
-    instances are f32-exact, so even duplicate-deadline tie-breaks must
-    match the float64 tiers (same integer aux key)."""
-    if style == "late":     # continuous values: sub-f32-resolution pairs
-        pytest.skip("continuous instance; covered by the cluster-level test")
+    """The fused dom_admit kernel agrees too -- including the continuous
+    "late" style whose sub-f32-resolution pairs used to sit inside the
+    span-relative-f32 tie window. Exact int32 keys make parity
+    unconditional."""
     for seed in range(3):
         d, a = _adversarial_instance(style, n=21, r=3, seed=seed)
         want = _exact_oracle_admission(d, a)
         adm, _ = PallasTier().release_schedule(d, a)
         np.testing.assert_array_equal(want, adm, err_msg=f"pallas {style}")
+
+
+@pytest.mark.pallas
+def test_pallas_exact_on_sub_microsecond_ties():
+    """Acceptance: an adversarial instance stuffed with exact duplicates
+    AND nanosecond-separated deadlines (far below the f32 ulp of the span,
+    the old `F32TieRiskWarning` regime) orders and admits identically to
+    the float64 tiers -- no tie-window exemption."""
+    rng = np.random.default_rng(3)
+    base = np.sort(rng.uniform(0, 5e-3, 64))
+    # each base deadline spawns an exact duplicate and two 1ns-separated
+    # neighbours: ~2.4e-10 relative spacing, unrepresentable span-relative
+    d = (base[:, None] + np.array([0.0, 0.0, 1e-9, 2e-9])).ravel()
+    perm = rng.permutation(d.size)
+    d = d[perm]
+    a = d[:, None] + rng.uniform(-2e-9, 2e-9, (d.size, 3))
+    a[rng.random((d.size, 3)) < 0.1] = np.inf
+
+    np.testing.assert_array_equal(PallasTier().deadline_order(d),
+                                  np.argsort(d, kind="stable"))
+    np.testing.assert_array_equal(PallasTier().deadline_order(d),
+                                  NumpyTier().deadline_order(d))
+    want = _exact_oracle_admission(d, a)
+    adm_pal, rel_pal = PallasTier().release_schedule(d, a)
+    adm_jit, rel_jit = JitTier().release_schedule(d, a)
+    np.testing.assert_array_equal(want, adm_pal)
+    np.testing.assert_array_equal(adm_jit, adm_pal)
+    np.testing.assert_array_equal(rel_jit, rel_pal)
 
 
 def test_numpy_jit_tier_parity():
@@ -159,11 +187,9 @@ def test_pallas_tier_parity():
 
 @pytest.mark.pallas
 def test_pallas_tier_through_cluster_matches_numpy():
-    """Same seed + workload through all three tier registry entries. The jit
-    tier must match the numpy tier bit-for-bit; the pallas tier compares
-    deadlines in float32 inside the bitonic kernel, so sub-resolution
-    deadline ties may flip an occasional fast/slow classification -- allow a
-    small tolerance there."""
+    """Same seed + workload through all three tier registry entries. With
+    exact int32 kernel keys ALL tiers must agree bit-for-bit -- the old
+    f32 tie tolerance on the pallas row is gone."""
     w = Workload(mode="open", rate_per_client=500.0, duration=0.08,
                  warmup=0.01, drain=0.05, seed=0)
     outs = {}
@@ -173,17 +199,13 @@ def test_pallas_tier_through_cluster_matches_numpy():
             make_cluster(name, CommonConfig(f=1, n_clients=2, seed=0)))
     base = outs["nezha-vectorized"]
     assert base["tier"] == "numpy"
-    jit = outs["nezha-vectorized-jit"]
-    assert jit["committed"] == base["committed"]
-    assert jit["fast_commit_ratio"] == base["fast_commit_ratio"]
-    np.testing.assert_allclose(jit["median_latency"], base["median_latency"],
-                               rtol=1e-12)
-    pal = outs["nezha-vectorized-pallas"]
-    assert pal["tier"] == "pallas"
-    assert pal["committed"] == base["committed"]
-    assert abs(pal["fast_commit_ratio"] - base["fast_commit_ratio"]) < 0.05
-    np.testing.assert_allclose(pal["median_latency"], base["median_latency"],
-                               rtol=0.05)
+    for name, tier in (("nezha-vectorized-jit", "jit"),
+                       ("nezha-vectorized-pallas", "pallas")):
+        out = outs[name]
+        assert out["tier"] == tier
+        assert out["committed"] == base["committed"]
+        assert out["fast_commit_ratio"] == base["fast_commit_ratio"]
+        assert out["median_latency"] == base["median_latency"]
 
 
 def test_make_tier_rejects_unknown():
@@ -309,6 +331,180 @@ def test_fused_epoch_step_with_crashed_replica_matches_staged():
     for field in ("admitted", "release", "commit_time", "fast", "committed"):
         np.testing.assert_array_equal(
             getattr(s_np, field), getattr(s_jit, field), err_msg=field)
+
+
+# ---------------------------------------------------------------------------
+# device-resident bound / fetch estimators vs the host oracles
+# ---------------------------------------------------------------------------
+def test_tree_sum_is_pow2_padding_invariant():
+    """The lemma the shared-bucket scan rests on: the fold-halves tree sum
+    ignores zero padding up to any pow2 size, so padded device batches
+    reduce to the exact host value."""
+    from repro.core.engine import _tree_sum
+
+    rng = np.random.default_rng(0)
+    for n in (1, 2, 3, 5, 8, 13, 100, 1000):
+        x = rng.uniform(0, 1e-3, n)
+        s = _tree_sum(x)
+        for pad in (1, 3, 64):
+            assert _tree_sum(np.concatenate([x, np.zeros(pad)])) == s
+        np.testing.assert_allclose(s, x.sum(), rtol=1e-12)
+    assert _tree_sum(np.array([])) == 0.0
+
+
+def test_fetch_estimate_masks_nonfinite_and_handles_empty():
+    from repro.core.engine import _fetch_estimate, _tree_sum
+
+    rng = np.random.default_rng(1)
+    x = rng.uniform(0, 1e-3, (7, 3))
+    x[rng.random((7, 3)) < 0.3] = np.inf
+    fin = np.isfinite(x)
+    want = 3.0 * (_tree_sum(np.where(fin, x, 0.0).ravel()) / int(fin.sum()))
+    assert _fetch_estimate(x) == want
+    assert _fetch_estimate(np.full((2, 2), np.inf)) == np.inf
+
+
+def test_device_percentile_and_ring_pool_match_host_sliding_pool():
+    """Seeded sweep (hypothesis-style, without the dependency): the
+    device order-statistic bound -- ring-pool fold + sort-select +
+    `_lerp`-compatible interpolation -- equals the host
+    `update_bound`/`_partition_percentile` pipeline EXACTLY, epoch for
+    epoch, across pool sizes, duplicates, overflow, clamping, empty pools,
+    and q endpoints; and the carried ring equals the host sliding pool."""
+    from jax.experimental import enable_x64
+
+    from repro.core.engine import _partition_percentile
+
+    tier = JitTier()
+    scan = tier.epoch_scan(1, use_kcls=False)
+    r, K, n_pad = 3, 4, 8
+    W = 18   # window*R; NOT a pow2, and one epoch (n_pad*r = 24) overflows it
+    cases = [   # (seed, q, clamp_d, quantize)
+        (0, 95.0, 1.0, False),
+        (1, 0.0, 1.0, False),      # q=0 endpoint + empty-pool epochs
+        (2, 100.0, 1.0, True),     # q=100 endpoint + heavy duplicates
+        (3, 50.0, 1.0, True),
+        (4, 25.0, 1.0, False),     # t < 0.5 interpolation branch
+        (5, 77.3, 1.0, True),      # t >= 0.5 branch, duplicates
+        (6, 95.0, 5e-4, False),    # clamp engages
+    ]
+    for seed, q, clamp_d, quantize in cases:
+        rng = np.random.default_rng(seed)
+        n_valid = rng.integers(0, n_pad + 1, K)
+        n_hist = int(rng.integers(0, W))
+        if seed == 1:               # cold start: bound = clamp until samples
+            n_valid[:2] = 0
+            n_hist = 0
+        owd = rng.uniform(1e-5, 8e-4, (K, n_pad, r))
+        if quantize:
+            owd = np.round(owd, 4)
+        hist = rng.uniform(1e-5, 8e-4, n_hist)
+        pool0 = np.full(W, np.inf)
+        pool0[:n_hist] = hist
+        margin = 1e-4
+        args = (pool0, np.int64(n_hist % W), np.int64(n_hist),
+                np.tile(np.linspace(0, 1e-3, n_pad), (K, 1)),
+                np.full((K, n_pad), 1e-5),
+                owd,
+                np.zeros((K, n_pad, r), bool),
+                np.full((K, n_pad, r), 1e-4),
+                np.zeros((K, n_pad), np.int64),
+                n_valid.astype(np.int64),
+                np.ones(r, bool), 0,
+                float(q) / 100.0, margin, float(clamp_d), 0.0, 0.0, 0.0)
+        with enable_x64():
+            out = scan(*args)
+        bounds = np.asarray(out[8])
+        pool_dev = np.asarray(out[9])
+        ptr_dev, cnt_dev = int(out[10]), int(out[11])
+        host: list = hist.tolist()
+        for k in range(K):
+            host.extend(owd[k, : n_valid[k]].ravel().tolist())
+            host = host[-W:]
+            if not host:
+                want = clamp_d
+            else:
+                want = _partition_percentile(np.asarray(host), q) + margin
+                if not (0.0 < want < clamp_d):
+                    want = clamp_d
+            assert bounds[k] == want, f"seed={seed} q={q} epoch={k}"
+        live = (pool_dev[(ptr_dev + np.arange(W)) % W] if cnt_dev == W
+                else pool_dev[:cnt_dev])
+        np.testing.assert_array_equal(live, np.asarray(host),
+                                      err_msg=f"seed={seed} ring vs pool")
+
+
+# ---------------------------------------------------------------------------
+# K-epochs-per-dispatch scan parity (the cluster fast path)
+# ---------------------------------------------------------------------------
+def _k_dispatch_cluster(name, k, crash=None):
+    cfg = VectorizedConfig(f=1, n_clients=3, seed=0, client_timeout=5.0,
+                           epochs_per_dispatch=k)
+    cl = make_cluster(name, cfg)
+    cl.start()
+    rng = np.random.default_rng(42)
+    for i, t in enumerate(np.sort(rng.uniform(0.0, 0.25, 200))):
+        cl.submit_at(float(t), i % 3, keys=(i % 5,))
+    if crash is not None:
+        cl.crash_at(crash, 0)
+    cl.run_for(0.3)
+    return cl
+
+
+def _assert_bitwise_equal_runs(cl_a, cl_b):
+    from repro.sim.trace import CommitTrace
+
+    assert cl_a.summary() == cl_b.summary()
+    np.testing.assert_array_equal(np.concatenate(cl_a._latencies),
+                                  np.concatenate(cl_b._latencies))
+    assert cl_a.epoch_leaders == cl_b.epoch_leaders
+    np.testing.assert_array_equal(cl_a.engine.owd_pool, cl_b.engine.owd_pool)
+    tr_a = CommitTrace.from_cluster(cl_a)
+    tr_b = CommitTrace.from_cluster(cl_b)
+    for col, arr in tr_a.log.items():
+        np.testing.assert_array_equal(arr, tr_b.log[col],
+                                      err_msg=f"log.{col}")
+    for col, arr in tr_a.commits.items():
+        np.testing.assert_array_equal(arr, tr_b.commits[col],
+                                      err_msg=f"commits.{col}")
+
+
+def test_k_scan_dispatch_is_bitwise_identical_to_per_epoch_jit():
+    """Tentpole acceptance: K-epochs-per-dispatch (`run_epoch_window` via
+    `lax.scan`) is bit-for-bit identical to the sequential per-epoch fused
+    path on a fault-free run -- same commits, latencies, leaders, OWD
+    pool, and committed sequence."""
+    base = _k_dispatch_cluster("nezha-vectorized-jit", 1)
+    scan = _k_dispatch_cluster("nezha-vectorized-jit", 64)
+    # the fast path actually ran: the K=1 run never compiles a scan
+    # program, the K=64 run does
+    assert not getattr(base.engine.tier, "_scan_cache", {})
+    assert getattr(scan.engine.tier, "_scan_cache", {})
+    _assert_bitwise_equal_runs(base, scan)
+
+
+def test_k_scan_crash_segments_and_stays_bitwise_identical():
+    """Fault boundaries segment the scan: a leader crash mid-run forces
+    the per-epoch path through detection + view change, and the K>1 run
+    still equals K=1 bitwise (recovery included)."""
+    base = _k_dispatch_cluster("nezha-vectorized-jit", 1, crash=0.05)
+    scan = _k_dispatch_cluster("nezha-vectorized-jit", 64, crash=0.05)
+    assert scan.summary()["view_changes"] == 1      # recovery exercised
+    assert getattr(scan.engine.tier, "_scan_cache", {})
+    _assert_bitwise_equal_runs(base, scan)
+
+
+@pytest.mark.pallas
+def test_k_scan_dispatch_parity_pallas():
+    """The scan fast path composes with the Pallas kernels: K=64 pallas ==
+    K=1 pallas == K=1 jit, bitwise."""
+    jit1 = _k_dispatch_cluster("nezha-vectorized-jit", 1)
+    pal1 = _k_dispatch_cluster("nezha-vectorized-pallas", 1)
+    pal64 = _k_dispatch_cluster("nezha-vectorized-pallas", 64)
+    assert getattr(pal64.engine.tier, "_scan_cache", {})
+    _assert_bitwise_equal_runs(pal1, pal64)
+    np.testing.assert_array_equal(np.concatenate(jit1._latencies),
+                                  np.concatenate(pal64._latencies))
 
 
 def test_engine_epoch_pipeline_smoke():

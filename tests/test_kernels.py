@@ -78,9 +78,33 @@ def test_dom_release_kernel(n):
     want_order, want_count = dom_release_ref_order(deadlines, admitted, now)
     assert int(count) == int(want_count)
     k = int(count)
-    # release order must be identical (deadlines are distinct w.p. 1)
+    # release order must be identical: the (hi, lo, idx) key sort is exact
+    # and index-stable, so this holds for duplicates too, not just w.p. 1
     np.testing.assert_array_equal(np.asarray(order[:k]), np.asarray(want_order[:k]))
     assert bool((np.asarray(order[k:]) == -1).all())
+
+
+def test_dom_release_kernel_f64_duplicates_and_1ns_gaps():
+    """float64 inputs with exact duplicate deadlines and 1ns separations
+    straddling `now`: the int32 (hi, lo) key words preserve the full f64
+    order, and equal deadlines release in index order (stable argsort)."""
+    from jax.experimental import enable_x64
+
+    with enable_x64():
+        base = np.sort(RNG.uniform(1.0, 2.0, 32))
+        d = np.repeat(base, 4) + np.tile([0.0, 0.0, 1e-9, 2e-9], 32)
+        d = d[RNG.permutation(d.size)]
+        now = np.float64(base[16] + 1e-9)     # cuts inside a 1ns cluster
+        admitted = RNG.random(d.size) < 0.9
+        order, count = dom_release_pallas(
+            jnp.asarray(d), jnp.asarray(admitted), jnp.asarray(now),
+            interpret=True)
+        want_order, want_count = dom_release_ref_order(d, admitted, now)
+        k = int(count)
+        assert k == int(want_count)
+        np.testing.assert_array_equal(np.asarray(order[:k]),
+                                      np.asarray(want_order[:k]))
+        assert bool((np.asarray(order[k:]) == -1).all())
 
 
 def test_dom_release_released_are_sorted():
@@ -106,9 +130,10 @@ def _admit_oracle(deadlines, arrivals):
 
 @pytest.mark.parametrize("n,R", [(8, 1), (33, 3), (64, 2), (100, 3), (256, 5)])
 def test_dom_admit_kernel(n, R):
-    """Kernel admission == float64 watermark oracle on f32-exact grids
-    (values k/64: duplicate deadlines and arrival ties are compared
-    without rounding, so the integer aux tie-break must line up)."""
+    """Kernel admission == float64 watermark oracle with duplicate
+    deadlines and arrival ties (grid values k/64): the exact (hi, lo) key
+    encoding plus the integer aux tie-break must line up -- no rounding
+    happens anywhere."""
     d = RNG.integers(0, 4 * 64, n) / 64.0
     a = RNG.integers(0, 6 * 64, (n, R)) / 64.0
     a[RNG.random((n, R)) < 0.15] = np.inf
@@ -118,16 +143,39 @@ def test_dom_admit_kernel(n, R):
 
 
 def test_dom_admit_kernel_realistic_owd():
-    """A realistic OWD spread (distinct, well-separated event times)."""
+    """A realistic OWD spread, fed RAW as float64 -- no span shift, no
+    downcast: the kernel bitcasts the caller-precision times to exact
+    int32 key words, so absolute epoch-scale inputs are handled as-is."""
+    from jax.experimental import enable_x64
+
     n = 128
     send = np.sort(RNG.uniform(0, 5e-3, n)) + np.arange(n) * 1e-6
     d = send + 120e-6
     a = send[:, None] + RNG.lognormal(np.log(60e-6), 0.6, (n, 3))
     a[RNG.random((n, 3)) < 0.02] = np.inf
-    shift = send[0]
-    got = dom_admit_pallas(jnp.asarray(d - shift, jnp.float32),
-                           jnp.asarray((a - shift).T, jnp.float32),
-                           interpret=True)
+    with enable_x64():
+        got = dom_admit_pallas(jnp.asarray(d), jnp.asarray(a.T),
+                               interpret=True)
+    np.testing.assert_array_equal(np.asarray(got).T, _admit_oracle(d, a))
+
+
+def test_dom_admit_kernel_sub_f32_resolution_ties():
+    """Deadline/arrival gaps far below float32 resolution at the working
+    magnitude: a float32 downcast would collapse them (the old design's
+    documented tie window); the f64 (hi, lo) keys keep the exact order."""
+    from jax.experimental import enable_x64
+
+    base = np.sort(RNG.uniform(1.0, 5.0, 64))
+    d = np.repeat(base, 4) + np.tile([0.0, 1e-9, 2e-9, 3e-9], 64)
+    d = d[RNG.permutation(d.size)]
+    a = (d + RNG.uniform(-2e-9, 2e-9, d.size))[:, None] \
+        + np.array([0.0, 1e-9, 5e-9])
+    a[RNG.random(a.shape) < 0.1] = np.inf
+    # the scenario is meaningful: f32 cannot represent these separations
+    assert (np.float32(base[0]) == np.float32(base[0] + 1e-9))
+    with enable_x64():
+        got = dom_admit_pallas(jnp.asarray(d), jnp.asarray(a.T),
+                               interpret=True)
     np.testing.assert_array_equal(np.asarray(got).T, _admit_oracle(d, a))
 
 

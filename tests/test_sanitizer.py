@@ -4,10 +4,8 @@ Acceptance (ISSUE 6): sanitizer-wrapped numpy/jit runs of the leader-crash
 scenario pass every runtime invariant AND stay bit-for-bit identical to
 unwrapped runs. Plus: each invariant check fires on a hand-corrupted
 EpochState (a sanitizer that cannot fail checks nothing), the capped-leader
-exemption mirrors `_apply_deadline_cap`, the config/env enablement paths,
-and the Pallas f32 tie guard (warning + `f32_tie_risk_epochs` counting).
-"""
-import warnings
+exemption mirrors `_apply_deadline_cap`, and the config/env enablement
+paths."""
 from dataclasses import replace
 from types import SimpleNamespace
 
@@ -15,7 +13,7 @@ import numpy as np
 import pytest
 
 from repro.core import CommonConfig, make_cluster
-from repro.core.engine import DomEngine, EpochState, F32TieRiskWarning
+from repro.core.engine import EpochState
 from repro.core.sanitizer import SanitizerError, SanitizerTier
 from repro.sim.scenario import get_scenario, run_scenario_on_cluster
 from repro.sim.trace import CommitTrace
@@ -56,7 +54,6 @@ def test_sanitized_leader_crash_is_bit_for_bit_transparent(tier):
     for col, arr in tr_a.commits.items():
         np.testing.assert_array_equal(arr, tr_b.commits[col],
                                       err_msg=f"commits.{col}")
-    assert res_b.f32_tie_risk_epochs == 0   # f64 tier: caveat cannot fire
 
 
 def test_sanitize_enabled_via_config_and_env(monkeypatch):
@@ -192,44 +189,3 @@ def test_clock_fault_offsets_check_in_local_frame():
     s.release[0, 1] += 1e-3
     with pytest.raises(SanitizerError, match=r"release != max"):
         _check(s)
-
-
-# ---------------------------------------------------------------------------
-# the Pallas f32 tie guard (engine-level, tier-independent unit tests)
-# ---------------------------------------------------------------------------
-def _tie_engine():
-    return SimpleNamespace(f32_tie_risk_epochs=0)
-
-
-def test_f32_tie_guard_warns_on_sub_resolution_separation():
-    eng = _tie_engine()
-    # span 1.0s, minimum positive separation 1ns << span * 2^-23 (~119ns)
-    d = np.array([0.0, 0.5, 0.5 + 1e-9, 1.0])
-    with pytest.warns(F32TieRiskWarning, match="below the f32 tie"):
-        DomEngine._check_f32_tie_risk(eng, d)
-    assert eng.f32_tie_risk_epochs == 1
-
-
-def test_f32_tie_guard_ignores_exact_duplicates_and_wide_separation():
-    """Exact duplicates are SAFE (the kernels break them via the integer aux
-    key, like the f64 tiers) -- only sub-resolution near-ties count."""
-    eng = _tie_engine()
-    with warnings.catch_warnings():
-        warnings.simplefilter("error", F32TieRiskWarning)
-        DomEngine._check_f32_tie_risk(eng, np.array([0.0, 0.5, 0.5, 1.0]))
-        DomEngine._check_f32_tie_risk(eng, np.array([0.0, 0.001, 0.5, 1.0]))
-        DomEngine._check_f32_tie_risk(eng, np.array([np.inf, 1.0]))  # 1 finite
-        DomEngine._check_f32_tie_risk(eng, np.array([2.0, 2.0]))     # span 0
-    assert eng.f32_tie_risk_epochs == 0
-
-
-def test_f32_tie_guard_scales_with_span():
-    """The window is RELATIVE (span * 2^-23): the same 50us separation is
-    safe in a 10ms epoch but at risk across a 1000s span."""
-    eng = _tie_engine()
-    with warnings.catch_warnings():
-        warnings.simplefilter("error", F32TieRiskWarning)
-        DomEngine._check_f32_tie_risk(eng, np.array([0.0, 50e-6, 10e-3]))
-    with pytest.warns(F32TieRiskWarning):
-        DomEngine._check_f32_tie_risk(eng, np.array([0.0, 50e-6, 1000.0]))
-    assert eng.f32_tie_risk_epochs == 1
