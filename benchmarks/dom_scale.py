@@ -266,6 +266,78 @@ def _bench_epochs_per_dispatch(quick: bool) -> list[dict]:
     return rows
 
 
+def _bench_fault_family(quick: bool) -> list[dict]:
+    """Fused-epoch overhead of the adversarial pair-mask operands.
+
+    Runs the identical epoch batch through `DomEngine.run_epoch` twice per
+    N: unmasked (fault-free -- pair state is None, the fused program takes
+    no pair operands) and masked (a gray fault on every proxy<->replica
+    pair -- the fused program gains the [N, R] `pair_drop`/`pair_delay`
+    epoch-boundary operands, plus the host-side per-epoch mask sampling
+    that feeds them).  The ratio is the whole-family cost: operand
+    transfer + the two fused-program edits + host mask draws.
+    """
+    from repro.core.engine import PENDING_DTYPE, DomEngine
+    from repro.core.vectorized_cluster import VectorizedConfig
+    from repro.sim.network import CloudNetwork
+
+    Ns = [10_000, 100_000]
+    reps = 2 if quick else 4
+    rows = []
+    for n in Ns:
+        cfg = VectorizedConfig(f=1, n_clients=64, seed=0)
+        rng = np.random.default_rng(0)
+        due = np.zeros(n, PENDING_DTYPE)
+        due["t"] = np.sort(rng.uniform(0, n / 2e5, n))
+        due["t0"] = due["t"]
+        due["cid"] = rng.integers(0, cfg.n_clients, n)
+        due["rid"] = np.arange(n)
+        due["kcls"] = rng.integers(0, 1000, n)
+        alive = np.ones(3, bool)
+        walls = {}
+        for masked in (False, True):
+            net = CloudNetwork(3 + cfg.n_proxies + cfg.n_clients, cfg.net,
+                               seed=0)
+            eng = DomEngine(cfg, net, 3, tier="jit", track_logs=False)
+            if masked:
+                eng.set_gray(range(cfg.n_proxies), range(3),
+                             delay_mu=100e-6, delay_sigma=20e-6,
+                             drop_prob=0.01)
+            wall = _time_call(
+                lambda eng=eng: eng.run_epoch(due.copy(), alive, leader=0),
+                reps)
+            walls[masked] = wall
+            rows.append({"kind": "fault_family_epoch", "tier": "jit", "n": n,
+                         "masked": masked, "requests_per_sec": n / wall,
+                         "wall_s": wall})
+            print(f"  epoch jit {'masked  ' if masked else 'unmasked'} "
+                  f"N={n:>9,d} {n / wall:>12,.0f} req/s")
+        overhead = walls[True] / walls[False]
+        rows.append({"kind": "fault_family_overhead", "tier": "jit", "n": n,
+                     "overhead_x": overhead})
+        print(f"  pair-mask overhead   N={n:>9,d} {overhead:.2f}x")
+    return rows
+
+
+def fault_family(quick: bool = True) -> list[dict]:
+    rows = _bench_fault_family(quick)
+    os.makedirs("results", exist_ok=True)
+    out = {
+        "benchmark": "adversarial_fault_family",
+        "quick": quick,
+        "note": ("masked = gray fault on every proxy<->replica pair: the "
+                 "fused epoch program gains [N, R] pair_drop/pair_delay "
+                 "operands and the host samples the per-pair masks each "
+                 "epoch; unmasked = identical batch, fault-free path "
+                 "(pair state released to None, no extra operands)"),
+        "rows": rows,
+    }
+    with open("results/BENCH_adversarial.json", "w") as f:
+        json.dump(out, f, indent=1)
+    print("  -> results/BENCH_adversarial.json")
+    return rows
+
+
 def device_resident(quick: bool = True) -> list[dict]:
     rows = _bench_epochs_per_dispatch(quick)
     os.makedirs("results", exist_ok=True)
@@ -314,8 +386,14 @@ if __name__ == "__main__":
                     help="run the K-epochs-per-dispatch sweep "
                          "(K in {1,4,16,64}, writes "
                          "results/BENCH_device_resident.json)")
+    ap.add_argument("--fault-family", action="store_true",
+                    help="measure fused-epoch overhead of the adversarial "
+                         "pair-mask operands (masked vs unmasked, writes "
+                         "results/BENCH_adversarial.json)")
     args = ap.parse_args()
-    if args.epochs_per_dispatch:
+    if args.fault_family:
+        fault_family(quick=args.quick)
+    elif args.epochs_per_dispatch:
         device_resident(quick=args.quick)
     else:
         dom_scale(quick=args.quick)

@@ -1,0 +1,41 @@
+"""Ad-hoc adversarial-scenario matrix runner (used during PR 8 bring-up).
+
+Usage: PYTHONPATH=src python scripts/_adv_matrix.py <backend> [scenario ...]
+backend: event | numpy | jit
+"""
+import sys
+
+from repro.sim.scenario import ADVERSARIAL_SCENARIOS, get_scenario
+from repro.sim.trace import (ADVERSARIAL_CHECKS, check_adversarial,
+                             run_scenario_with_trace)
+
+backend = sys.argv[1]
+names = set(sys.argv[2:])
+fails = []
+for name in ADVERSARIAL_SCENARIOS:
+    if names and name not in names:
+        continue
+    sc = get_scenario(name)
+    if backend == "event":
+        proto, kw = "nezha", {}
+    elif backend == "numpy":
+        proto, kw = "nezha-vectorized", {}
+    else:
+        proto, kw = "nezha-vectorized", dict(tier="jit")
+    inv = sc.invariant
+    check = ADVERSARIAL_CHECKS[inv]
+    _, tr_f = run_scenario_with_trace(proto, sc, **kw)
+    _, tr_c = run_scenario_with_trace(proto, sc.control(), **kw)
+    faulty = check(tr_f)
+    control = check(tr_c)
+    iv_all = check_adversarial(tr_f)
+    ok = bool(faulty) and not control and not check_adversarial(tr_c)
+    tag = "OK" if ok else "FAIL"
+    print(f"{tag} {sc.name:28s} [{inv}] faulty={len(faulty)} "
+          f"control={len(control)} iv={len(iv_all)}", flush=True)
+    for m in faulty[:3]:
+        print(f"    + {m}", flush=True)
+    if not ok:
+        fails.append(sc.name)
+print("FAILURES" if fails else "ALL OK")
+sys.exit(1 if fails else 0)

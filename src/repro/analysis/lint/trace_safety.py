@@ -91,7 +91,7 @@ def callback_prims(jaxpr) -> list[str]:
 # tracing the real programs
 # ---------------------------------------------------------------------------
 def _fused_step_args(n: int, r: int, *, dies_at=False, clock=False,
-                     window: int = 16) -> dict:
+                     pair=False, window: int = 16) -> dict:
     rng = np.random.default_rng(0)
     kw = dict(
         pool=np.full(window * r, np.inf),
@@ -118,6 +118,9 @@ def _fused_step_args(n: int, r: int, *, dies_at=False, clock=False,
     if clock:
         kw["stamp_off"] = np.zeros(n)
         kw["arr_off"] = np.zeros((n, r))
+    if pair:
+        kw["pair_drop"] = np.zeros((n, r), bool)
+        kw["pair_delay"] = np.zeros((n, r))
     return kw
 
 
@@ -184,6 +187,8 @@ def check_fused_step(f: int = 1, n: int = 8) -> list[Finding]:
         (True, True, {}),
         (False, False, dict(dies_at=True)),
         (False, False, dict(clock=True)),
+        (False, False, dict(pair=True)),
+        (False, False, dict(pair=True, clock=True, dies_at=True)),
     ]
     for use_kcls, use_cap, fault in variants:
         label = (f"_build_fused_step(use_kcls={use_kcls}, "
@@ -290,7 +295,16 @@ def check_compile_stability(scenarios: Iterable = None) -> list[Finding]:
             b *= 2
         use_kcls = bool(sc.overrides.get("commutative", False))
         use_cap = float(sc.overrides.get("deadline_cap", 0.0) or 0.0) > 0.0
-        spec_keys.add((sc.f, use_kcls, use_cap))
+        # pair-mask operands (partition/gray faults) are an optional-operand
+        # specialization of the fused step: scenarios that can reach them
+        # compile BOTH the masked and unmasked variants (fault-free
+        # stretches release the pair state and return to the bare program)
+        from repro.sim.scenario import NET_FAULT_KINDS
+        has_pair = any(getattr(ev, "kind", None) in NET_FAULT_KINDS
+                       for ev in sc.faults)
+        spec_keys.add((sc.f, use_kcls, use_cap, False))
+        if has_pair:
+            spec_keys.add((sc.f, use_kcls, use_cap, True))
         epd = int(sc.overrides.get("epochs_per_dispatch", 1) or 1)
         k_buckets.update(k for k in SCAN_K_BUCKETS if k <= epd)
     worst = len(buckets) * len(spec_keys) * len(k_buckets)

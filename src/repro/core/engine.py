@@ -597,14 +597,24 @@ def _build_epoch_body(tier: ComputeTier, f: int, use_kcls: bool,
 
     def body(pool, ptr, cnt, t, c2p, owd_pr, drop_pr, reply_owd, alive,
              kcls, leader, n_valid, pq01, margin, clamp_d, batch_delay, cap,
-             floor, dies_at=None, stamp_off=None, arr_off=None):
+             floor, dies_at=None, stamp_off=None, arr_off=None,
+             pair_drop=None, pair_delay=None):
         N, R = owd_pr.shape
+        # Per-pair network-fault operands (Partition / GrayLink): extra
+        # delay joins the effective OWD BEFORE anything observes it -- the
+        # proxies' estimator pool sees the gray-degraded path exactly like
+        # the event backend's sliding window does -- and per-pair drops
+        # extend the fabric's own drop mask. Optional operands like dies_at:
+        # fault-free epochs carry neither, and faulted stretches fall off
+        # the K-scan fast path (the scan variant never carries them).
+        owd_eff = owd_pr if pair_delay is None else owd_pr + pair_delay
+        drop_eff = drop_pr if pair_drop is None else drop_pr | pair_drop
         # --- bound: device-resident sliding-percentile deadline bound ------
         # Fold BEFORE selecting, mirroring StampStage's update_bound call
         # (this epoch's samples are part of its own bound).
-        obs = owd_pr
+        obs = owd_eff
         if stamp_off is not None:
-            obs = owd_pr + arr_off - stamp_off[:, None]
+            obs = owd_eff + arr_off - stamp_off[:, None]
         pool, ptr, cnt = pool_fold(pool, ptr, cnt, obs, n_valid)
         bound = pool_percentile(pool, cnt, pq01, margin, clamp_d)
         # --- fetch: device-resident mean-reply estimate --------------------
@@ -620,8 +630,8 @@ def _build_epoch_body(tier: ComputeTier, f: int, use_kcls: bool,
         deadlines = stamp + bound
         if stamp_off is not None:
             deadlines = deadlines + stamp_off
-        arrivals = jnp.where(drop_pr | ~alive[None, :], jnp.inf,
-                             stamp[:, None] + owd_pr)
+        arrivals = jnp.where(drop_eff | ~alive[None, :], jnp.inf,
+                             stamp[:, None] + owd_eff)
         # recovery stall: nothing releases before `floor` (StartView); a zero
         # floor is the identity, mirroring StampStage's op order exactly
         arrivals = jnp.maximum(arrivals, floor)
@@ -718,12 +728,14 @@ def _build_fused_step(tier: ComputeTier, f: int, use_kcls: bool,
     @jax.jit
     def step(pool, ptr, cnt, t, c2p, owd_pr, drop_pr, reply_owd, alive,
              kcls, leader, n_valid, pq01, margin, clamp_d, batch_delay, cap,
-             floor, dies_at=None, stamp_off=None, arr_off=None):
+             floor, dies_at=None, stamp_off=None, arr_off=None,
+             pair_drop=None, pair_delay=None):
         carry, outs = body(pool, ptr, cnt, t, c2p, owd_pr, drop_pr,
                            reply_owd, alive, kcls, leader, n_valid, pq01,
                            margin, clamp_d, batch_delay, cap, floor,
                            dies_at=dies_at, stamp_off=stamp_off,
-                           arr_off=arr_off)
+                           arr_off=arr_off, pair_drop=pair_drop,
+                           pair_delay=pair_delay)
         return outs + carry
 
     return step
@@ -802,6 +814,13 @@ class EpochState:
     # comparison and release instant at that receiver.
     clock_stamp_off: Optional[np.ndarray] = None  # [N] proxy-clock read error
     clock_arr_off: Optional[np.ndarray] = None    # [N, R] replica-clock read error
+    # Per-pair network-fault operands (Partition / GrayLink events; None =
+    # clean): extra proxy->replica drops and path delay for this epoch's
+    # (message, replica) pairs, gathered from the engine's per-(proxy,
+    # replica) fault state by SampleStage. The reverse (replica->proxy)
+    # effects are folded into reply_owd directly -- pure data, no operand.
+    pair_drop: Optional[np.ndarray] = None    # [N, R] extra drops (bool)
+    pair_delay: Optional[np.ndarray] = None   # [N, R] extra path delay (s)
     # StampStage
     bound: float = 0.0                  # DOM latency bound this epoch
     stamp: Optional[np.ndarray] = None  # [N] proxy stamp times
@@ -875,6 +894,53 @@ class SampleStage(Stage):
             s.clock_arr_off = eng.rng.normal(
                 eng.replica_clock[None, :, 0], eng.replica_clock[None, :, 1],
                 size=(N, n))
+        if eng.pairs_faulty:
+            # Per-pair faults (Partition / GrayLink): gather this epoch's
+            # (message, replica) fault rows from the per-(proxy, replica)
+            # state. Gray draws come from the engine's fault rng stream
+            # (like clock faults) in ONE fixed order -- forward drop,
+            # forward delay, reverse drop, reverse delay -- so every tier
+            # consumes identical variates and fault-free runs draw nothing.
+            pids = np.asarray(s.cid) % cfg.n_proxies
+            blk = eng._pair_block[pids]                 # [N, R]
+            gdp = eng._pair_gray_drop[pids]
+            gmu = eng._pair_mu[pids]
+            gsg = eng._pair_sigma[pids]
+            delayed = (gmu > 0.0) | (gsg > 0.0)
+            pair_drop = blk.copy()
+            if gdp.any():
+                pair_drop |= eng.rng.random((N, n)) < gdp
+            s.pair_drop = pair_drop
+            delay = np.zeros((N, n))
+            if delayed.any():
+                delay = np.where(
+                    delayed, np.maximum(0.0, eng.rng.normal(gmu, gsg)), 0.0)
+            s.pair_delay = delay
+            # Reverse leg (replica->proxy replies): fold the same per-pair
+            # faults into reply_owd before it becomes a fused operand --
+            # blocked/dropped replies never arrive, gray delay adds on.
+            reply = s.reply_owd.copy()
+            if delayed.any():
+                reply = reply + np.where(
+                    delayed, np.maximum(0.0, eng.rng.normal(gmu, gsg)), 0.0)
+            rdrop = blk.copy()
+            if gdp.any():
+                rdrop |= eng.rng.random((N, n)) < gdp
+            reply[rdrop] = np.inf
+            s.reply_owd = reply
+        if eng.stampers_biased:
+            # SkewedStamper: a deterministic stamp bias is exactly a proxy
+            # clock-read offset -- the carried deadline VALUE shifts while
+            # true send/arrival instants do not, and the receiver-measured
+            # OWD observations absorb -bias. Reuses the clock stamp_off /
+            # arr_off operand variant (no new fused specialization).
+            pids = np.asarray(s.cid) % cfg.n_proxies
+            bias = eng.proxy_stamp_bias[pids]
+            if s.clock_stamp_off is None:
+                s.clock_stamp_off = bias
+                s.clock_arr_off = np.zeros((N, n))
+            else:
+                s.clock_stamp_off = s.clock_stamp_off + bias
 
 
 class StampStage(Stage):
@@ -898,8 +964,15 @@ class StampStage(Stage):
             # The proxy stamps with its LOCAL clock: the deadline value each
             # message carries absorbs the proxy's read error.
             s.deadlines = s.deadlines + s.clock_stamp_off
-        arrivals = s.stamp[:, None] + s.owd_pr
+        # owd_eff mirrors the fused body: pair_delay (GrayLink) joins the
+        # path BEFORE the stamp adds on, keeping the summation order -- and
+        # hence the bits -- identical to `stamp[:, None] + owd_eff` there.
+        owd_eff = (s.owd_pr if s.pair_delay is None
+                   else s.owd_pr + s.pair_delay)
+        arrivals = s.stamp[:, None] + owd_eff
         arrivals[s.drop_pr] = np.inf
+        if s.pair_drop is not None:         # Partition / GrayLink drops
+            arrivals[s.pair_drop] = np.inf
         arrivals[:, ~s.alive] = np.inf      # crashed replicas never receive
         # Recovery stall (view change): messages arriving while replicas are
         # in VIEWCHANGE wait in the early buffers and release together -- in
@@ -1009,6 +1082,15 @@ class FusedEpochStage(Stage):
             arr_off[:N] = s.clock_arr_off
             fault_kw["stamp_off"] = stamp_off
             fault_kw["arr_off"] = arr_off
+        if s.pair_drop is not None:
+            # pair-fault operands (Partition / GrayLink): pad lanes stay
+            # clean -- their +inf attempt times hide them regardless
+            pair_drop = np.zeros((n_pad, R), dtype=bool)
+            pair_drop[:N] = s.pair_drop
+            pair_delay = np.zeros((n_pad, R))
+            pair_delay[:N] = s.pair_delay
+            fault_kw["pair_drop"] = pair_drop
+            fault_kw["pair_delay"] = pair_delay
         cap = float(getattr(cfg, "deadline_cap", 0.0) or 0.0)
         step = eng.tier.epoch_step(cfg.f, use_kcls=s.kcls is not None,
                                    use_cap=cap > 0.0)
@@ -1110,7 +1192,9 @@ class LogStage(Stage):
             return
         if s.exec_order is None:        # fused tiers: order stays on-device
             s.exec_order = eng.tier.deadline_order(s.deadlines)
-        eng.logs.observe_epoch(s)
+        eng.logs.observe_epoch(
+            s, reachable=(~eng.unreachable if eng.unreachable.any()
+                          else None))
 
 
 DEFAULT_STAGES = (SampleStage, StampStage, DomStage, CommitStage, DeliverStage,
@@ -1182,9 +1266,19 @@ class ReplicaLogState:
         # commit must not re-enter the log
         self._replay_uids = np.empty(0, np.int64)
         self._batch = 0
+        # LossyAcker (Byzantine-leaning) durability model: a lossy replica
+        # keeps ACKING normally -- its sync_point advances and quorums count
+        # it -- but its durable persistence freezes at `persist_point`. A
+        # crash exposes the gap: the acked-but-unpersisted suffix becomes a
+        # durability event and a hole in that replica's durable-log view.
+        self.lossy = np.zeros(n_replicas, bool)
+        self.persist_point = np.zeros(n_replicas, np.int64)
+        self.durability_events: list[dict] = []
+        self._holes: dict[int, list[tuple[int, int]]] = {}
 
     # -- log append (per epoch batch) ---------------------------------------
-    def observe_epoch(self, s: "EpochState") -> None:
+    def observe_epoch(self, s: "EpochState",
+                      reachable: Optional[np.ndarray] = None) -> None:
         batch = self._batch
         self._batch += 1
         committed = np.asarray(s.committed, bool)
@@ -1210,8 +1304,14 @@ class ReplicaLogState:
             if undelivered.any():
                 self._replay_uids = np.concatenate(
                     [self._replay_uids, uids[undelivered]])
-        self.sync_point[s.alive] = self.synced_len
-        self.last_normal_view[s.alive] = self.view
+        # Partitioned-away (unreachable) replicas receive no log
+        # modifications: their sync/persist points freeze for the window,
+        # which is exactly the asymmetry check_partition_liveness measures.
+        sync = (np.asarray(s.alive, bool) if reachable is None
+                else np.asarray(s.alive, bool) & reachable)
+        self.sync_point[sync] = self.synced_len
+        self.last_normal_view[sync] = self.view
+        self.persist_point[sync & ~self.lossy] = self.synced_len
         # speculative tails: uncommitted entries some live replica admitted.
         # A failed RETRY of an already-durable uid (committed earlier, reply
         # lost) must NOT re-enter them -- the entry is in the synced log and
@@ -1269,11 +1369,33 @@ class ReplicaLogState:
                 pack_uids(self.spec_cid, self.spec_rid), gone))
 
     # -- fault hooks ---------------------------------------------------------
+    def set_lossy(self, rid: int) -> None:
+        """LossyAcker: from now on replica ``rid`` acks without persisting
+        -- its persist point freezes where it stands."""
+        self.lossy[rid] = True
+        self.persist_point[rid] = self.sync_point[rid]
+
     def on_crash(self, rid: int) -> None:
         """Diskless crash: the replica's in-memory log state is gone."""
+        if self.lossy[rid]:
+            # The crash exposes the LossyAcker lie: everything it acked
+            # past its frozen persist point was never durable. Record the
+            # event (check_durability's evidence) and the hole range its
+            # durable-log view excises (check_split_brain's evidence).
+            acked = int(self.sync_point[rid])
+            persisted = int(self.persist_point[rid])
+            if acked > persisted:
+                cols = self.log_columns()
+                uids = pack_uids(cols["cid"][persisted:acked],
+                                 cols["rid"][persisted:acked])
+                self.durability_events.append({
+                    "replica": rid, "acked": acked, "persisted": persisted,
+                    "missing": acked - persisted, "uids": uids})
+                self._holes.setdefault(rid, []).append((persisted, acked))
         if self.spec_admitted.size:
             self.spec_admitted[:, rid] = False
         self.sync_point[rid] = 0
+        self.persist_point[rid] = 0
         self.last_normal_view[rid] = -1     # RECOVERING until a live epoch
 
     # -- the view change itself ----------------------------------------------
@@ -1315,6 +1437,7 @@ class ReplicaLogState:
         self.view = new_view
         self.sync_point[alive] = self.synced_len
         self.last_normal_view[alive] = new_view
+        self.persist_point[alive & ~self.lossy] = self.synced_len
         self.spec_deadline = np.empty(0)
         self.spec_cid = np.empty(0, np.int64)
         self.spec_rid = np.empty(0, np.int64)
@@ -1330,6 +1453,28 @@ class ReplicaLogState:
                       recovered=bool)
         return {c: (np.concatenate(ch) if ch else np.empty(0, dtypes[c]))
                 for c, ch in self._chunks.items()}
+
+    @property
+    def has_holes(self) -> bool:
+        return bool(self._holes)
+
+    def replica_log_columns(self) -> dict[int, dict[str, np.ndarray]]:
+        """Per-replica durable-log views: the shared synced log minus each
+        replica's recorded durability holes. Identical views everywhere in
+        honest runs; a LossyAcker's excised hole shifts its suffix, which is
+        the positional divergence check_split_brain detects."""
+        full = self.log_columns()
+        out: dict[int, dict[str, np.ndarray]] = {}
+        for r in range(self.n):
+            holes = self._holes.get(r)
+            if not holes:
+                out[r] = full
+                continue
+            keep = np.ones(self.synced_len, bool)
+            for lo, hi in holes:
+                keep[lo:hi] = False
+            out[r] = {c: v[keep] for c, v in full.items()}
+        return out
 
 
 class DomEngine:
@@ -1370,6 +1515,20 @@ class DomEngine:
         self.replica_clock = np.zeros((n_replicas, 2))
         self.proxy_clock = np.zeros((getattr(cfg, "n_proxies", 1), 2))
         self.rng = np.random.default_rng(getattr(cfg, "seed", 0) + 0xC10C)
+        # Per-pair network-fault state (Partition / GrayLink scenario
+        # events), [P, R] over (proxy, replica) pairs and lazily allocated:
+        # None means no pair fault has ever been active, so SampleStage
+        # draws exactly the variates it drew before the adversarial family
+        # existed. `unreachable` marks the partition minority: frozen
+        # sync/persist points, non-viable leaders (the cluster consults it).
+        self._pair_block: Optional[np.ndarray] = None       # [P, R] bool
+        self._pair_gray_drop: Optional[np.ndarray] = None   # [P, R] drop prob
+        self._pair_mu: Optional[np.ndarray] = None          # [P, R] delay mean
+        self._pair_sigma: Optional[np.ndarray] = None       # [P, R] delay sigma
+        self.unreachable = np.zeros(n_replicas, bool)
+        # SkewedStamper (Byzantine-leaning): per-proxy deterministic stamp
+        # bias, folded into the clock stamp_off operand by SampleStage.
+        self.proxy_stamp_bias = np.zeros(getattr(cfg, "n_proxies", 1))
 
     # -- clock faults (Appendix D) -------------------------------------------
     @property
@@ -1392,15 +1551,98 @@ class DomEngine:
         else:
             raise ValueError(f"unknown clock role {role!r}")
 
+    # -- per-pair network faults (Partition / GrayLink / SkewedStamper) ------
+    @property
+    def pairs_faulty(self) -> bool:
+        """Any pair-fault state allocated: epochs carry pair operands and
+        fall off the K-scan fast path (mirrors `clocks_faulty`)."""
+        return self._pair_block is not None
+
+    @property
+    def gray_active(self) -> bool:
+        return self._pair_gray_drop is not None and bool(
+            self._pair_gray_drop.any() or self._pair_mu.any()
+            or self._pair_sigma.any())
+
+    @property
+    def stampers_biased(self) -> bool:
+        return bool(self.proxy_stamp_bias.any())
+
+    def _ensure_pair_state(self) -> None:
+        if self._pair_block is None:
+            P = len(self.proxy_stamp_bias)
+            self._pair_block = np.zeros((P, self.n), bool)
+            self._pair_gray_drop = np.zeros((P, self.n))
+            self._pair_mu = np.zeros((P, self.n))
+            self._pair_sigma = np.zeros((P, self.n))
+
+    def _maybe_release_pair_state(self) -> None:
+        # Drop back to None once every pair fault has cleared: later epochs
+        # return to the exact fault-free draw sequence AND the scan path.
+        if self._pair_block is not None and not (
+                self._pair_block.any() or self._pair_gray_drop.any()
+                or self._pair_mu.any() or self._pair_sigma.any()):
+            self._pair_block = None
+            self._pair_gray_drop = None
+            self._pair_mu = None
+            self._pair_sigma = None
+
+    def set_partition(self, minority) -> None:
+        """Cut the minority replicas off: no proxy reaches them, their
+        replies never arrive, and their sync/persist points freeze (the
+        cluster additionally rules them out as viable leaders)."""
+        self._ensure_pair_state()
+        minority = np.asarray(list(minority), np.int64)
+        self.unreachable[:] = False
+        self.unreachable[minority] = True
+        self._pair_block[:, :] = False
+        self._pair_block[:, minority] = True
+
+    def clear_partition(self) -> None:
+        self.unreachable[:] = False
+        if self._pair_block is not None:
+            self._pair_block[:, :] = False
+            self._maybe_release_pair_state()
+
+    def set_gray(self, proxy_ids, replica_ids, delay_mu: float,
+                 delay_sigma: float, drop_prob: float) -> None:
+        """Install a gray failure on the given (proxy, replica) pairs, both
+        directions: extra N(mu, sigma)+ path delay and/or extra drops."""
+        self._ensure_pair_state()
+        ix = np.ix_(np.asarray(list(proxy_ids), np.int64),
+                    np.asarray(list(replica_ids), np.int64))
+        self._pair_mu[ix] = delay_mu
+        self._pair_sigma[ix] = delay_sigma
+        self._pair_gray_drop[ix] = drop_prob
+
+    def clear_gray(self, proxy_ids, replica_ids) -> None:
+        if self._pair_block is None:
+            return
+        ix = np.ix_(np.asarray(list(proxy_ids), np.int64),
+                    np.asarray(list(replica_ids), np.int64))
+        self._pair_mu[ix] = 0.0
+        self._pair_sigma[ix] = 0.0
+        self._pair_gray_drop[ix] = 0.0
+        self._maybe_release_pair_state()
+
+    def set_stamp_bias(self, proxy_id: int, bias: float) -> None:
+        """SkewedStamper: proxy ``proxy_id`` stamps deadlines shifted by
+        ``bias`` seconds (0 restores honesty). Indices wrap like
+        `set_clock_fault` proxy slots do."""
+        self.proxy_stamp_bias[proxy_id % len(self.proxy_stamp_bias)] = bias
+
     def observed_owd_samples(self, s: "EpochState") -> np.ndarray:
         """The OWD samples the proxies' estimators would OBSERVE: recv local
         read minus send local read, i.e. true OWD perturbed by both ends'
         clock errors. Faulty clocks poison the DOM bound pool exactly as the
         event backend's sliding-window estimator is poisoned (negative /
-        inflated estimates fall back to the clamp, S4)."""
+        inflated estimates fall back to the clamp, S4). Per-pair gray delay
+        (GrayLink) joins the observed path first, for the same reason: a
+        slow-but-alive link inflates the bound the proxies stamp with."""
+        owd = s.owd_pr if s.pair_delay is None else s.owd_pr + s.pair_delay
         if s.clock_arr_off is None and s.clock_stamp_off is None:
-            return s.owd_pr
-        return s.owd_pr + s.clock_arr_off - s.clock_stamp_off[:, None]
+            return owd
+        return owd + s.clock_arr_off - s.clock_stamp_off[:, None]
 
     def device_pool_state(self) -> tuple[np.ndarray, np.int64, np.int64]:
         """(pool, ptr, cnt) ring-buffer operands mirroring `owd_pool`.
@@ -1497,7 +1739,8 @@ class DomEngine:
         """
         from jax.experimental import enable_x64
 
-        if not self.tier.fused or self.clocks_faulty:
+        if not self.tier.fused or self.clocks_faulty or self.pairs_faulty \
+                or self.stampers_biased:
             return [self.run_epoch(d, alive, leader, release_floor)
                     if d.size else None for d in dues]
         sample = next((st for st in self.stages

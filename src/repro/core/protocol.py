@@ -87,6 +87,12 @@ class NezhaCluster(EventCluster):
         self.clocks = [Clock(i, cfg.clock, seed=cfg.seed) for i in range(total_nodes)]
         self.sync = SyncService(self.clocks[: self.n + cfg.n_proxies], self.scheduler, cfg.clock)
 
+        # Adversarial-fault audit sinks (PR 8): proxies append per-request
+        # deadline-offset samples, lossy replicas record crash-time durability
+        # holes; repro.sim.trace reads both when building a CommitTrace.
+        self._stamp_audit: list[tuple[int, float]] = []
+        self._durability_events: list[dict] = []
+
         self.replicas = [Replica(i, cfg.f, self, cfg.replica, sm_factory) for i in range(self.n)]
         self.proxies = [Proxy(p, cfg.f, self, cfg.dom) for p in range(cfg.n_proxies)]
         proxy_ids = list(range(cfg.n_proxies))
@@ -305,6 +311,11 @@ class NezhaCluster(EventCluster):
                                   for r in self.replicas),
             dropped_speculative=sum(r.stats["dropped_speculative"]
                                     for r in self.replicas),
+            # Event backend has no epochs; fault exposure counts windows.
+            partition_epochs=sum(1 for w in self.net_windows()
+                                 if w["kind"] == "partition"),
+            gray_link_epochs=sum(1 for w in self.net_windows()
+                                 if w["kind"] == "gray"),
         )
 
 

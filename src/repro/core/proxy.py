@@ -27,6 +27,8 @@ class Proxy:
         self.dom = DomSender(self.n, dom_params)
         self.trackers: dict[tuple[int, int], QuorumTracker] = {}
         self.origin: dict[tuple[int, int], int] = {}   # uid -> client node
+        self.stamp_bias = 0.0   # SkewedStamper fault: deterministic shift
+        #   added to every stamp (and therefore deadline) this proxy issues.
         self.stats = {"multicasts": 0, "replies_in": 0, "committed": 0,
                       "fast_committed": 0}
 
@@ -38,9 +40,16 @@ class Proxy:
     def submit(self, client_id: int, request_id: int, command, op, keys) -> None:
         now_local = self.clock.read_monotonic(self.cluster.scheduler.now)
         s, l = self.dom.stamp(now_local)
+        if self.stamp_bias:
+            s += self.stamp_bias     # SkewedStamper: the carried stamp lies
         req = Request(client_id=client_id, request_id=request_id, command=command,
                       send_time=s, latency_bound=l, deadline=s + l,
                       proxy_id=self.id, op=op, keys=tuple(keys))
+        audit = getattr(self.cluster, "_stamp_audit", None)
+        if audit is not None:
+            # deadline minus the honest local send-time read: the per-proxy
+            # deadline-offset sample `check_stamp_bias` aggregates.
+            audit.append((self.id, req.deadline - now_local))
         uid = req.uid
         self.origin[uid] = client_id
         if uid not in self.trackers or self.trackers[uid].committed:

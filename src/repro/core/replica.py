@@ -175,6 +175,16 @@ class Replica:
         # Failure-detector / timers.
         self.last_leader_msg = 0.0
         self.alive = True
+
+        # LossyAcker fault model (scenario): a lossy replica keeps acking
+        # without durably persisting, so its durable prefix freezes at
+        # `_persist_mark`. A later crash snapshots the truncated log; the
+        # relaunch then restarts *divergent* -- trusting that truncated log
+        # in its stale view instead of running Alg 3 recovery.
+        self.lossy = False
+        self.divergent = False
+        self._persist_mark = 0
+        self._lossy_snapshot: Optional[dict] = None
         self._mod_batch: list[LogModification] = []
         self._pump_scheduled_for = math.inf
         self._vc_replies: dict[int, ViewChange] = {}
@@ -631,12 +641,42 @@ class Replica:
     # ==========================================================================
     # Failure handling
     # ==========================================================================
+    def set_lossy(self) -> None:
+        """LossyAcker fault (scenario): from now on this replica acks
+        without persisting -- its durable prefix freezes at today's length."""
+        if not self.lossy:
+            self.lossy = True
+            self._persist_mark = len(self.synced)
+
     def crash(self) -> None:
         self.alive = False
+        if self.lossy:
+            acked = len(self.synced)
+            gap = self.synced[self._persist_mark:]
+            if gap:
+                sink = getattr(self.cluster, "_durability_events", None)
+                if sink is not None:
+                    sink.append({
+                        "replica": self.id, "acked": acked,
+                        "persisted": self._persist_mark, "missing": len(gap),
+                        "uids": rec.pack_uids(
+                            np.asarray([e.client_id for e in gap], np.int64),
+                            np.asarray([e.request_id for e in gap], np.int64)),
+                    })
+            # What the disk actually holds: the frozen prefix + stale view.
+            self._lossy_snapshot = {
+                "view_id": self.view_id,
+                "last_normal_view": self.last_normal_view,
+                "crash_vector": self.crash_vector,
+                "synced": list(self.synced[: self._persist_mark]),
+            }
 
     def relaunch(self) -> None:
         """Process restart on the same server: stable storage holds only
         replica-id (S7). Everything else is recovered from peers (Alg 3)."""
+        if self._lossy_snapshot is not None:
+            self._relaunch_divergent()
+            return
         self.alive = True
         self.status = Status.RECOVERING
         self.synced, self.unsynced = [], {}
@@ -653,6 +693,37 @@ class Replica:
         self._recovery_state = {"phase": "cv", "nonce": uuid.uuid4().hex, "cv_reps": {},
                                 "rec_reps": {}}
         self._broadcast_cv_req()
+        self.start()
+
+    def _relaunch_divergent(self) -> None:
+        """Byzantine-leaning restart (LossyAcker): the replica trusts its
+        truncated 'durable' log, skips Alg 3 entirely, and resumes NORMAL
+        in its stale view. If that stale view still elects it leader it
+        will happily append new entries on top of the truncated prefix --
+        producing a durable log that positionally conflicts with the honest
+        majority's (the split-brain evidence `check_split_brain` hunts)."""
+        snap = self._lossy_snapshot
+        self.alive = True
+        self.status = Status.NORMAL
+        self.divergent = True
+        self.view_id = snap["view_id"]
+        self.last_normal_view = snap["last_normal_view"]
+        self.crash_vector = snap["crash_vector"]
+        self.synced = list(snap["synced"])
+        self.unsynced = {}
+        self._synced_set = {e.uid for e in self.synced}
+        self.pending_mods, self.fetching = {}, set()
+        self.replied, self.results = {}, {}
+        self.sm = self.sm_factory()
+        self.executed_point = 0
+        self.commit_point = 0
+        self.ghash = IncrementalHash(self.crash_vector)
+        self.khash = PerKeyHashTable()
+        for e in self.synced:
+            self._hash_add(e)
+        self.dom = DomReceiver(self.p.dom, commutative=self.p.commutative,
+                               on_release=self._on_release)
+        self._recovery_state = None
         self.start()
 
     def _broadcast_cv_req(self) -> None:
@@ -779,6 +850,8 @@ class Replica:
     def _initiate_view_change(self, v: int) -> None:
         if self.status == Status.RECOVERING:
             return
+        if self.divergent:
+            return  # stale-view denial: a divergent replica never catches up
         if v <= self.view_id and self.status != Status.NORMAL:
             return
         if v <= self.view_id and self.status == Status.NORMAL:
@@ -870,7 +943,7 @@ class Replica:
                                                         log=list(new_log)))
 
     def _on_start_view(self, msg: StartView) -> None:
-        if self.status == Status.RECOVERING:
+        if self.status == Status.RECOVERING or self.divergent:
             return
         if not rec.check_crash_vector(self.crash_vector, msg.replica_id, msg.crash_vector):
             return

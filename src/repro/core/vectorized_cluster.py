@@ -147,7 +147,22 @@ class VectorizedNezhaCluster(Cluster):
         #   ("alive", rid, alive_after)            crash/relaunch
         #   ("clock", role, idx, mu, sigma)        clock fault/clear
         #   ("net", NetworkParams)                 network-regime shift
+        #   ("partition", minority_rids)           Partition (cut minority off)
+        #   ("heal",)                              Heal
+        #   ("gray", pairs, mu, sigma, drop)       GrayLink/GrayClear over
+        #                                          [(proxy_ids, replica_ids)]
+        #   ("stamp-bias", proxy_id, bias)         SkewedStamper
+        #   ("lossy", rid)                         LossyAcker
         self._fault_events: list[tuple[float, tuple]] = []
+        # Adversarial-network exposure bookkeeping: closed fault windows for
+        # the trace checkers (check_partition_liveness) + per-epoch counters
+        # for the machine-readable summary.
+        self._net_windows: list[dict] = []
+        self._partition_open: Optional[dict] = None
+        self._gray_t0: Optional[float] = None
+        self._partition_epochs = 0
+        self._gray_epochs = 0
+        self._trace_stamps: list[tuple] = []    # (pids, deadline - stamp)
         self._view = 0
         self._vc: Optional[_ViewChangeInProgress] = None
         self._release_floor = 0.0
@@ -174,13 +189,21 @@ class VectorizedNezhaCluster(Cluster):
         return self._now
 
     @property
+    def _reachable(self) -> np.ndarray:
+        """Replicas that are alive AND not cut off by a partition: the set
+        that can lead, vote in view changes, and sync the log."""
+        return self._alive & ~self.engine.unreachable
+
+    @property
     def leader_id(self) -> int:
         """Current (or elect) leader: the leader of the first view >= the
-        current one whose leader is alive (last known during total outage)."""
-        if not self._alive.any():
+        current one whose leader is alive and reachable (last known during
+        total outage)."""
+        ok = self._reachable
+        if not ok.any():
             return self._last_leader
         v = self._view
-        while not self._alive[leader_of_view(v, self.f)]:
+        while not ok[leader_of_view(v, self.f)]:
             v += 1
         return leader_of_view(v, self.f)
 
@@ -235,7 +258,7 @@ class VectorizedNezhaCluster(Cluster):
 
     def _apply_faults(self, up_to: float) -> None:
         while self._fault_events and self._fault_events[0][0] <= up_to:
-            _, payload = self._fault_events.pop(0)
+            t, payload = self._fault_events.pop(0)
             if payload[0] == "alive":
                 _, rid, alive_after = payload
                 was_alive = bool(self._alive[rid])
@@ -248,6 +271,57 @@ class VectorizedNezhaCluster(Cluster):
                 self.engine.set_clock_fault(role, idx, mu, sigma)
             elif payload[0] == "net":
                 self.net.set_params(payload[1])
+            elif payload[0] == "partition":
+                minority = list(payload[1])
+                self.engine.set_partition(minority)
+                self._partition_open = {
+                    "t0": t, "minority": minority,
+                    "snap": self.engine.logs.sync_point[minority].copy()}
+            elif payload[0] == "heal":
+                if self._partition_open is not None:
+                    # minority progress measured BEFORE the heal lets them
+                    # catch up: durable log growth on the cut-off side
+                    self._net_windows.append(
+                        self._close_partition_window(t))
+                    self._partition_open = None
+                self.engine.clear_partition()
+            elif payload[0] == "gray":
+                _, pairs, mu, sigma, drop = payload
+                active = mu > 0.0 or sigma > 0.0 or drop > 0.0
+                for pids, rids in pairs:
+                    if active:
+                        self.engine.set_gray(pids, rids, mu, sigma, drop)
+                    else:
+                        self.engine.clear_gray(pids, rids)
+                if self.engine.gray_active:
+                    if self._gray_t0 is None:
+                        self._gray_t0 = t
+                elif self._gray_t0 is not None:
+                    self._net_windows.append(
+                        {"kind": "gray", "t0": self._gray_t0, "t1": t})
+                    self._gray_t0 = None
+            elif payload[0] == "stamp-bias":
+                self.engine.set_stamp_bias(payload[1], payload[2])
+            elif payload[0] == "lossy":
+                self.engine.logs.set_lossy(payload[1])
+
+    def _close_partition_window(self, t1: float) -> dict:
+        po = self._partition_open
+        prog = int(np.maximum(
+            self.engine.logs.sync_point[po["minority"]] - po["snap"],
+            0).sum())
+        return {"kind": "partition", "t0": po["t0"], "t1": t1,
+                "minority": po["minority"], "minority_progress": prog}
+
+    def net_windows(self) -> list[dict]:
+        """Adversarial-network fault windows for the trace checkers; a
+        window still open when called closes at the current sim time."""
+        out = list(self._net_windows)
+        if self._partition_open is not None:
+            out.append(self._close_partition_window(self._now))
+        if self._gray_t0 is not None:
+            out.append({"kind": "gray", "t0": self._gray_t0, "t1": self._now})
+        return out
 
     def _next_fault_time(self) -> float:
         return self._fault_events[0][0] if self._fault_events else np.inf
@@ -272,13 +346,51 @@ class VectorizedNezhaCluster(Cluster):
         if kind == "net-shift":
             self._add_event(event.t, ("net", event.params))
             return True
+        if kind == "partition":
+            self._add_event(event.t, ("partition", tuple(event.minority())))
+            return True
+        if kind == "heal":
+            self._add_event(event.t, ("heal",))
+            return True
+        if kind in ("gray-link", "gray-clear"):
+            from repro.sim.scenario import _link_nodes
+
+            # Resolve src/dst selectors (fail at schedule time, not mid-run)
+            # to directed (proxy, replica) pair sets: the vectorized data
+            # plane's only per-pair paths are proxy<->replica legs.
+            r_src, p_src = _link_nodes(event.src, self.n, self.cfg.n_proxies)
+            r_dst, p_dst = _link_nodes(event.dst, self.n, self.cfg.n_proxies)
+            pairs = []
+            if p_src and r_dst:
+                pairs.append((tuple(p_src), tuple(r_dst)))
+            if p_dst and r_src and (p_dst, r_src) != (p_src, r_dst):
+                pairs.append((tuple(p_dst), tuple(r_src)))
+            if not pairs:
+                return False
+            mu, sigma, drop = ((event.delay_mu, event.delay_sigma,
+                                event.drop_prob) if kind == "gray-link"
+                               else (0.0, 0.0, 0.0))
+            self._add_event(event.t, ("gray", pairs, mu, sigma, drop))
+            return True
+        if kind == "skewed-stamper":
+            self._add_event(event.t, ("stamp-bias", int(event.proxy_id),
+                                      float(event.bias)))
+            return True
+        if kind == "lossy-acker":
+            if not (0 <= event.rid < self.n):
+                raise ValueError(
+                    f"replica id {event.rid} out of range [0, {self.n})")
+            self._add_event(event.t, ("lossy", int(event.rid)))
+            return True
         return False
 
     # -- view changes (the recovery pipeline) ------------------------------------
     def _viable_view(self, from_view: int) -> int:
-        """Smallest view >= from_view whose leader is alive."""
+        """Smallest view >= from_view whose leader is alive and reachable
+        (a partitioned-away leader cannot win a majority's votes)."""
+        ok = self._reachable
         v = from_view
-        while not self._alive[leader_of_view(v, self.f)]:
+        while not ok[leader_of_view(v, self.f)]:
             v += 1
         return v
 
@@ -316,7 +428,7 @@ class VectorizedNezhaCluster(Cluster):
         relaunch restores it.
         """
         leader = leader_of_view(view, self.f)
-        others = np.flatnonzero(self._alive)
+        others = np.flatnonzero(self._reachable)
         others = others[others != leader]
         if others.size < self.f:        # < f+1 alive including the leader
             t_done = np.inf
@@ -333,25 +445,32 @@ class VectorizedNezhaCluster(Cluster):
                                      t_start=now, t_done=t_done)
 
     def _update_view(self, now: float) -> None:
-        """Start, escalate, stall, retime, or complete the view change."""
-        if not self._alive.any():
+        """Start, escalate, stall, retime, or complete the view change.
+
+        Reachability counts like liveness: a partitioned-away leader is
+        failed from the majority's point of view (heartbeats stop arriving)
+        and partitioned-away replicas cannot vote, so the quorum is over
+        the alive AND reachable set."""
+        ok = self._reachable
+        if not ok.any():
             self._vc = None     # nobody left to run a view change
             return
         while True:
             if self._vc is None:
-                if self._alive[leader_of_view(self._view, self.f)]:
+                if ok[leader_of_view(self._view, self.f)]:
                     return
                 self._vc = self._start_view_change(
                     now, self._viable_view(self._view + 1))
                 return
             vc = self._vc
-            if not self._alive[vc.leader]:
-                # the new leader died mid-recovery: escalate past it (the
-                # survivors' view-change timers fire afresh)
+            if not ok[vc.leader]:
+                # the new leader died (or fell behind a partition)
+                # mid-recovery: escalate past it (the survivors'
+                # view-change timers fire afresh)
                 self._vc = self._start_view_change(
                     now, self._viable_view(vc.view + 1))
                 return
-            if np.count_nonzero(self._alive) < self.f + 1:
+            if np.count_nonzero(ok) < self.f + 1:
                 vc.t_done = np.inf          # quorum lost mid-recovery: stall
                 return
             if not np.isfinite(vc.t_done):
@@ -375,7 +494,10 @@ class VectorizedNezhaCluster(Cluster):
         """
         vc = self._vc
         t_rec = vc.t_done
-        res = self.engine.logs.view_change(vc.view, self._alive)
+        # Only reachable survivors take part in MERGE-LOG and install the
+        # merged log at StartView; a partitioned-away replica stays on its
+        # frozen state until the heal lets it catch up.
+        res = self.engine.logs.view_change(vc.view, self._reachable)
         rec, dropped = res["recovered"], res["dropped"]
         self._view = vc.view
         self._last_leader = vc.leader
@@ -474,6 +596,10 @@ class VectorizedNezhaCluster(Cluster):
                                         self._deaths_at(epoch_end))
                 self._last_leader = leader
                 self.epoch_leaders.append(leader)
+            if self.engine.unreachable.any():
+                self._partition_epochs += 1
+            if self.engine.gray_active:
+                self._gray_epochs += 1
             self._epochs += 1
             self._now = epoch_end
 
@@ -498,7 +624,8 @@ class VectorizedNezhaCluster(Cluster):
         cfg = self.cfg
         k_max = int(getattr(cfg, "epochs_per_dispatch", 1))
         if k_max < min(SCAN_K_BUCKETS) or not self.engine.tier.fused \
-                or self.on_commit is not None or self.engine.clocks_faulty:
+                or self.on_commit is not None or self.engine.clocks_faulty \
+                or self.engine.pairs_faulty or self.engine.stampers_biased:
             return 0
         t_min = self._pending.min_time()
         retry_closed = t_min + cfg.client_timeout
@@ -533,6 +660,10 @@ class VectorizedNezhaCluster(Cluster):
         for due, s in zip(dues, states):
             if s is not None:
                 self._batches += 1
+                fin = np.isfinite(s.stamp)
+                self._trace_stamps.append(
+                    (s.cid[fin] % self.cfg.n_proxies,
+                     s.deadlines[fin] - s.stamp[fin]))
                 self._latencies.append(s.latency[s.delivered])
                 self._n_fast += int(np.sum(s.fast & s.delivered))
                 if s.delivered.any():
@@ -591,6 +722,13 @@ class VectorizedNezhaCluster(Cluster):
             self._batches += 1
             s = self.engine.run_epoch(due, self._alive, leader,
                                       self._release_floor, dies_at=dies_at)
+            # stamp audit for check_stamp_bias: per-message (proxy id,
+            # deadline - true stamp instant) = bound (+ bias + clock error);
+            # attempts whose client leg was dropped never got stamped
+            fin = np.isfinite(s.stamp)
+            self._trace_stamps.append(
+                (s.cid[fin] % self.cfg.n_proxies,
+                 s.deadlines[fin] - s.stamp[fin]))
             self._latencies.append(s.latency[s.delivered])
             self._n_fast += int(np.sum(s.fast & s.delivered))
             if s.delivered.any():
@@ -628,6 +766,8 @@ class VectorizedNezhaCluster(Cluster):
             tier=self.engine.tier.name, view_changes=self.view_changes,
             recovered_entries=self._recovered_entries,
             dropped_speculative=self._dropped_speculative,
+            partition_epochs=self._partition_epochs,
+            gray_link_epochs=self._gray_epochs,
         )
 
 

@@ -87,6 +87,92 @@ class CloudNetwork:
         self._inflight = np.zeros((n_nodes, n_nodes), dtype=np.int64)
         self.n_sent = 0
         self.n_dropped = 0
+        # Per-pair fault overrides (PR 8 adversarial family). Allocated
+        # lazily on first use: the fault-free sampling paths below must
+        # draw exactly the same random variates as before this feature
+        # existed (bit-for-bit run reproducibility).
+        self._pair_blocked: Optional[np.ndarray] = None   # bool [n, n]
+        self._pair_drop: Optional[np.ndarray] = None      # extra P(drop)
+        self._pair_mu: Optional[np.ndarray] = None        # extra-delay mean
+        self._pair_sigma: Optional[np.ndarray] = None     # extra-delay spread
+
+    # -- per-pair fault overrides (partitions / gray links) -------------------
+    @property
+    def pair_faults_active(self) -> bool:
+        return self._pair_blocked is not None
+
+    @property
+    def gray_active(self) -> bool:
+        """True while any gray-link override (delay or drop) is installed."""
+        return self._pair_drop is not None and bool(
+            self._pair_drop.any() or self._pair_mu.any()
+            or self._pair_sigma.any())
+
+    def _ensure_pair_state(self) -> None:
+        if self._pair_blocked is None:
+            self._pair_blocked = np.zeros((self.n, self.n), bool)
+            self._pair_drop = np.zeros((self.n, self.n))
+            self._pair_mu = np.zeros((self.n, self.n))
+            self._pair_sigma = np.zeros((self.n, self.n))
+
+    def _maybe_release_pair_state(self) -> None:
+        """Drop override state when every override is cleared, restoring the
+        exact fault-free sampling path (no extra rng draws)."""
+        if self._pair_blocked is not None and not self._pair_blocked.any() \
+                and not self._pair_drop.any() and not self._pair_mu.any() \
+                and not self._pair_sigma.any():
+            self._pair_blocked = None
+            self._pair_drop = None
+            self._pair_mu = None
+            self._pair_sigma = None
+
+    def set_partition(self, groups) -> None:
+        """Block every path between nodes in different ``groups`` (node-id
+        lists); within-group paths are untouched. Replaces any previous
+        partition."""
+        self._ensure_pair_state()
+        side = np.full(self.n, -1, np.int64)
+        for gi, g in enumerate(groups):
+            side[np.asarray(list(g), np.int64)] = gi
+        blocked = (side[:, None] != side[None, :]) & \
+                  (side[:, None] >= 0) & (side[None, :] >= 0)
+        self._pair_blocked = blocked
+
+    def clear_partition(self) -> None:
+        if self._pair_blocked is not None:
+            self._pair_blocked[:] = False
+            self._maybe_release_pair_state()
+
+    def set_gray_pairs(self, a, b, delay_mu: float = 0.0,
+                       delay_sigma: float = 0.0, drop_prob: float = 0.0) -> None:
+        """Install a gray fault on every path between node sets ``a`` and
+        ``b`` (both directions): extra N(mu, sigma) delay (clipped at 0)
+        and/or extra drop probability."""
+        self._ensure_pair_state()
+        a = np.asarray(list(a), np.int64)
+        b = np.asarray(list(b), np.int64)
+        for rows, cols in ((a, b), (b, a)):
+            self._pair_drop[np.ix_(rows, cols)] = drop_prob
+            self._pair_mu[np.ix_(rows, cols)] = delay_mu
+            self._pair_sigma[np.ix_(rows, cols)] = delay_sigma
+
+    def clear_gray_pairs(self, a, b) -> None:
+        if self._pair_drop is None:
+            return
+        a = np.asarray(list(a), np.int64)
+        b = np.asarray(list(b), np.int64)
+        for rows, cols in ((a, b), (b, a)):
+            self._pair_drop[np.ix_(rows, cols)] = 0.0
+            self._pair_mu[np.ix_(rows, cols)] = 0.0
+            self._pair_sigma[np.ix_(rows, cols)] = 0.0
+        self._maybe_release_pair_state()
+
+    def clear_gray_all(self) -> None:
+        if self._pair_drop is not None:
+            self._pair_drop[:] = 0.0
+            self._pair_mu[:] = 0.0
+            self._pair_sigma[:] = 0.0
+            self._maybe_release_pair_state()
 
     def set_params(self, params: NetworkParams) -> None:
         """Switch to a new statistical regime mid-run (scenario `NetShift`).
@@ -104,6 +190,14 @@ class CloudNetwork:
         """One-way delay in seconds, or None if the message is dropped."""
         p = self.params
         self.n_sent += 1
+        if self._pair_blocked is not None:
+            if self._pair_blocked[src, dst]:
+                self.n_dropped += 1
+                return None
+            xd = self._pair_drop[src, dst]
+            if xd > 0.0 and self.rng.random() < xd:
+                self.n_dropped += 1
+                return None
         if self.rng.random() < p.drop_prob:
             self.n_dropped += 1
             return None
@@ -112,6 +206,10 @@ class CloudNetwork:
         if self.rng.random() < p.burst_prob:
             d += self.rng.exponential(p.burst_scale)
         d += p.queue_us_per_inflight * float(self._inflight[src, dst])
+        if self._pair_mu is not None:
+            mu, sg = self._pair_mu[src, dst], self._pair_sigma[src, dst]
+            if mu > 0.0 or sg > 0.0:
+                d += max(0.0, self.rng.normal(mu, sg))
         return float(d)
 
     def on_send(self, src: int, dst: int) -> None:
@@ -132,12 +230,24 @@ class CloudNetwork:
         """
         p = self.params
         n_dsts = len(dsts)
+        srcs = np.asarray(srcs)
+        dsts_a = np.asarray(dsts)
         owd = np.full((n_msgs, n_dsts), p.base_owd)
-        owd += self._path_offset[np.asarray(srcs)[:, None], np.asarray(dsts)[None, :]]
+        owd += self._path_offset[srcs[:, None], dsts_a[None, :]]
         owd += self.rng.lognormal(p.lognorm_mu, p.lognorm_sigma, size=(n_msgs, n_dsts))
         bursts = self.rng.random((n_msgs, n_dsts)) < p.burst_prob
         owd += np.where(bursts, self.rng.exponential(p.burst_scale, size=(n_msgs, n_dsts)), 0.0)
         dropped = self.rng.random((n_msgs, n_dsts)) < p.drop_prob
+        if self._pair_blocked is not None:
+            ix = (srcs[:, None], dsts_a[None, :])
+            mu, sg = self._pair_mu[ix], self._pair_sigma[ix]
+            if mu.any() or sg.any():
+                extra = self.rng.normal(mu, sg).clip(min=0.0)
+                owd += np.where((mu > 0.0) | (sg > 0.0), extra, 0.0)
+            xd = self._pair_drop[ix]
+            if xd.any():
+                dropped |= self.rng.random((n_msgs, n_dsts)) < xd
+            dropped |= self._pair_blocked[ix]
         return owd, dropped
 
     def sample_owd_pairs(
@@ -161,6 +271,15 @@ class CloudNetwork:
         bursts = self.rng.random(n) < p.burst_prob
         owd += np.where(bursts, self.rng.exponential(p.burst_scale, size=n), 0.0)
         dropped = self.rng.random(n) < p.drop_prob
+        if self._pair_blocked is not None:
+            mu, sg = self._pair_mu[srcs, dsts], self._pair_sigma[srcs, dsts]
+            if mu.any() or sg.any():
+                extra = self.rng.normal(mu, sg).clip(min=0.0)
+                owd += np.where((mu > 0.0) | (sg > 0.0), extra, 0.0)
+            xd = self._pair_drop[srcs, dsts]
+            if xd.any():
+                dropped |= self.rng.random(n) < xd
+            dropped |= self._pair_blocked[srcs, dsts]
         return owd, dropped
 
 

@@ -10,9 +10,34 @@ replica failure/recovery (Figs 14-15), and badly synchronized clocks
                 (``synced``, ``drifty``, ``skewed``) and environment-specific
                 protocol tuning (e.g. WAN timeouts);
   faults        a typed, timestamped schedule of `FaultEvent`s -- `Crash`,
-                `Relaunch`, `ClockFault`, `ClockClear`, `NetShift`;
+                `Relaunch`, `ClockFault`, `ClockClear`, `NetShift`, plus the
+                adversarial network family below;
   workload      a `repro.sim.workload.Workload` (open/closed loop, rate,
                 duration, key skew, read ratio).
+
+Fault vocabulary (event -> backends -> detecting invariant). Every fault
+class ships with the `repro.sim.trace` invariant that catches its damage;
+"both" = event-driven AND vectorized (numpy/jit/pallas tiers):
+
+  ==================  ========  =======================================
+  event               backends  detecting invariant (repro.sim.trace)
+  ==================  ========  =======================================
+  Crash / Relaunch    both      check_durable_log (PR 5)
+  ClockFault/-Clear   both      check_deadline_order (PR 5)
+  NetShift            both      check_trace (regression suite)
+  Partition / Heal    both      check_partition_liveness: majority side
+                                keeps committing, the isolated side
+                                provably does not
+  GrayLink/GrayClear  both      check_partition_liveness (gray windows):
+                                fast-path ratio / commit-rate collapse
+                                inside the degraded window
+  SkewedStamper       both      check_stamp_bias: per-proxy deadline
+                                offset estimator beyond sync error
+  LossyAcker          both      check_durability (acked-but-unpersisted
+                                prefix exposed at relaunch) and
+                                check_split_brain (divergent durable
+                                histories at the same log position)
+  ==================  ========  =======================================
 
 One entry point runs any scenario on any registered backend:
 
@@ -206,6 +231,125 @@ class NetShift(FaultEvent):
         return NET_PROFILES[self.profile]
 
 
+@dataclass(frozen=True)
+class Partition(FaultEvent):
+    """Network partition: replicas in different ``groups`` cannot exchange
+    messages from ``t`` until a later `Heal`. ``groups`` must cover every
+    replica id exactly once. Proxies and clients stay with the ``main``
+    group (-1 = the largest group, first on ties); replicas outside the
+    main group are unreachable from proxies, clients AND main-side
+    replicas -- the classic "is the leader dead or just cut off?"
+    ambiguity a failure detector cannot resolve."""
+
+    groups: tuple = ((0,), (1, 2))
+    main: int = -1
+    kind = "partition"
+
+    def main_group(self) -> int:
+        if self.main >= 0:
+            return int(self.main)
+        sizes = [len(g) for g in self.groups]
+        return int(max(range(len(sizes)), key=lambda i: (sizes[i], -i)))
+
+    def minority(self) -> tuple:
+        """Replica ids NOT on the proxy/client side of the cut."""
+        m = self.main_group()
+        out: list[int] = []
+        for i, g in enumerate(self.groups):
+            if i != m:
+                out.extend(int(r) for r in g)
+        return tuple(sorted(out))
+
+
+@dataclass(frozen=True)
+class Heal(FaultEvent):
+    """Remove the currently open `Partition` (all groups reconnect)."""
+
+    kind = "heal"
+
+
+@dataclass(frozen=True)
+class GrayLink(FaultEvent):
+    """Gray failure on the links between ``src`` and ``dst`` endpoints:
+    extra N(delay_mu, delay_sigma)-distributed delay (clipped at 0) and/or
+    an extra per-message ``drop_prob``, both directions, from ``t`` until a
+    matching `GrayClear`. The link neither dies nor recovers -- it lies.
+
+    Endpoint selectors: ``"replica:<i>"`` / ``"proxy:<i>"`` /
+    ``"replicas"`` / ``"proxies"`` / ``"*"``; a bare int means
+    ``replica:<i>``."""
+
+    src: Union[int, str] = "*"
+    dst: Union[int, str] = "*"
+    delay_mu: float = 0.0
+    delay_sigma: float = 0.0
+    drop_prob: float = 0.0
+    kind = "gray-link"
+
+
+@dataclass(frozen=True)
+class GrayClear(FaultEvent):
+    """Clear the gray fault previously installed on (``src``, ``dst``);
+    the default ``("*", "*")`` clears every open gray link."""
+
+    src: Union[int, str] = "*"
+    dst: Union[int, str] = "*"
+    kind = "gray-clear"
+
+
+@dataclass(frozen=True)
+class SkewedStamper(FaultEvent):
+    """Byzantine-leaning proxy: from ``t`` on, proxy ``proxy_id`` stamps
+    send-times (and therefore deadlines) shifted by ``bias`` seconds. Its
+    messages also poison the receiver-side OWD measurements by ``-bias``,
+    exactly as a lying clock read would. Sticky until the end of the run."""
+
+    proxy_id: int = 0
+    bias: float = 0.0
+    kind = "skewed-stamper"
+
+
+@dataclass(frozen=True)
+class LossyAcker(FaultEvent):
+    """Byzantine-leaning replica: from ``t`` on, replica ``rid`` keeps
+    acknowledging entries without durably persisting them. Invisible while
+    the replica stays up; a later `Crash` + `Relaunch` exposes the
+    acked-but-unpersisted suffix (the replica restarts trusting its
+    truncated durable log)."""
+
+    rid: int = 0
+    kind = "lossy-acker"
+
+
+NET_FAULT_KINDS = ("partition", "heal", "gray-link", "gray-clear")
+
+
+def _link_nodes(sel, n_replicas: int, n_proxies: int) -> tuple[tuple, tuple]:
+    """Resolve a gray-link endpoint selector to (replica_ids, proxy_ids).
+
+    Range-checked here (schedule/validation time) like `_clock_targets`:
+    a bad endpoint must fail loudly, not silently gray out a neighbor."""
+    if isinstance(sel, (int, np.integer)):
+        sel = f"replica:{int(sel)}"
+    if sel == "*":
+        return tuple(range(n_replicas)), tuple(range(n_proxies))
+    if sel == "replicas":
+        return tuple(range(n_replicas)), ()
+    if sel == "proxies":
+        return (), tuple(range(n_proxies))
+    role, _, idx = str(sel).partition(":")
+    if role in ("replica", "proxy") and idx.isdigit():
+        n = n_replicas if role == "replica" else n_proxies
+        if int(idx) >= n:
+            raise ValueError(
+                f"gray-link endpoint {sel!r} out of range: "
+                f"cluster has {n} {role} node(s)")
+        return ((int(idx),), ()) if role == "replica" else ((), (int(idx),))
+    raise ValueError(
+        f"bad gray-link endpoint {sel!r}; expected 'replica:<i>', "
+        "'proxy:<i>', 'replicas', 'proxies' or '*'")
+
+
 def _clock_targets(who: str, n_replicas: int, n_proxies: int) -> list[tuple[str, int]]:
     if who == "leader":
         return [("replica", 0)]
@@ -250,9 +394,20 @@ class Scenario:
     seed: int = 0
     overrides: dict = field(default_factory=dict)
     description: str = ""
+    # Name of the `repro.sim.trace` detection invariant paired with this
+    # scenario's fault schedule (key into trace.ADVERSARIAL_CHECKS), or None.
+    # tests/test_adversarial.py asserts the paired invariant fires on the
+    # faulty schedule and stays silent on the fault-free control.
+    invariant: Optional[str] = None
 
     def __post_init__(self):
         _validate_scenario(self)
+
+    def control(self) -> "Scenario":
+        """The fault-free control run: same environment/workload, no faults
+        (the paired invariant must stay silent on it)."""
+        return replace(self, name=f"{self.name}-control", faults=(),
+                       invariant=None)
 
     @property
     def env(self) -> Environment:
@@ -283,17 +438,95 @@ def _validate_scenario(sc: Scenario) -> None:
         errs.append(f"unknown environment {sc.environment!r}; available: "
                     + ", ".join(ENVIRONMENTS))
     horizon = sc.horizon
+    # The proxy count, where known, range-checks SkewedStamper/GrayLink
+    # proxy endpoints at construction time; without an override the config
+    # default (1 proxy) applies.
+    n_prox = sc.overrides.get("n_proxies")
+    if n_prox is None:
+        try:
+            n_prox = sc.env.overrides.get("n_proxies", 1)
+        except KeyError:
+            n_prox = 1
     # replicas currently down (crashed, not yet relaunched), in schedule
     # order -- stable sort keeps same-t events in declaration order, so a
     # same-instant crash+relaunch pair is only legal crash-first
     down: set = set()
+    partition_open = False          # Partition seen, no Heal yet
+    gray_open: dict[tuple, int] = {}  # (src, dst) -> open GrayLink count
     for ev in sorted(sc.faults, key=lambda e: e.t):
         tag = f"{type(ev).__name__}(t={ev.t!r})"
         if not (0.0 <= ev.t <= horizon):
             errs.append(f"{tag} outside the run horizon [0, {horizon!r}] "
                         "(duration + drain): it would never fire")
         kind = getattr(ev, "kind", "abstract")
-        if kind in ("crash", "relaunch"):
+        if kind == "partition":
+            if partition_open:
+                errs.append(f"{tag}: a partition is already open "
+                            "(overlapping partitions need a Heal between)")
+            partition_open = True
+            groups = getattr(ev, "groups", ())
+            flat: list[int] = []
+            for g in groups:
+                flat.extend(int(r) for r in g)
+            if len(groups) < 2 or any(len(g) == 0 for g in groups):
+                errs.append(f"{tag}: needs >= 2 non-empty groups")
+            if len(flat) != len(set(flat)):
+                errs.append(f"{tag}: groups overlap (a replica appears in "
+                            "two groups)")
+            if set(flat) != set(range(n)):
+                errs.append(f"{tag}: groups must cover every replica id "
+                            f"0..{n - 1} exactly once, got {sorted(set(flat))}")
+            if not (-1 <= ev.main < len(groups)):
+                errs.append(f"{tag}: main={ev.main} is not a group index")
+        elif kind == "heal":
+            if not partition_open:
+                errs.append(f"{tag}: Heal with no open Partition before it")
+            partition_open = False
+        elif kind == "gray-link":
+            for sel in (ev.src, ev.dst):
+                try:
+                    _link_nodes(sel, n, n_prox)
+                except ValueError as exc:
+                    errs.append(f"{tag}: {exc}")
+            if not (ev.delay_mu >= 0.0 and ev.delay_sigma >= 0.0
+                    and np.isfinite(ev.delay_mu) and np.isfinite(ev.delay_sigma)):
+                errs.append(f"{tag}: delay_mu/delay_sigma must be finite "
+                            "and >= 0")
+            if not (0.0 <= ev.drop_prob <= 1.0):
+                errs.append(f"{tag}: drop_prob={ev.drop_prob!r} outside [0, 1]")
+            if ev.delay_mu == 0.0 and ev.delay_sigma == 0.0 \
+                    and ev.drop_prob == 0.0:
+                errs.append(f"{tag}: no effect (delay and drop all zero)")
+            key = (ev.src, ev.dst)
+            gray_open[key] = gray_open.get(key, 0) + 1
+        elif kind == "gray-clear":
+            for sel in (ev.src, ev.dst):
+                try:
+                    _link_nodes(sel, n, n_prox)
+                except ValueError as exc:
+                    errs.append(f"{tag}: {exc}")
+            key = (ev.src, ev.dst)
+            if key == ("*", "*"):
+                if not any(gray_open.values()):
+                    errs.append(f"{tag}: GrayClear with no open GrayLink "
+                                "before it")
+                gray_open.clear()
+            elif gray_open.get(key, 0) <= 0:
+                errs.append(f"{tag}: GrayClear({ev.src!r}, {ev.dst!r}) "
+                            "matches no open GrayLink")
+            else:
+                gray_open[key] -= 1
+        elif kind == "skewed-stamper":
+            if not (0 <= ev.proxy_id < n_prox):
+                errs.append(f"{tag}: proxy_id={ev.proxy_id} out of range for "
+                            f"{n_prox} proxy node(s)")
+            if not np.isfinite(ev.bias):
+                errs.append(f"{tag}: bias must be finite")
+        elif kind == "lossy-acker":
+            if not (0 <= ev.rid < n):
+                errs.append(f"{tag}: rid={ev.rid} out of range for "
+                            f"2f+1 = {n} replicas")
+        elif kind in ("crash", "relaunch"):
             rid = getattr(ev, "rid", 0)
             if not (0 <= rid < n):
                 errs.append(f"{tag}: rid={rid} out of range for "
@@ -322,6 +555,7 @@ SCENARIO_RESULT_KEYS = (
     "fast_commit_ratio", "median_latency", "p90_latency", "mean_latency",
     "throughput", "epochs", "view_changes", "recovered_entries",
     "dropped_speculative", "applied_faults", "skipped_faults",
+    "partition_epochs", "gray_link_epochs", "invariant_violations",
 )
 
 
@@ -342,7 +576,15 @@ class ScenarioResult:
     replica counter and the vectorized recovery pipeline agree on it);
     ``recovered_entries``/``dropped_speculative`` count what the view
     changes' MERGE-LOG kept/discarded beyond the synced prefix (0 on
-    backends without a recovery pipeline)."""
+    backends without a recovery pipeline).
+
+    Fault-exposure counters: ``partition_epochs``/``gray_link_epochs``
+    count how long the run actually spent under an active partition/gray
+    fault -- epochs on the vectorized backend, completed fault windows on
+    the event backend (which has no epochs). ``invariant_violations`` is
+    the number of findings the paired adversarial trace checkers raised
+    (filled by `repro.sim.trace.run_scenario_with_trace`; 0 when the run
+    was summarized without trace capture)."""
 
     protocol: str
     backend: str
@@ -361,6 +603,9 @@ class ScenarioResult:
     dropped_speculative: int
     applied_faults: int
     skipped_faults: int
+    partition_epochs: int = 0
+    gray_link_epochs: int = 0
+    invariant_violations: int = 0
     raw: dict = field(default_factory=dict, repr=False)
 
     @classmethod
@@ -384,6 +629,9 @@ class ScenarioResult:
             dropped_speculative=int(summary.get("dropped_speculative", 0)),
             applied_faults=applied_faults,
             skipped_faults=skipped_faults,
+            partition_epochs=int(summary.get("partition_epochs", 0)),
+            gray_link_epochs=int(summary.get("gray_link_epochs", 0)),
+            invariant_violations=int(summary.get("invariant_violations", 0)),
             raw=dict(summary),
         )
 
@@ -402,6 +650,11 @@ _STD_WORKLOAD = Workload(mode="open", rate_per_client=2000.0, duration=0.15,
 _CLOCK_MU = 300e-6          # Appendix D: |offset| = 300us, sigma = 30us
 _CLOCK_SIGMA = 30e-6
 _CAP = 50e-6                # SD.2.4 deadline cap
+# The adversarial family reuses the crash family's write-only uniform
+# traffic (fault windows must see steady commit flow on both backends).
+_ADV_WORKLOAD = Workload(mode="open", rate_per_client=2000.0, duration=0.15,
+                         warmup=0.02, drain=0.1, seed=0,
+                         read_ratio=0.0, skew=0.0)
 
 
 def _clock_scenario(name: str, who: str, mu: float, cap: float = 0.0,
@@ -502,8 +755,77 @@ SCENARIOS: dict[str, Scenario] = {
         _clock_scenario("clock-skew-proxy-capped", "proxies", _CLOCK_MU,
                         cap=_CAP,
                         description="Appendix D: fast proxies + deadline cap"),
+        # ------------------------------------------------------------------
+        # Adversarial network family (PR 8): partitions, gray failures and
+        # Byzantine-leaning faults. Each scenario names the trace invariant
+        # that must fire on the faulty run and stay silent on `control()`.
+        # All share the crash family's write-only uniform workload so the
+        # vectorized and event backends stay comparable.
+        # ------------------------------------------------------------------
+        Scenario("leader-minority-partition",
+                 faults=(Partition(0.05, groups=((0,), (1, 2))),
+                         Heal(0.16)),
+                 workload=_ADV_WORKLOAD, overrides={"n_proxies": 2},
+                 invariant="partition-liveness",
+                 description="the view-0 leader lands alone on the minority "
+                             "side; the majority view-changes and keeps "
+                             "committing, the minority provably does not"),
+        Scenario("split-brain-attempt",
+                 faults=(LossyAcker(0.03, rid=1),
+                         Partition(0.05, groups=((0,), (1, 2))),
+                         Crash(0.095, rid=1),   # after the majority's view
+                         #   change elects the lossy acker leader of view 1
+                         Heal(0.10),
+                         Relaunch(0.13, rid=1)),
+                 workload=_ADV_WORKLOAD, overrides={"n_proxies": 2},
+                 invariant="split-brain",
+                 description="a lossy acker becomes leader behind a "
+                             "partition, crashes, and relaunches trusting "
+                             "its truncated durable log: two durable "
+                             "histories now hold conflicting entries"),
+        Scenario("flapping-links",
+                 faults=(GrayLink(0.04, "*", "*", drop_prob=0.35),
+                         GrayClear(0.06),
+                         GrayLink(0.08, "*", "*", drop_prob=0.35),
+                         GrayClear(0.10)),
+                 workload=_ADV_WORKLOAD, overrides={"n_proxies": 2},
+                 invariant="partition-liveness",
+                 description="proxy<->replica links flap between healthy "
+                             "and 35% loss; commit health collapses inside "
+                             "each gray window and recovers between them"),
+        Scenario("slow-but-alive-replica",
+                 faults=(GrayLink(0.04, "*", "replica:2",
+                                  delay_mu=2e-3, delay_sigma=100e-6),
+                         GrayClear(0.11, "*", "replica:2")),
+                 workload=_ADV_WORKLOAD, overrides={"n_proxies": 2},
+                 invariant="partition-liveness",
+                 description="every link to replica 2 gains ~2ms: the "
+                             "replica never fails, but the fast path "
+                             "(which needs all 2f+1 replies) dies"),
+        Scenario("skewed-proxy",
+                 faults=(SkewedStamper(0.04, proxy_id=1, bias=400e-6),),
+                 workload=_ADV_WORKLOAD, overrides={"n_proxies": 3},
+                 invariant="stamp-bias",
+                 description="proxy 1 stamps deadlines 400us late; the "
+                             "per-proxy deadline-offset estimator flags it "
+                             "far beyond clock-sync error"),
+        Scenario("ack-without-persist",
+                 faults=(LossyAcker(0.03, rid=2),
+                         Crash(0.09, rid=2),
+                         Relaunch(0.13, rid=2)),
+                 workload=_ADV_WORKLOAD, overrides={"n_proxies": 2},
+                 invariant="durability",
+                 description="replica 2 acks without persisting; its crash "
+                             "+ relaunch exposes the acked-but-missing "
+                             "prefix"),
     )
 }
+
+# The adversarial family, in catalog order (tests iterate this).
+ADVERSARIAL_SCENARIOS = (
+    "leader-minority-partition", "split-brain-attempt", "flapping-links",
+    "slow-but-alive-replica", "skewed-proxy", "ack-without-persist",
+)
 
 
 def available_scenarios() -> tuple[str, ...]:
@@ -649,8 +971,11 @@ def run_scenario(protocol_name: str, scenario: Union[str, Scenario], *,
 __all__ = [
     "NET_PROFILES", "CLOCK_REGIMES", "ENVIRONMENTS", "Environment",
     "FaultEvent", "Crash", "Relaunch", "ClockFault", "ClockClear", "NetShift",
+    "Partition", "Heal", "GrayLink", "GrayClear", "SkewedStamper",
+    "LossyAcker", "NET_FAULT_KINDS",
     "Scenario", "ScenarioResult", "SCENARIO_RESULT_KEYS",
-    "SCENARIOS", "available_scenarios", "get_scenario", "resolve_scenario",
+    "SCENARIOS", "ADVERSARIAL_SCENARIOS",
+    "available_scenarios", "get_scenario", "resolve_scenario",
     "build_config", "make_scenario_cluster", "run_scenario",
     "run_scenario_on_cluster",
 ]

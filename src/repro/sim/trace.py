@@ -29,6 +29,24 @@ and one checker vocabulary over it:
                             two runs of the same scenario committed exactly
                             the same request set.
 
+The adversarial fault family (PR 8) adds detection invariants, each paired
+with the scenario that must trip it (`ADVERSARIAL_CHECKS` maps the
+scenario's ``invariant`` name to its checker):
+
+  check_split_brain         two durable logs hold conflicting entries at the
+                            same position (honest Nezha logs are always
+                            prefix-consistent);
+  check_stamp_bias          the per-proxy deadline-offset estimator flags a
+                            proxy whose median offset deviates from the
+                            cross-proxy median beyond clock-sync error;
+  check_durability          a crashed replica acked entries it never
+                            persisted (LossyAcker exposed on relaunch);
+  check_partition_liveness  fault-window liveness: during a partition the
+                            majority commits while the minority provably
+                            does not (or nobody commits at all); during a
+                            gray window commit rate or fast-path health
+                            collapses relative to clean operation.
+
 Builders exist for both backends (`CommitTrace.from_cluster` dispatches),
 so every test tier and every cataloged scenario can assert through the same
 functions; `run_scenario_with_trace` is the one-call form benchmarks and CI
@@ -67,12 +85,23 @@ class CommitTrace:
     # ordered within each epoch batch (the vectorized engine's windowed
     # steady-state approximation, see ROADMAP fidelity notes).
     order_scope: str = "log"
+    # Adversarial-family evidence (PR 8); empty when the run recorded none.
+    stamps: dict = field(default_factory=dict)    # {"pid","doff"} per request:
+    #   issuing proxy id and deadline minus honest local send time
+    durability: list = field(default_factory=list)  # crash-time durability
+    #   holes: {"replica","acked","persisted","missing","uids"}
+    replica_logs: dict = field(default_factory=dict)  # rid -> {"cid","rid"}
+    #   per-replica durable-log views (positional; split-brain evidence)
+    net_windows: list = field(default_factory=list)   # partition/gray fault
+    #   windows: {"kind","t0","t1"[,"minority","minority_progress"]}
 
     def __post_init__(self):
         for col in LOG_COLS:
             self.log.setdefault(col, np.empty(0, _LOG_DTYPES[col]))
         for col in COMMIT_COLS:
             self.commits.setdefault(col, np.empty(0, _COMMIT_DTYPES[col]))
+        self.stamps.setdefault("pid", np.empty(0, np.int64))
+        self.stamps.setdefault("doff", np.empty(0, np.float64))
 
     @property
     def log_uids(self) -> np.ndarray:
@@ -102,9 +131,24 @@ class CommitTrace:
                   if recs else np.empty(0, _COMMIT_DTYPES[col]))
             for i, col in enumerate(COMMIT_COLS)
         }
-        return cls(protocol=cluster.protocol, backend="vectorized",
-                   tier=cluster.engine.tier.name, log=log, commits=commits,
-                   order_scope="batch")
+        tr = cls(protocol=cluster.protocol, backend="vectorized",
+                 tier=cluster.engine.tier.name, log=log, commits=commits,
+                 order_scope="batch")
+        st = getattr(cluster, "_trace_stamps", None)
+        if st:
+            tr.stamps = {
+                "pid": np.concatenate([np.asarray(p, np.int64) for p, _ in st]),
+                "doff": np.concatenate([np.asarray(d, np.float64) for _, d in st]),
+            }
+        logs = cluster.engine.logs
+        tr.durability = list(getattr(logs, "durability_events", ()))
+        if getattr(logs, "has_holes", False):
+            tr.replica_logs = {
+                r: {"cid": cols["cid"], "rid": cols["rid"]}
+                for r, cols in logs.replica_log_columns().items()}
+        if hasattr(cluster, "net_windows"):
+            tr.net_windows = cluster.net_windows()
+        return tr
 
     @classmethod
     def from_event_cluster(cls, cluster) -> "CommitTrace":
@@ -146,8 +190,31 @@ class CommitTrace:
                "view": np.zeros(n, np.int64),
                "batch": np.zeros(n, np.int64),
                "recovered": np.zeros(n, bool)}
-        return cls(protocol=cluster.protocol, backend="event", tier="event",
-                   log=log, commits=commits, order_scope="log")
+        tr = cls(protocol=cluster.protocol, backend="event", tier="event",
+                 log=log, commits=commits, order_scope="log")
+        audit = getattr(cluster, "_stamp_audit", None)
+        if audit:
+            tr.stamps = {
+                "pid": np.asarray([p for p, _ in audit], np.int64),
+                "doff": np.asarray([d for _, d in audit], np.float64)}
+        tr.durability = list(getattr(cluster, "_durability_events", ()))
+        # Split-brain evidence compares only logs that claim authority NOW:
+        # honest replicas in the highest view, plus divergent ones (which
+        # claim NORMAL in a stale view they refuse to leave). A lagging
+        # replica mid-catch-up is excluded -- its stale pre-MERGE-LOG tail
+        # legitimately differs positionally (the view change re-sorts the
+        # speculative suffix by deadline) and the protocol is repairing it.
+        reps = [r for r in getattr(cluster, "replicas", ()) if r.alive]
+        honest = [r for r in reps if not getattr(r, "divergent", False)]
+        vmax = max((r.view_id for r in honest), default=0)
+        tr.replica_logs = {
+            r.id: {"cid": np.asarray([e.client_id for e in r.synced], np.int64),
+                   "rid": np.asarray([e.request_id for e in r.synced], np.int64)}
+            for r in reps
+            if getattr(r, "divergent", False) or r.view_id == vmax}
+        if hasattr(cluster, "net_windows"):
+            tr.net_windows = cluster.net_windows()
+        return tr
 
 
 # ---------------------------------------------------------------------------
@@ -223,6 +290,145 @@ def check_trace(trace: CommitTrace) -> list[str]:
             + check_deadline_order(trace))
 
 
+# ---------------------------------------------------------------------------
+# adversarial detection invariants (PR 8): each fires on the damage its
+# paired fault family leaves behind, and stays silent on clean runs
+# ---------------------------------------------------------------------------
+def check_split_brain(trace: CommitTrace) -> list[str]:
+    """Two durable logs hold conflicting entries at the same position.
+    Honest Nezha replicas are prefix-consistent -- one log may trail the
+    other, but within their common length they agree positionally. Any
+    positional uid mismatch means two replicas committed conflicting
+    histories (e.g. a LossyAcker relaunched into a stale view it still
+    leads, appending on top of its truncated log)."""
+    out = []
+    rids = sorted(trace.replica_logs)
+    packed = {r: _pack(trace.replica_logs[r]["cid"],
+                       trace.replica_logs[r]["rid"]) for r in rids}
+    for i, a in enumerate(rids):
+        for b in rids[i + 1:]:
+            m = min(packed[a].size, packed[b].size)
+            bad = np.flatnonzero(packed[a][:m] != packed[b][:m])
+            if bad.size:
+                out.append(
+                    f"{trace.label}: split brain: replicas {a} and {b} hold "
+                    f"conflicting entries at {int(bad.size)} log position(s), "
+                    f"first at index {int(bad[0])}")
+    return out
+
+
+def check_stamp_bias(trace: CommitTrace, bound: float = 100e-6) -> list[str]:
+    """Per-proxy deadline-offset estimator: a proxy whose median offset
+    (deadline minus honest local send time) deviates from the cross-proxy
+    median by more than ``bound`` is stamping biased deadlines. Clock-sync
+    error and latency-bound estimation keep honest proxies well inside
+    ``bound`` of each other; a SkewedStamper lands its full bias outside.
+    Needs >= 3 proxies with >= 8 samples each to attribute blame."""
+    pid, doff = trace.stamps["pid"], trace.stamps["doff"]
+    if pid.size == 0:
+        return []
+    med = {}
+    for p in np.unique(pid):
+        sel = pid == p
+        if int(sel.sum()) >= 8:
+            med[int(p)] = float(np.median(doff[sel]))
+    if len(med) < 3:
+        return []
+    overall = float(np.median(list(med.values())))
+    out = []
+    for p, m in sorted(med.items()):
+        if abs(m - overall) > bound:
+            out.append(
+                f"{trace.label}: stamp bias: proxy {p} median deadline "
+                f"offset {m * 1e6:.0f}us deviates {abs(m - overall) * 1e6:.0f}us "
+                f"from the cross-proxy median (bound {bound * 1e6:.0f}us)")
+    return out
+
+
+def check_durability(trace: CommitTrace) -> list[str]:
+    """Durability violation: a crashed replica had acknowledged entries it
+    never durably persisted (the LossyAcker hole, exposed on relaunch)."""
+    out = []
+    for ev in trace.durability:
+        if ev["acked"] > ev["persisted"]:
+            out.append(
+                f"{trace.label}: durability violation: replica "
+                f"{ev['replica']} acked {ev['acked']} entries but persisted "
+                f"only {ev['persisted']} ({ev['missing']} lost on crash)")
+    return out
+
+
+def check_partition_liveness(trace: CommitTrace) -> list[str]:
+    """Fault-window liveness. Partition windows: the majority side keeps
+    committing while the minority makes at most in-flight-drain progress,
+    under 1% of the majority's (the expected asymmetry -- or nobody
+    commits, outright liveness loss). Gray windows:
+    the in-window commit rate or fast-path ratio collapses below half the
+    clean-operation level. Silent when the run recorded no fault windows."""
+    t, fast = trace.commits["t"], trace.commits["fast"]
+    out = []
+    gray = [w for w in trace.net_windows if w["kind"] == "gray"]
+    in_any_gray = np.zeros(t.size, bool)
+    for w in gray:
+        in_any_gray |= (t >= w["t0"]) & (t < w["t1"])
+    gray_span = sum(w["t1"] - w["t0"] for w in gray)
+    clean_span = (float(t.max() - t.min()) if t.size else 0.0) - gray_span
+    n_out = int((~in_any_gray).sum())
+    rate_out = n_out / clean_span if clean_span > 0 else 0.0
+    fast_out = float(fast[~in_any_gray].mean()) if n_out else 0.0
+    for w in trace.net_windows:
+        t0, t1 = w["t0"], w["t1"]
+        if t1 <= t0:
+            continue
+        inside = (t >= t0) & (t < t1)
+        n_in = int(inside.sum())
+        if w["kind"] == "partition":
+            if n_in == 0:
+                out.append(
+                    f"{trace.label}: liveness lost: zero commits during "
+                    f"partition [{t0:.3f}, {t1:.3f})s")
+            else:
+                # Cut links block at sample time, so a handful of already
+                # scheduled deliveries still drain into the minority after
+                # the cut; tolerate that, not sustained progress.
+                mp = int(w.get("minority_progress", n_in))
+                if mp * 100 < n_in:
+                    out.append(
+                        f"{trace.label}: partition asymmetry: majority "
+                        f"committed {n_in} during [{t0:.3f}, {t1:.3f})s "
+                        f"while minority {w.get('minority')} made only "
+                        f"{mp} durable entries of progress")
+        else:  # gray
+            rate_in = n_in / (t1 - t0)
+            fast_in = float(fast[inside].mean()) if n_in else 0.0
+            if n_in == 0 or rate_in < 0.5 * rate_out \
+                    or fast_in < 0.5 * fast_out:
+                out.append(
+                    f"{trace.label}: gray degradation in [{t0:.3f}, "
+                    f"{t1:.3f})s: commit rate {rate_in:.0f}/s vs "
+                    f"{rate_out:.0f}/s clean, fast ratio {fast_in:.2f} vs "
+                    f"{fast_out:.2f} clean")
+    return out
+
+
+# scenario ``invariant`` name -> its paired checker (the catalog's
+# adversarial scenarios each assert exactly their own entry fires)
+ADVERSARIAL_CHECKS = {
+    "split-brain": check_split_brain,
+    "stamp-bias": check_stamp_bias,
+    "durability": check_durability,
+    "partition-liveness": check_partition_liveness,
+}
+
+
+def check_adversarial(trace: CommitTrace) -> list[str]:
+    """All adversarial detection invariants."""
+    out = []
+    for fn in ADVERSARIAL_CHECKS.values():
+        out += fn(trace)
+    return out
+
+
 def check_equivalent_commits(a: CommitTrace, b: CommitTrace) -> list[str]:
     """Cross-backend/tier commit-sequence equivalence: the two runs
     committed exactly the same request set. (Commit *times* differ -- the
@@ -256,18 +462,25 @@ def assert_equivalent_commits(a: CommitTrace, b: CommitTrace) -> None:
 # ---------------------------------------------------------------------------
 def run_scenario_with_trace(protocol_name: str, scenario, *,
                             tier: Optional[str] = None, config=None, **kw):
-    """`repro.sim.scenario.run_scenario`, returning ``(result, trace)``."""
+    """`repro.sim.scenario.run_scenario`, returning ``(result, trace)``.
+    Also fills ``result.invariant_violations`` with the number of findings
+    the adversarial detection invariants raised on the captured trace."""
     from repro.sim.scenario import run_scenario_on_cluster
 
     result, cluster = run_scenario_on_cluster(
         protocol_name, scenario, tier=tier, config=config, **kw)
-    return result, CommitTrace.from_cluster(cluster)
+    trace = CommitTrace.from_cluster(cluster)
+    result.invariant_violations = len(check_adversarial(trace))
+    result.raw["invariant_violations"] = result.invariant_violations
+    return result, trace
 
 
 __all__ = [
     "COMMIT_COLS", "LOG_COLS", "CommitTrace",
     "check_at_most_once", "check_durable_log", "check_deadline_order",
     "check_trace", "check_equivalent_commits",
+    "check_split_brain", "check_stamp_bias", "check_durability",
+    "check_partition_liveness", "check_adversarial", "ADVERSARIAL_CHECKS",
     "assert_trace_ok", "assert_equivalent_commits",
     "run_scenario_with_trace",
 ]

@@ -12,6 +12,7 @@ from repro.core.baselines import BaselineConfig
 from repro.core.vectorized_cluster import VectorizedConfig
 from repro.sim.network import CloudNetwork, NetworkParams, reordering_score
 from repro.sim.scenario import (
+    ADVERSARIAL_SCENARIOS,
     CLOCK_REGIMES,
     ENVIRONMENTS,
     NET_PROFILES,
@@ -19,10 +20,16 @@ from repro.sim.scenario import (
     ClockClear,
     ClockFault,
     Crash,
+    GrayClear,
+    GrayLink,
+    Heal,
+    LossyAcker,
     NetShift,
+    Partition,
     Relaunch,
     Scenario,
     ScenarioResult,
+    SkewedStamper,
     available_scenarios,
     build_config,
     get_scenario,
@@ -485,3 +492,68 @@ def test_clock_faults_preserve_fault_free_determinism():
     plain = WorkloadDriver(sc.workload).run(
         make_cluster("nezha-vectorized", plain_cfg))
     assert r.raw == plain
+
+
+# ---------------------------------------------------------------------------
+# adversarial-family validation (PR 8): every malformed schedule fails at
+# Scenario construction, with the message naming the offending event
+# ---------------------------------------------------------------------------
+def _adv(*faults, **kw) -> Scenario:
+    kw.setdefault("overrides", {"n_proxies": 3})
+    return Scenario("adv-test", faults=tuple(faults), workload=_SHORT_CLOCK,
+                    **kw)
+
+
+def test_validation_rejects_malformed_partitions():
+    with pytest.raises(ValueError, match="cover every replica id"):
+        _adv(Partition(0.01, groups=((0,), (1,))))          # 2 missing
+    with pytest.raises(ValueError, match="groups overlap"):
+        _adv(Partition(0.01, groups=((0, 1), (1, 2))))
+    with pytest.raises(ValueError, match=">= 2 non-empty groups"):
+        _adv(Partition(0.01, groups=((0, 1, 2),)))
+    with pytest.raises(ValueError, match="not a group index"):
+        _adv(Partition(0.01, groups=((0,), (1, 2)), main=5))
+    with pytest.raises(ValueError, match="already open"):
+        _adv(Partition(0.01), Partition(0.02))              # no Heal between
+    with pytest.raises(ValueError, match="no open Partition"):
+        _adv(Heal(0.01))
+
+
+def test_validation_rejects_malformed_gray_links():
+    with pytest.raises(ValueError, match="out of range"):
+        _adv(GrayLink(0.01, "replica:7", "*", drop_prob=0.1))
+    with pytest.raises(ValueError, match="bad gray-link endpoint"):
+        _adv(GrayLink(0.01, "router:0", "*", drop_prob=0.1))
+    with pytest.raises(ValueError, match="must be finite"):
+        _adv(GrayLink(0.01, delay_mu=-1e-3))
+    with pytest.raises(ValueError, match="outside \\[0, 1\\]"):
+        _adv(GrayLink(0.01, drop_prob=1.5))
+    with pytest.raises(ValueError, match="no effect"):
+        _adv(GrayLink(0.01))                                # all-zero fault
+    with pytest.raises(ValueError, match="matches no open GrayLink"):
+        _adv(GrayLink(0.01, "replica:0", "*", drop_prob=0.1),
+             GrayClear(0.02, "replica:1", "*"))
+    with pytest.raises(ValueError, match="no open GrayLink"):
+        _adv(GrayClear(0.01))
+
+
+def test_validation_rejects_malformed_byzantine_faults():
+    with pytest.raises(ValueError, match="proxy_id=9 out of range"):
+        _adv(SkewedStamper(0.01, proxy_id=9, bias=1e-4))
+    with pytest.raises(ValueError, match="bias must be finite"):
+        _adv(SkewedStamper(0.01, proxy_id=0, bias=float("nan")))
+    with pytest.raises(ValueError, match="rid=3 out of range"):
+        _adv(LossyAcker(0.01, rid=3))
+
+
+def test_adversarial_catalog_pairs_every_fault_with_an_invariant():
+    from repro.sim.trace import ADVERSARIAL_CHECKS
+
+    assert len(ADVERSARIAL_SCENARIOS) == 6
+    for name in ADVERSARIAL_SCENARIOS:
+        sc = get_scenario(name)
+        assert sc.faults, name
+        assert sc.invariant in ADVERSARIAL_CHECKS, name
+        ctl = sc.control()
+        assert ctl.faults == () and ctl.invariant is None
+        assert ctl.name == f"{name}-control"

@@ -17,8 +17,12 @@ from repro.sim.trace import (
     assert_trace_ok,
     check_at_most_once,
     check_deadline_order,
+    check_durability,
     check_durable_log,
     check_equivalent_commits,
+    check_partition_liveness,
+    check_split_brain,
+    check_stamp_bias,
     check_trace,
     run_scenario_with_trace,
 )
@@ -425,3 +429,97 @@ def test_crash_during_stall_keeps_requests_pending_not_burning_retries():
     s = cl.summary()
     assert s["committed"] == 20
     assert s["view_changes"] == 1
+
+
+# ---------------------------------------------------------------------------
+# adversarial-checker teeth (PR 8): corrupt a RECORDED partition trace and
+# assert each new checker catches exactly its own corruption -- the split
+# brain it's shown, not the durability hole next to it, and vice versa
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def partition_trace():
+    """One real leader-minority-partition run (numpy tier), with per-replica
+    log views materialized from the recorded shared log (what each honest
+    vectorized replica durably holds), checked clean once."""
+    _, tr = run_scenario_with_trace(
+        "nezha-vectorized", get_scenario("leader-minority-partition"))
+    tr.replica_logs = {
+        r: {"cid": tr.log["cid"].copy(), "rid": tr.log["rid"].copy()}
+        for r in range(3)}
+    assert tr.net_windows and tr.log["cid"].size > 100
+    assert check_split_brain(tr) == []
+    assert check_durability(tr) == []
+    assert check_partition_liveness(tr) != []    # the paired invariant fires
+    return tr
+
+
+def _copy_adv(tr: CommitTrace) -> CommitTrace:
+    return CommitTrace(
+        protocol=tr.protocol, backend=tr.backend, tier=tr.tier,
+        log={c: a.copy() for c, a in tr.log.items()},
+        commits={c: a.copy() for c, a in tr.commits.items()},
+        order_scope=tr.order_scope,
+        stamps={c: a.copy() for c, a in tr.stamps.items()},
+        durability=[dict(ev) for ev in tr.durability],
+        replica_logs={r: {c: a.copy() for c, a in v.items()}
+                      for r, v in tr.replica_logs.items()},
+        net_windows=[dict(w) for w in tr.net_windows])
+
+
+def test_injected_split_brain_caught_by_split_brain_checker_only(
+        partition_trace):
+    """Rewriting one replica's durable entry at a shared position is the
+    split-brain signature; only check_split_brain may fire on it."""
+    tr = _copy_adv(partition_trace)
+    tr.replica_logs[1]["cid"][50] += 1000       # conflicting entry at pos 50
+    v = check_split_brain(tr)
+    assert len(v) == 2                          # replica 1 vs both others
+    assert all("conflicting entries" in m and "index 50" in m for m in v)
+    assert check_durability(tr) == []           # not its corruption
+    assert check_stamp_bias(tr) == []
+
+
+def test_injected_durability_hole_caught_by_durability_checker_only(
+        partition_trace):
+    """An acked-but-unpersisted suffix recorded at crash time is the
+    LossyAcker signature; only check_durability may fire on it."""
+    tr = _copy_adv(partition_trace)
+    tr.durability.append({"replica": 2, "acked": 120, "persisted": 40,
+                          "missing": 80, "uids": np.arange(80, dtype=np.int64)})
+    v = check_durability(tr)
+    assert len(v) == 1
+    assert "replica 2 acked 120" in v[0] and "80 lost" in v[0]
+    assert check_split_brain(tr) == []          # logs untouched
+    assert check_stamp_bias(tr) == []
+
+
+def test_injected_stamp_bias_caught_by_stamp_checker_only(partition_trace):
+    """A proxy whose deadline offsets sit far from the cross-proxy median
+    is the SkewedStamper signature; only check_stamp_bias may fire."""
+    tr = _copy_adv(partition_trace)
+    pid = np.repeat(np.arange(3, dtype=np.int64), 16)
+    doff = np.full(pid.size, 80e-6)
+    tr.stamps = {"pid": pid, "doff": doff.copy()}
+    assert check_stamp_bias(tr) == []           # unbiased: silent
+    doff[pid == 1] += 500e-6
+    tr.stamps["doff"] = doff
+    v = check_stamp_bias(tr)
+    assert len(v) == 1 and "proxy 1" in v[0]
+    assert check_split_brain(tr) == []
+    assert check_durability(tr) == []
+
+
+def test_partition_liveness_checker_is_silent_without_asymmetry(
+        partition_trace):
+    """Teeth in the other direction: grant the minority healthy in-window
+    progress and the recorded partition window stops firing."""
+    tr = _copy_adv(partition_trace)
+    assert check_partition_liveness(tr) != []
+    for w in tr.net_windows:
+        if w["kind"] == "partition":
+            t = tr.commits["t"]
+            w["minority_progress"] = int(
+                ((t >= w["t0"]) & (t < w["t1"])).sum())
+    assert check_partition_liveness(tr) == []
+    tr.net_windows = []                         # and with no windows at all
+    assert check_partition_liveness(tr) == []
