@@ -39,7 +39,13 @@ _WHILE_RE = re.compile(
 _TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
 _SHAPE_TOK = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\]")
 _DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+)$")
-_DOT_ARGS = re.compile(r"\bdot\(\s*%?([\w.\-]+)\s*,\s*%?([\w.\-]+)")
+# operands may be printed bare (`dot(%a, %b)`) or typed
+# (`dot(f32[16,32]{1,0} %a, ...)`) depending on the HLO printer version;
+# skip the optional `dtype[dims]{layout}` prefix before the operand name
+_HLO_TYPE = r"(?:[a-z][a-z0-9]*\[[0-9,]*\](?:\{[^}]*\})?\s+)?"
+_DOT_ARGS = re.compile(
+    r"\bdot\(\s*" + _HLO_TYPE + r"%?([\w.\-]+)\s*,\s*"
+    + _HLO_TYPE + r"%?([\w.\-]+)")
 _LHS_CDIMS = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
 
 

@@ -17,7 +17,12 @@ plus the Pallas kernel wrappers -- and walks the jaxprs:
   TS003  shape stability: fused tiers must pad epoch batches to pow2
          buckets, and the worst-case compile count across the scenario
          catalog (specialization keys x pow2 buckets x K-epoch scan
-         buckets) must stay bounded.
+         buckets) must stay bounded. The sharded backend adds a G axis:
+         each distinct group count reachable by a cataloged sharded
+         scenario is one more leading-dim shape of the vmapped group
+         program (`ShardedNezhaCluster` always dispatches all G groups,
+         so G is config-static, and its groups share ONE tier instance,
+         so the per-group fused programs compile once -- not G times).
 """
 from __future__ import annotations
 
@@ -287,6 +292,12 @@ def check_compile_stability(scenarios: Iterable = None) -> list[Finding]:
     # epochs-per-dispatch setting can reach is a distinct scan program
     # (the scan length is a static shape axis of its stacked operands)
     k_buckets: set[int] = {1}
+    # the G axis: every distinct group count a sharded scenario can reach
+    # is one leading-dim variant of the vmapped group program (all-groups
+    # dispatch makes G config-static; the G=1/sequential paths reuse the
+    # tier's own fused step, shared across groups via the one tier
+    # instance, so only G > 1 adds programs)
+    g_buckets: set[int] = set()
     for sc in scenarios:
         n_max = _pow2_bucket(_scenario_batch_estimate(sc))
         b = 1
@@ -305,6 +316,11 @@ def check_compile_stability(scenarios: Iterable = None) -> list[Finding]:
         spec_keys.add((sc.f, use_kcls, use_cap, False))
         if has_pair:
             spec_keys.add((sc.f, use_kcls, use_cap, True))
+        g = int(getattr(sc, "groups", 1) or 1)
+        if g > 1:
+            g_buckets.add(g)
+            # the vmapped group program: same epoch body, leading G axis
+            spec_keys.add((sc.f, use_kcls, use_cap, False, g))
         epd = int(sc.overrides.get("epochs_per_dispatch", 1) or 1)
         k_buckets.update(k for k in SCAN_K_BUCKETS if k <= epd)
     worst = len(buckets) * len(spec_keys) * len(k_buckets)
@@ -315,11 +331,13 @@ def check_compile_stability(scenarios: Iterable = None) -> list[Finding]:
             message=f"catalog sweep worst-case compile count {worst} "
                     f"({len(spec_keys)} specialization keys x "
                     f"{len(buckets)} pow2 buckets x "
-                    f"{len(k_buckets)} K buckets) exceeds "
+                    f"{len(k_buckets)} K buckets; G buckets "
+                    f"{sorted(g_buckets) or [1]}) exceeds "
                     f"{COMPILE_LIMIT}",
             extra={"buckets": sorted(buckets),
-                   "keys": sorted(spec_keys),
-                   "k_buckets": sorted(k_buckets)}))
+                   "keys": sorted(spec_keys, key=str),
+                   "k_buckets": sorted(k_buckets),
+                   "g_buckets": sorted(g_buckets)}))
     return findings
 
 

@@ -105,6 +105,9 @@ PENDING_DTYPE = np.dtype([
     ("rid", np.int64),       # per-client request id
     ("kcls", np.int64),      # interned commutativity class (-1 = global)
     ("tries", np.int64),     # completed attempts (retry model)
+    ("dl", np.float64),      # pre-stamped deadline (0.0 = stamp normally;
+    #   > 0 = the sharded multi-op layer fixed this entry's global deadline
+    #   before routing, so every group orders it at the same slot)
 ])
 
 
@@ -133,9 +136,11 @@ class PendingBuffer:
             self._buf = grown
 
     def append(self, t: float, cid: int, rid: int, kcls: int,
-               t0: Optional[float] = None, tries: int = 0) -> None:
+               t0: Optional[float] = None, tries: int = 0,
+               dl: float = 0.0) -> None:
         self._reserve(self._n + 1)
-        self._buf[self._n] = (t, t if t0 is None else t0, cid, rid, kcls, tries)
+        self._buf[self._n] = (t, t if t0 is None else t0, cid, rid, kcls,
+                              tries, dl)
         self._n += 1
 
     def extend(self, rows: np.ndarray) -> None:
@@ -148,6 +153,14 @@ class PendingBuffer:
         if self._n == 0:
             return np.inf
         return float(self._buf["t"][: self._n].min())
+
+    def has_prestamped(self) -> bool:
+        """Any pending entry carrying a pre-stamped deadline (dl > 0)?
+        Such epochs need the per-epoch step program (it takes the extra
+        pre_dl operand); the scan fast path excludes them."""
+        if self._n == 0:
+            return False
+        return bool((self._buf["dl"][: self._n] > 0).any())
 
     def pop_due(self, horizon: float) -> np.ndarray:
         """Remove and return all entries with t <= horizon, time-sorted."""
@@ -170,6 +183,13 @@ class PendingBuffer:
         view = self._buf[: self._n]
         return np.isin(pack_uids(view["cid"], view["rid"]),
                        pack_uids(cid, rid))
+
+    def uids(self) -> np.ndarray:
+        """Packed uids of every pending attempt (sharded abandonment
+        accounting: a request neither committed nor pending anywhere was
+        given up on)."""
+        view = self._buf[: self._n]
+        return pack_uids(view["cid"], view["rid"])
 
     def pop_uids(self, cid: np.ndarray, rid: np.ndarray) -> np.ndarray:
         """Remove and return the pending attempts of the given requests
@@ -598,7 +618,7 @@ def _build_epoch_body(tier: ComputeTier, f: int, use_kcls: bool,
     def body(pool, ptr, cnt, t, c2p, owd_pr, drop_pr, reply_owd, alive,
              kcls, leader, n_valid, pq01, margin, clamp_d, batch_delay, cap,
              floor, dies_at=None, stamp_off=None, arr_off=None,
-             pair_drop=None, pair_delay=None):
+             pair_drop=None, pair_delay=None, pre_dl=None):
         N, R = owd_pr.shape
         # Per-pair network-fault operands (Partition / GrayLink): extra
         # delay joins the effective OWD BEFORE anything observes it -- the
@@ -630,6 +650,13 @@ def _build_epoch_body(tier: ComputeTier, f: int, use_kcls: bool,
         deadlines = stamp + bound
         if stamp_off is not None:
             deadlines = deadlines + stamp_off
+        if pre_dl is not None:
+            # Sharded multi-op entries carry a pre-stamped global deadline
+            # (dl > 0): the proxy forwards it untouched so every involved
+            # group orders the op at the identical synchronized-time slot.
+            # The override is LAST -- the deadline was fixed client-side, so
+            # proxy-clock error does not re-bias it. 0.0 = stamp normally.
+            deadlines = jnp.where(pre_dl > 0, pre_dl, deadlines)
         arrivals = jnp.where(drop_eff | ~alive[None, :], jnp.inf,
                              stamp[:, None] + owd_eff)
         # recovery stall: nothing releases before `floor` (StartView); a zero
@@ -729,13 +756,13 @@ def _build_fused_step(tier: ComputeTier, f: int, use_kcls: bool,
     def step(pool, ptr, cnt, t, c2p, owd_pr, drop_pr, reply_owd, alive,
              kcls, leader, n_valid, pq01, margin, clamp_d, batch_delay, cap,
              floor, dies_at=None, stamp_off=None, arr_off=None,
-             pair_drop=None, pair_delay=None):
+             pair_drop=None, pair_delay=None, pre_dl=None):
         carry, outs = body(pool, ptr, cnt, t, c2p, owd_pr, drop_pr,
                            reply_owd, alive, kcls, leader, n_valid, pq01,
                            margin, clamp_d, batch_delay, cap, floor,
                            dies_at=dies_at, stamp_off=stamp_off,
                            arr_off=arr_off, pair_drop=pair_drop,
-                           pair_delay=pair_delay)
+                           pair_delay=pair_delay, pre_dl=pre_dl)
         return outs + carry
 
     return step
@@ -821,6 +848,10 @@ class EpochState:
     # effects are folded into reply_owd directly -- pure data, no operand.
     pair_drop: Optional[np.ndarray] = None    # [N, R] extra drops (bool)
     pair_delay: Optional[np.ndarray] = None   # [N, R] extra path delay (s)
+    # Pre-stamped deadlines (sharded MultiOp entries; None = all stamped
+    # normally). Where > 0, the value REPLACES the proxy-computed deadline
+    # after all stamping/offset math -- the cross-group global slot.
+    pre_deadline: Optional[np.ndarray] = None  # [N] fixed deadlines (0=none)
     # StampStage
     bound: float = 0.0                  # DOM latency bound this epoch
     stamp: Optional[np.ndarray] = None  # [N] proxy stamp times
@@ -964,6 +995,12 @@ class StampStage(Stage):
             # The proxy stamps with its LOCAL clock: the deadline value each
             # message carries absorbs the proxy's read error.
             s.deadlines = s.deadlines + s.clock_stamp_off
+        if s.pre_deadline is not None:
+            # Sharded MultiOp entries: the client-side layer fixed these
+            # deadlines before routing; the proxy forwards them untouched
+            # (override LAST -- mirrors the fused body's pre_dl branch).
+            s.deadlines = np.where(s.pre_deadline > 0, s.pre_deadline,
+                                   s.deadlines)
         # owd_eff mirrors the fused body: pair_delay (GrayLink) joins the
         # path BEFORE the stamp adds on, keeping the summation order -- and
         # hence the bits -- identical to `stamp[:, None] + owd_eff` there.
@@ -1091,6 +1128,12 @@ class FusedEpochStage(Stage):
             pair_delay[:N] = s.pair_delay
             fault_kw["pair_drop"] = pair_drop
             fault_kw["pair_delay"] = pair_delay
+        if s.pre_deadline is not None:
+            # pre-stamped multi-op deadlines: pad lanes carry the 0.0
+            # sentinel (= stamp normally), staying invisible
+            pre_dl = np.zeros(n_pad)
+            pre_dl[:N] = s.pre_deadline
+            fault_kw["pre_dl"] = pre_dl
         cap = float(getattr(cfg, "deadline_cap", 0.0) or 0.0)
         step = eng.tier.epoch_step(cfg.f, use_kcls=s.kcls is not None,
                                    use_cap=cap > 0.0)
@@ -1712,6 +1755,11 @@ class DomEngine:
             release_floor=float(release_floor),
             dies_at=dies_at,
         )
+        dl = np.ascontiguousarray(due["dl"])
+        if (dl > 0).any():
+            # only multi-op-carrying epochs pay the pre_dl operand; all
+            # others keep the unmodified (scan-eligible) program shape
+            s.pre_deadline = dl
         for stage in self.stages:
             stage.run(s, self)
         check = getattr(self.tier, "check_epoch", None)
@@ -1740,7 +1788,10 @@ class DomEngine:
         from jax.experimental import enable_x64
 
         if not self.tier.fused or self.clocks_faulty or self.pairs_faulty \
-                or self.stampers_biased:
+                or self.stampers_biased \
+                or any(d.size and (d["dl"] > 0).any() for d in dues):
+            # (pre-stamped multi-op deadlines need the per-epoch step
+            # program's pre_dl operand; the scan variant never carries it)
             return [self.run_epoch(d, alive, leader, release_floor)
                     if d.size else None for d in dues]
         sample = next((st for st in self.stages

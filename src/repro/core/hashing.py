@@ -133,6 +133,40 @@ class PerKeyHashTable:
 
 
 # ---------------------------------------------------------------------------
+# key -> group routing (sharded Nezha)
+# ---------------------------------------------------------------------------
+_GROUP_SALT = np.uint64(0xC0FFEE5EED5EED00)
+
+
+def key_group_np(keys: np.ndarray, n_groups: int) -> np.ndarray:
+    """Deterministic key -> consensus-group routing for sharded Nezha.
+
+    Routes through the same splitmix64 mix the set hashes use -- NOT the
+    builtin ``hash()``, whose value varies with PYTHONHASHSEED -- so the
+    assignment is identical across processes, restarts, and platforms.
+    The salt decorrelates routing from the entry-hash algebra (a key's
+    group says nothing about its log hash). ``n_groups`` = 1 maps all keys
+    to group 0 (the unsharded identity).
+    """
+    if n_groups < 1:
+        raise ValueError(f"n_groups must be >= 1, got {n_groups}")
+    keys = np.asarray(keys, dtype=np.uint64)
+    if n_groups == 1:
+        return np.zeros(keys.shape, dtype=np.int64)
+    h = _splitmix64_np(keys ^ _GROUP_SALT)
+    # 64x32-bit multiply-shift range reduction: unbiased enough for routing
+    # and avoids the modulo's low-bit correlation with sequential keys.
+    with np.errstate(over="ignore"):
+        g = (h >> np.uint64(32)) * np.uint64(n_groups) >> np.uint64(32)
+    return g.astype(np.int64)
+
+
+def key_group(key: int, n_groups: int) -> int:
+    """Scalar convenience form of `key_group_np`."""
+    return int(key_group_np(np.uint64(key), n_groups))
+
+
+# ---------------------------------------------------------------------------
 # 32-bit path (JAX + Pallas; TPU has no native 64-bit integer datapath)
 # ---------------------------------------------------------------------------
 _MASK32 = np.uint32(0xFFFFFFFF)
@@ -194,6 +228,8 @@ if jnp is not None:
 __all__ = [
     "entry_hash_np",
     "fold_hashes_np",
+    "key_group_np",
+    "key_group",
     "crash_vector_hash_np",
     "IncrementalHash",
     "PerKeyHashTable",

@@ -15,6 +15,10 @@ Registered names
   nezha-vectorized-jit      same engine, fused-jit DOM tier
   nezha-vectorized-pallas   same engine, Pallas dom_release kernel tier
                             (interpret mode off-TPU)
+  nezha-sharded      `ShardedNezhaCluster` -- G independent Nezha groups
+                     over one key space (ShardedConfig(groups=...)); stable
+                     key->group routing, cross-group multi-key ops in
+                     global deadline order, optional vmapped group dispatch
   multipaxos, raft, fastpaxos, nopaxos, nopaxos-optim, domino,
   toq-epaxos, unreplicated          -- the S9/S10 baselines
 
@@ -32,6 +36,7 @@ from typing import Callable, Optional
 from repro.core.baselines import PROTOCOLS, BaselineConfig
 from repro.core.cluster import Cluster, CommonConfig
 from repro.core.protocol import ClusterConfig, NezhaCluster
+from repro.core.sharded import ShardedConfig, ShardedNezhaCluster
 from repro.core.vectorized_cluster import VectorizedConfig, VectorizedNezhaCluster
 
 
@@ -128,6 +133,7 @@ register_cluster("nezha-vectorized-jit", VectorizedConfig,
                  _make_vectorized_tier("jit"))
 register_cluster("nezha-vectorized-pallas", VectorizedConfig,
                  _make_vectorized_tier("pallas"))
+register_cluster("nezha-sharded", ShardedConfig, ShardedNezhaCluster)
 for _name, _cls in PROTOCOLS.items():
     register_cluster(_name, BaselineConfig, _cls)
 

@@ -15,7 +15,10 @@ finished `EpochState` -- the runtime complement to the static linter
     (the paper's DOM guarantee) -- capped leader entries (SD.2.4) are the
     documented exception and are exempted exactly as `_apply_deadline_cap`
     computes them;
-  * commit sanity: committed ⟺ finite commit time; fast ⟹ committed.
+  * commit sanity: committed ⟺ finite commit time; fast ⟹ committed;
+  * pre-stamped deadline preservation: an entry carrying a fixed global
+    deadline (a sharded MultiOp sub-entry) keeps it bit-for-bit -- stamping
+    must never re-derive it, or the cross-group atomic-order guarantee dies.
 
 The wrapper is PURE delegation -- every compute call goes to the inner tier
 untouched, `name` reports the inner tier's name, and the fused-step cache
@@ -160,6 +163,19 @@ class SanitizerTier(ComputeTier):
                     bad.append(f"receiver {r}: release order violates "
                                "deadline order "
                                f"({int((np.diff(ds) < 0).sum())} pair(s))")
+
+        # pre-stamped deadline preservation: the dl > 0 override is applied
+        # LAST in every tier, so the finished deadline must be the fixed
+        # global value EXACTLY (bitwise) -- this is what makes a MultiOp's
+        # sub-entries sequence at the same slot in every involved group
+        if s.pre_deadline is not None:
+            fixed = s.pre_deadline > 0.0
+            wrong = fixed & (d != s.pre_deadline)
+            if wrong.any():
+                bad.append(
+                    f"{int(wrong.sum())} pre-stamped entr(ies) stamped off "
+                    "their fixed global deadline (max |err| = "
+                    f"{float(np.max(np.abs(d[wrong] - s.pre_deadline[wrong]))):.3e})")
 
         if s.committed is not None and s.commit_time is not None:
             if (s.committed != np.isfinite(s.commit_time)).any():

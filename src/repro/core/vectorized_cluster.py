@@ -220,13 +220,25 @@ class VectorizedNezhaCluster(Cluster):
     def submit(self, client_id: int = 0, request_id: Optional[int] = None,
                keys: tuple = (), op=None, command=None) -> tuple[int, int]:
         return self.submit_at(self._now, client_id, keys=keys, op=op,
-                              command=command)
+                              command=command, request_id=request_id)
 
     def submit_at(self, t: float, client_id: int = 0, keys: tuple = (),
-                  op=None, command=None) -> tuple[int, int]:
-        rid = self._next_rid[client_id]
-        self._next_rid[client_id] = rid + 1
-        self._pending.append(t, client_id, rid, self._key_class(keys))
+                  op=None, command=None, request_id: Optional[int] = None,
+                  deadline: float = 0.0) -> tuple[int, int]:
+        # Explicit request ids come from a routing layer (nezha-sharded)
+        # that owns the global uid space: honor them and keep the internal
+        # counter ahead so mixed explicit/implicit submissions never
+        # collide. ``deadline`` > 0 pre-stamps the entry's DOM deadline
+        # (the sharded MultiOp global slot); 0.0 = proxy stamps normally.
+        if request_id is None:
+            rid = self._next_rid[client_id]
+            self._next_rid[client_id] = rid + 1
+        else:
+            rid = int(request_id)
+            self._next_rid[client_id] = max(self._next_rid[client_id],
+                                            rid + 1)
+        self._pending.append(t, client_id, rid, self._key_class(keys),
+                             dl=float(deadline))
         self._n_requests += 1          # counted once; retries are not requests
         return (client_id, rid)
 
@@ -625,7 +637,8 @@ class VectorizedNezhaCluster(Cluster):
         k_max = int(getattr(cfg, "epochs_per_dispatch", 1))
         if k_max < min(SCAN_K_BUCKETS) or not self.engine.tier.fused \
                 or self.on_commit is not None or self.engine.clocks_faulty \
-                or self.engine.pairs_faulty or self.engine.stampers_biased:
+                or self.engine.pairs_faulty or self.engine.stampers_biased \
+                or self._pending.has_prestamped():
             return 0
         t_min = self._pending.min_time()
         retry_closed = t_min + cfg.client_timeout
@@ -659,21 +672,7 @@ class VectorizedNezhaCluster(Cluster):
                                               self._release_floor)
         for due, s in zip(dues, states):
             if s is not None:
-                self._batches += 1
-                fin = np.isfinite(s.stamp)
-                self._trace_stamps.append(
-                    (s.cid[fin] % self.cfg.n_proxies,
-                     s.deadlines[fin] - s.stamp[fin]))
-                self._latencies.append(s.latency[s.delivered])
-                self._n_fast += int(np.sum(s.fast & s.delivered))
-                if s.delivered.any():
-                    idx = np.flatnonzero(s.delivered)
-                    self._trace_commits.append((
-                        s.commit_at_client[idx], s.cid[idx], s.rid[idx],
-                        (s.fast & s.delivered)[idx],
-                        np.zeros(idx.size, bool)))
-                if not s.delivered.all():
-                    self._retry(due[~s.delivered])
+                self._absorb_epoch_state(due, s)
             self._last_leader = leader
             self.epoch_leaders.append(leader)
             self._epochs += 1
@@ -711,6 +710,40 @@ class VectorizedNezhaCluster(Cluster):
         failed["t"] += self.cfg.client_timeout
         self._pending.extend(failed)
 
+    def _absorb_epoch_state(self, due: np.ndarray, s) -> None:
+        """Per-epoch client bookkeeping shared by the sequential, K-scan,
+        and sharded group-vmapped dispatch paths: stamp audit, latency and
+        fast-path accounting, the commit trace, retries, and closed-loop
+        callbacks. Identical order of operations on every path (bit parity).
+        """
+        self._batches += 1
+        # stamp audit for check_stamp_bias: per-message (proxy id,
+        # deadline - true stamp instant) = bound (+ bias + clock error);
+        # attempts whose client leg was dropped never got stamped
+        fin = np.isfinite(s.stamp)
+        self._trace_stamps.append(
+            (s.cid[fin] % self.cfg.n_proxies,
+             s.deadlines[fin] - s.stamp[fin]))
+        self._latencies.append(s.latency[s.delivered])
+        self._n_fast += int(np.sum(s.fast & s.delivered))
+        if s.delivered.any():
+            idx = np.flatnonzero(s.delivered)
+            self._trace_commits.append((
+                s.commit_at_client[idx], s.cid[idx], s.rid[idx],
+                (s.fast & s.delivered)[idx], np.zeros(idx.size, bool)))
+        if not s.delivered.all():
+            self._retry(due[~s.delivered])
+        if self.on_commit is not None and s.delivered.any():
+            idx = np.flatnonzero(s.delivered)
+            idx = idx[np.argsort(s.commit_at_client[idx], kind="stable")]
+            t_save = self._now
+            for i in idx:
+                # callbacks observe the commit's client-side time, so a
+                # closed-loop resubmission is stamped when the reply lands
+                self._now = float(s.commit_at_client[i])
+                self.on_commit(int(s.cid[i]), int(s.rid[i]))
+            self._now = t_save
+
     def _run_epoch_batches(self, epoch_end: float, leader: int,
                            dies_at: Optional[np.ndarray] = None) -> None:
         """Flush pending work due by ``epoch_end``; commit-triggered
@@ -719,35 +752,9 @@ class VectorizedNezhaCluster(Cluster):
             due = self._pending.pop_due(epoch_end)
             if due.size == 0:
                 return
-            self._batches += 1
             s = self.engine.run_epoch(due, self._alive, leader,
                                       self._release_floor, dies_at=dies_at)
-            # stamp audit for check_stamp_bias: per-message (proxy id,
-            # deadline - true stamp instant) = bound (+ bias + clock error);
-            # attempts whose client leg was dropped never got stamped
-            fin = np.isfinite(s.stamp)
-            self._trace_stamps.append(
-                (s.cid[fin] % self.cfg.n_proxies,
-                 s.deadlines[fin] - s.stamp[fin]))
-            self._latencies.append(s.latency[s.delivered])
-            self._n_fast += int(np.sum(s.fast & s.delivered))
-            if s.delivered.any():
-                idx = np.flatnonzero(s.delivered)
-                self._trace_commits.append((
-                    s.commit_at_client[idx], s.cid[idx], s.rid[idx],
-                    (s.fast & s.delivered)[idx], np.zeros(idx.size, bool)))
-            if not s.delivered.all():
-                self._retry(due[~s.delivered])
-            if self.on_commit is not None and s.delivered.any():
-                idx = np.flatnonzero(s.delivered)
-                idx = idx[np.argsort(s.commit_at_client[idx], kind="stable")]
-                t_save = self._now
-                for i in idx:
-                    # callbacks observe the commit's client-side time, so a
-                    # closed-loop resubmission is stamped when the reply lands
-                    self._now = float(s.commit_at_client[i])
-                    self.on_commit(int(s.cid[i]), int(s.rid[i]))
-                self._now = t_save
+            self._absorb_epoch_state(due, s)
 
     @property
     def view_changes(self) -> int:

@@ -321,6 +321,26 @@ class LossyAcker(FaultEvent):
     kind = "lossy-acker"
 
 
+@dataclass(frozen=True)
+class GroupFault:
+    """Address a fault event to ONE consensus group of a sharded backend
+    (``nezha-sharded``): the wrapped ``event`` is scheduled on group
+    ``group`` with group-local replica/proxy ids. Backends without groups
+    cannot model it (skipped-and-counted, like any unsupported event).
+
+    Not a `FaultEvent` subclass -- the timestamp belongs to the wrapped
+    event; ``t`` delegates so schedule sorting and horizon validation see
+    the inner time."""
+
+    group: int
+    event: FaultEvent
+    kind = "group-fault"
+
+    @property
+    def t(self) -> float:
+        return self.event.t
+
+
 NET_FAULT_KINDS = ("partition", "heal", "gray-link", "gray-clear")
 
 
@@ -394,6 +414,11 @@ class Scenario:
     seed: int = 0
     overrides: dict = field(default_factory=dict)
     description: str = ""
+    # Consensus groups (sharded Nezha): > 1 targets the `nezha-sharded`
+    # backend, whose config declares the knob; single-group backends simply
+    # never see it (build_config's field-matching rule). Fault events
+    # address groups via `GroupFault`.
+    groups: int = 1
     # Name of the `repro.sim.trace` detection invariant paired with this
     # scenario's fault schedule (key into trace.ADVERSARIAL_CHECKS), or None.
     # tests/test_adversarial.py asserts the paired invariant fires on the
@@ -429,6 +454,15 @@ def _validate_scenario(sc: Scenario) -> None:
     errs: list[str] = []
     if sc.f < 1:
         errs.append(f"f={sc.f}: Nezha needs f >= 1 (2f+1 replicas)")
+    if sc.groups < 1:
+        errs.append(f"groups={sc.groups}: needs >= 1 consensus group")
+    w = sc.workload
+    if not (0.0 <= w.multiop_ratio <= 1.0):
+        errs.append(f"workload multiop_ratio={w.multiop_ratio!r} "
+                    "outside [0, 1]")
+    if w.multiop_ratio > 0.0 and w.multiop_span < 2:
+        errs.append(f"workload multiop_span={w.multiop_span} < 2: a "
+                    "multi-key op needs at least two keys")
     n = 2 * sc.f + 1
     n_over = sc.overrides.get("n_replicas")
     if n_over is not None and n_over < n:
@@ -459,6 +493,21 @@ def _validate_scenario(sc: Scenario) -> None:
             errs.append(f"{tag} outside the run horizon [0, {horizon!r}] "
                         "(duration + drain): it would never fire")
         kind = getattr(ev, "kind", "abstract")
+        if kind == "group-fault":
+            # validated against the scenario's group count and GROUP-LOCAL
+            # replica ids; the wrapped event is checked for basic sanity
+            # only (per-group crash/relaunch pairing is not tracked here)
+            if not (0 <= ev.group < sc.groups):
+                errs.append(f"{tag}: group={ev.group} out of range for "
+                            f"{sc.groups} group(s)")
+            inner = getattr(ev, "event", None)
+            ikind = getattr(inner, "kind", "abstract")
+            if ikind in ("crash", "relaunch"):
+                rid = getattr(inner, "rid", 0)
+                if not (0 <= rid < n):
+                    errs.append(f"{tag}: group-local rid={rid} out of range "
+                                f"for 2f+1 = {n} replicas per group")
+            continue
         if kind == "partition":
             if partition_open:
                 errs.append(f"{tag}: a partition is already open "
@@ -556,6 +605,8 @@ SCENARIO_RESULT_KEYS = (
     "throughput", "epochs", "view_changes", "recovered_entries",
     "dropped_speculative", "applied_faults", "skipped_faults",
     "partition_epochs", "gray_link_epochs", "invariant_violations",
+    "groups", "per_group_view_changes", "cross_group_ops",
+    "cross_group_violations",
 )
 
 
@@ -606,7 +657,29 @@ class ScenarioResult:
     partition_epochs: int = 0
     gray_link_epochs: int = 0
     invariant_violations: int = 0
+    # Sharded-backend extras (single-group backends report the identity:
+    # one group, its own view-change count, no cross-group ops).
+    # ``cross_group_violations`` counts findings of the cross-group
+    # linearizability checker specifically (subset of
+    # ``invariant_violations``; filled by `run_scenario_with_trace`).
+    groups: int = 1
+    per_group_view_changes: list = field(default_factory=list)
+    cross_group_ops: int = 0
+    cross_group_violations: int = 0
     raw: dict = field(default_factory=dict, repr=False)
+
+    def __post_init__(self):
+        if self.groups < 1:
+            raise ValueError(f"groups={self.groups}: needs >= 1")
+        if not self.per_group_view_changes:
+            self.per_group_view_changes = [int(self.view_changes)] \
+                if self.groups == 1 else [0] * self.groups
+        if len(self.per_group_view_changes) != self.groups:
+            raise ValueError(
+                f"per_group_view_changes has {len(self.per_group_view_changes)}"
+                f" entries for {self.groups} group(s)")
+        if self.cross_group_ops < 0 or self.cross_group_violations < 0:
+            raise ValueError("cross-group counters must be >= 0")
 
     @classmethod
     def from_summary(cls, scenario: Scenario, summary: dict,
@@ -632,6 +705,12 @@ class ScenarioResult:
             partition_epochs=int(summary.get("partition_epochs", 0)),
             gray_link_epochs=int(summary.get("gray_link_epochs", 0)),
             invariant_violations=int(summary.get("invariant_violations", 0)),
+            groups=int(summary.get("groups", 1)),
+            per_group_view_changes=[
+                int(v) for v in summary.get("per_group_view_changes", [])],
+            cross_group_ops=int(summary.get("cross_group_ops", 0)),
+            cross_group_violations=int(
+                summary.get("cross_group_violations", 0)),
             raw=dict(summary),
         )
 
@@ -809,6 +888,29 @@ SCENARIOS: dict[str, Scenario] = {
                  description="proxy 1 stamps deadlines 400us late; the "
                              "per-proxy deadline-offset estimator flags it "
                              "far beyond clock-sync error"),
+        # ------------------------------------------------------------------
+        # Sharded family (nezha-sharded): multi-group key-space sharding.
+        # Both reuse the standard rate and G=4 groups; the multi-key
+        # scenario's invariant is the cross-group linearizability checker.
+        # ------------------------------------------------------------------
+        Scenario("sharded-multi-key", groups=4,
+                 workload=Workload(mode="open", rate_per_client=2000.0,
+                                   duration=0.15, warmup=0.02, drain=0.1,
+                                   seed=0, multiop_ratio=0.15,
+                                   multiop_span=3),
+                 invariant="cross-group",
+                 description="G=4 groups over one key space; 15% of ops "
+                             "span several groups and must commit "
+                             "atomically in global deadline order with no "
+                             "cross-group coordination round"),
+        Scenario("sharded-group-crash", groups=4,
+                 faults=(GroupFault(1, Crash(0.08, rid=0)),),
+                 workload=Workload(mode="open", rate_per_client=2000.0,
+                                   duration=0.25, warmup=0.02, drain=0.15,
+                                   seed=0, read_ratio=0.0, skew=0.0),
+                 description="group 1's leader dies mid-run: that group "
+                             "view-changes and recovers while the other "
+                             "three keep committing undisturbed"),
         Scenario("ack-without-persist",
                  faults=(LossyAcker(0.03, rid=2),
                          Crash(0.09, rid=2),
@@ -826,6 +928,9 @@ ADVERSARIAL_SCENARIOS = (
     "leader-minority-partition", "split-brain-attempt", "flapping-links",
     "slow-but-alive-replica", "skewed-proxy", "ack-without-persist",
 )
+
+# The sharded family, in catalog order (tests + the sharded CI job iterate).
+SHARDED_SCENARIOS = ("sharded-multi-key", "sharded-group-crash")
 
 
 def available_scenarios() -> tuple[str, ...]:
@@ -890,6 +995,11 @@ def build_config(protocol_name: str, scenario: Union[str, Scenario]):
     cls = config_class(protocol_name)
     cfg = cls(f=sc.f, n_clients=sc.n_clients, seed=sc.seed,
               net=env.net, clock=env.clock)
+    if sc.groups != 1:
+        # Only sharding-capable config families declare the knob; on any
+        # other backend a multi-group scenario runs its single-group
+        # projection (the workload and faults still apply).
+        _apply_override(cfg, "groups", sc.groups)
     merged = {**env.overrides, **sc.overrides}
     # `dom` first: later flat overrides (e.g. a scenario's deadline_cap) may
     # target the replica/dom params the dom override just installed.
@@ -904,6 +1014,11 @@ def build_config(protocol_name: str, scenario: Union[str, Scenario]):
 
 def _registry_name(protocol_name: str, tier: Optional[str]) -> str:
     if tier is None:
+        return protocol_name
+    if protocol_name == "nezha-sharded":
+        # The sharded backend has no tier-suffixed registry aliases; the
+        # tier is a ShardedConfig field, applied by make_scenario_cluster
+        # via config replace.
         return protocol_name
     base = "nezha-vectorized"
     resolved = base if tier == "numpy" else f"{base}-{tier}"
@@ -929,6 +1044,8 @@ def make_scenario_cluster(protocol_name: str, scenario: Union[str, Scenario],
     sc = resolve_scenario(scenario)
     name = _registry_name(protocol_name, tier)
     cfg = config if config is not None else build_config(name, sc)
+    if name == "nezha-sharded" and tier is not None and cfg.tier != tier:
+        cfg = replace(cfg, tier=tier)
     cluster = make_cluster(name, cfg, **kw)
     skipped = []
     for ev in sorted(sc.faults, key=lambda e: e.t):
@@ -972,9 +1089,9 @@ __all__ = [
     "NET_PROFILES", "CLOCK_REGIMES", "ENVIRONMENTS", "Environment",
     "FaultEvent", "Crash", "Relaunch", "ClockFault", "ClockClear", "NetShift",
     "Partition", "Heal", "GrayLink", "GrayClear", "SkewedStamper",
-    "LossyAcker", "NET_FAULT_KINDS",
+    "LossyAcker", "GroupFault", "NET_FAULT_KINDS",
     "Scenario", "ScenarioResult", "SCENARIO_RESULT_KEYS",
-    "SCENARIOS", "ADVERSARIAL_SCENARIOS",
+    "SCENARIOS", "ADVERSARIAL_SCENARIOS", "SHARDED_SCENARIOS",
     "available_scenarios", "get_scenario", "resolve_scenario",
     "build_config", "make_scenario_cluster", "run_scenario",
     "run_scenario_on_cluster",

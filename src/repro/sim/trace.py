@@ -47,6 +47,19 @@ scenario's ``invariant`` name to its checker):
                             gray window commit rate or fast-path health
                             collapses relative to clean operation.
 
+The sharded backend (PR 9) records a `ShardedTrace` -- one `CommitTrace`
+per consensus group plus the multi-op ground truth (which groups must hold
+each cross-group op, at which pre-stamped global deadline) -- and adds:
+
+  check_cross_group_linearizability
+                            cross-group atomicity + global deadline order
+                            for multi-key ops: no torn op (durable in some
+                            involved groups but not all), bit-equal logged
+                            deadline across groups (the one pre-stamped
+                            value), and consistent relative order agreeing
+                            with global deadline order wherever two
+                            multi-ops share >= 2 groups.
+
 Builders exist for both backends (`CommitTrace.from_cluster` dispatches),
 so every test tier and every cataloged scenario can assert through the same
 functions; `run_scenario_with_trace` is the one-call form benchmarks and CI
@@ -117,7 +130,9 @@ class CommitTrace:
 
     # -- builders -------------------------------------------------------------
     @classmethod
-    def from_cluster(cls, cluster) -> "CommitTrace":
+    def from_cluster(cls, cluster):
+        if cluster.backend == "sharded":
+            return ShardedTrace.from_sharded_cluster(cluster)
         if cluster.backend == "vectorized":
             return cls.from_vectorized_cluster(cluster)
         return cls.from_event_cluster(cluster)
@@ -217,6 +232,49 @@ class CommitTrace:
         return tr
 
 
+@dataclass
+class ShardedTrace:
+    """A sharded run's history: one `CommitTrace` per consensus group plus
+    the multi-op ground truth. Per-group invariants run on each group trace
+    unchanged; `check_cross_group_linearizability` consumes the whole."""
+
+    protocol: str
+    backend: str
+    tier: str
+    groups: list = field(default_factory=list)    # per-group CommitTrace
+    # packed uid -> {"groups": tuple, "deadline": float} for every op that
+    # spanned >= 2 groups (copied from the cluster's routing decisions)
+    multiops: dict = field(default_factory=dict)
+
+    @property
+    def label(self) -> str:
+        return f"{self.protocol}/{self.backend}/{self.tier}"
+
+    @property
+    def commit_uids(self) -> np.ndarray:
+        """Client-observed committed uids across all groups (a multi-op
+        counts once iff EVERY involved group delivered it)."""
+        if not self.groups:
+            return np.empty(0, np.int64)
+        u = np.concatenate([g.commit_uids for g in self.groups])
+        uniq, counts = np.unique(u, return_counts=True)
+        expected = np.asarray(
+            [len(self.multiops[int(x)]["groups"]) if int(x) in self.multiops
+             else 1 for x in uniq])
+        return uniq[counts >= expected]
+
+    @classmethod
+    def from_sharded_cluster(cls, cluster) -> "ShardedTrace":
+        return cls(
+            protocol=cluster.protocol, backend=cluster.backend,
+            tier=cluster.groups[0].engine.tier.name,
+            groups=[CommitTrace.from_vectorized_cluster(g)
+                    for g in cluster.groups],
+            multiops={int(u): {"groups": tuple(info["groups"]),
+                               "deadline": float(info["deadline"])}
+                      for u, info in cluster._multi.items()})
+
+
 # ---------------------------------------------------------------------------
 # invariant checks (each returns a list of violation strings; empty = OK)
 # ---------------------------------------------------------------------------
@@ -284,8 +342,14 @@ def check_deadline_order(trace: CommitTrace) -> list[str]:
     return out
 
 
-def check_trace(trace: CommitTrace) -> list[str]:
-    """All intra-trace invariants."""
+def check_trace(trace) -> list[str]:
+    """All intra-trace invariants. A `ShardedTrace` runs every per-group
+    invariant on each group plus the cross-group linearizability check."""
+    if isinstance(trace, ShardedTrace):
+        out = check_cross_group_linearizability(trace)
+        for g in trace.groups:
+            out += check_trace(g)
+        return out
     return (check_at_most_once(trace) + check_durable_log(trace)
             + check_deadline_order(trace))
 
@@ -411,6 +475,87 @@ def check_partition_liveness(trace: CommitTrace) -> list[str]:
     return out
 
 
+def check_cross_group_linearizability(trace) -> list[str]:
+    """Cross-group atomicity + global deadline order for multi-key ops
+    (sharded backend). Three properties per the MultiOp commit protocol
+    (one pre-stamped global deadline, zero coordination rounds):
+
+      torn op      a multi-op durable in SOME involved groups but not all
+                   violates atomicity (all-or-nothing durable membership);
+      deadline     every involved group must log the op at the identical
+                   pre-stamped deadline, bit-for-bit -- a diverging logged
+                   deadline means a group re-stamped (re-ordered) the op;
+      order        two multi-ops sharing >= 2 groups must appear in the
+                   same relative log order in every shared group, and that
+                   order must agree with their global deadline order --
+                   scoped to groups that sequenced both ops within one
+                   epoch batch (a slow-path retry legitimately pushes an
+                   entry to a later batch: the vectorized engine's
+                   documented windowed approximation, the same scope
+                   `check_deadline_order` uses).
+
+    Silent ([]) on non-sharded traces and on runs with no multi-ops."""
+    if not isinstance(trace, ShardedTrace) or not trace.multiops:
+        return []
+    # per-group uid -> log position, plus logged deadlines and batch ids
+    gpos = []
+    for g in trace.groups:
+        gpos.append(({int(u): i for i, u in enumerate(g.log_uids.tolist())},
+                     g.log["deadline"], g.log["batch"]))
+    out = []
+    durable = []                       # (uid, groups, prestamped deadline)
+    for uid, info in sorted(trace.multiops.items()):
+        grps = info["groups"]
+        present = [gi for gi in grps if uid in gpos[gi][0]]
+        if not present:
+            continue                   # never durable anywhere: clean abandon
+        u_str = f"({uid >> 32}, {uid & 0xFFFFFFFF})"
+        if len(present) < len(grps):
+            missing = sorted(set(grps) - set(present))
+            out.append(
+                f"{trace.label}: torn multi-op {u_str}: durable in "
+                f"group(s) {present} but missing from {missing}")
+            continue
+        dls = {gi: float(gpos[gi][1][gpos[gi][0][uid]]) for gi in grps}
+        bad = {gi: d for gi, d in dls.items() if d != info["deadline"]}
+        if bad:
+            out.append(
+                f"{trace.label}: multi-op {u_str} logged off its "
+                f"pre-stamped deadline {info['deadline']:.9f} in group(s) "
+                + ", ".join(f"{gi} (at {d:.9f})"
+                            for gi, d in sorted(bad.items())))
+            continue
+        durable.append((uid, grps, info["deadline"]))
+    for i, (ua, ga, da) in enumerate(durable):
+        for ub, gb, db in durable[i + 1:]:
+            shared = sorted(set(ga) & set(gb))
+            if len(shared) < 2:
+                continue
+            # within one epoch batch the log IS whole-batch deadline order,
+            # so same-batch positions are a valid order witness; a group
+            # that split the pair across batches abstains
+            a_first = {}
+            for gi in shared:
+                pos, _, batch = gpos[gi]
+                pa, pb = pos[ua], pos[ub]
+                if batch[pa] == batch[pb]:
+                    a_first[gi] = pa < pb
+            sa = f"({ua >> 32}, {ua & 0xFFFFFFFF})"
+            sb = f"({ub >> 32}, {ub & 0xFFFFFFFF})"
+            if len(set(a_first.values())) > 1:
+                out.append(
+                    f"{trace.label}: multi-ops {sa} and {sb} execute in "
+                    f"opposite orders across shared groups "
+                    f"{sorted(a_first)}")
+            elif a_first and da != db \
+                    and next(iter(a_first.values())) != (da < db):
+                out.append(
+                    f"{trace.label}: multi-ops {sa} (deadline {da:.9f}) "
+                    f"and {sb} (deadline {db:.9f}) execute against global "
+                    f"deadline order in shared groups {sorted(a_first)}")
+    return out
+
+
 # scenario ``invariant`` name -> its paired checker (the catalog's
 # adversarial scenarios each assert exactly their own entry fires)
 ADVERSARIAL_CHECKS = {
@@ -418,11 +563,19 @@ ADVERSARIAL_CHECKS = {
     "stamp-bias": check_stamp_bias,
     "durability": check_durability,
     "partition-liveness": check_partition_liveness,
+    "cross-group": check_cross_group_linearizability,
 }
 
 
-def check_adversarial(trace: CommitTrace) -> list[str]:
-    """All adversarial detection invariants."""
+def check_adversarial(trace) -> list[str]:
+    """All adversarial detection invariants. A `ShardedTrace` runs the
+    cross-group check once plus every per-group invariant on each group
+    (the single-trace checkers are silent on ShardedTrace itself)."""
+    if isinstance(trace, ShardedTrace):
+        out = check_cross_group_linearizability(trace)
+        for g in trace.groups:
+            out += check_adversarial(g)
+        return out
     out = []
     for fn in ADVERSARIAL_CHECKS.values():
         out += fn(trace)
@@ -472,15 +625,20 @@ def run_scenario_with_trace(protocol_name: str, scenario, *,
     trace = CommitTrace.from_cluster(cluster)
     result.invariant_violations = len(check_adversarial(trace))
     result.raw["invariant_violations"] = result.invariant_violations
+    if isinstance(trace, ShardedTrace):
+        result.cross_group_violations = len(
+            check_cross_group_linearizability(trace))
+        result.raw["cross_group_violations"] = result.cross_group_violations
     return result, trace
 
 
 __all__ = [
-    "COMMIT_COLS", "LOG_COLS", "CommitTrace",
+    "COMMIT_COLS", "LOG_COLS", "CommitTrace", "ShardedTrace",
     "check_at_most_once", "check_durable_log", "check_deadline_order",
     "check_trace", "check_equivalent_commits",
     "check_split_brain", "check_stamp_bias", "check_durability",
-    "check_partition_liveness", "check_adversarial", "ADVERSARIAL_CHECKS",
+    "check_partition_liveness", "check_cross_group_linearizability",
+    "check_adversarial", "ADVERSARIAL_CHECKS",
     "assert_trace_ok", "assert_equivalent_commits",
     "run_scenario_with_trace",
 ]

@@ -30,6 +30,7 @@ from typing import Callable, Optional
 
 import numpy as np
 
+from repro.core.hashing import key_group_np
 from repro.core.messages import OpType
 
 
@@ -113,6 +114,16 @@ def zipf_key(rng: np.random.Generator, n_keys: int, theta: float) -> int:
     return min(int(x), n_keys - 1)
 
 
+def route_keys(keys, n_groups: int) -> np.ndarray:
+    """Deterministic key -> consensus-group routing (sharded Nezha).
+
+    The single routing seam the workload layer and `nezha-sharded` backend
+    share: stable splitmix64 hashing (`repro.core.hashing.key_group_np`),
+    NOT the builtin ``hash()``, so group assignment is identical across
+    PYTHONHASHSEED values and process restarts."""
+    return key_group_np(np.asarray(keys, dtype=np.uint64), n_groups)
+
+
 def summarize_latencies(records: list[RequestRecord]) -> dict:
     lat = np.asarray([r.latency for r in records if np.isfinite(r.commit_time)])
     committed = int(np.isfinite([r.commit_time for r in records]).sum())
@@ -155,6 +166,11 @@ class Workload:
     n_keys: int = 1_000_000
     lanes: int = 1                      # closed loop: outstanding per client
     seed: int = 0
+    multiop_ratio: float = 0.0          # fraction of ops touching several keys
+    #   (sharded MultiOp: keys spanning groups commit atomically in global
+    #   deadline order). 0.0 draws NOTHING extra from the rng -- the default
+    #   stream is bit-identical to pre-multiop workloads.
+    multiop_span: int = 2               # keys per multi-key op (>= 2)
 
 
 class WorkloadDriver:
@@ -175,6 +191,21 @@ class WorkloadDriver:
         op = OpType.READ if rng.random() < w.read_ratio else OpType.WRITE
         return key, op
 
+    def _next_keys(self, rng, key: int) -> tuple:
+        """The key set of one request: usually ``(key,)``; with probability
+        ``multiop_ratio`` a multi-key op of ``multiop_span`` distinct keys.
+        The guard short-circuits at ratio 0.0 so default workloads draw
+        nothing extra from the rng (bit-identical streams)."""
+        w = self.workload
+        if w.multiop_ratio <= 0.0 or rng.random() >= w.multiop_ratio:
+            return (key,)
+        keys = [key]
+        while len(keys) < max(int(w.multiop_span), 2):
+            k = zipf_key(rng, w.n_keys, w.skew)
+            if k not in keys:
+                keys.append(k)
+        return tuple(keys)
+
     def inject_open_loop(self, cluster) -> None:
         """Pre-schedule the open-loop arrivals (Poisson per client, zipf keys,
         read/write mix) without running the cluster. `run` is built on this;
@@ -187,7 +218,8 @@ class WorkloadDriver:
             while t < w.duration:
                 t += rng.exponential(1.0 / w.rate_per_client)
                 key, op = self._next_op(rng)
-                cluster.submit_at(t, cid, keys=(key,), op=op)
+                cluster.submit_at(t, cid, keys=self._next_keys(rng, key),
+                                  op=op)
 
     def run(self, cluster) -> dict:
         w = self.workload
@@ -225,4 +257,5 @@ class WorkloadDriver:
 
 
 __all__ = ["RequestRecord", "OpenLoopWorkload", "ClosedLoopWorkload",
-           "Workload", "WorkloadDriver", "summarize_latencies", "zipf_key"]
+           "Workload", "WorkloadDriver", "summarize_latencies", "zipf_key",
+           "route_keys"]

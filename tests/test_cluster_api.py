@@ -40,7 +40,7 @@ def test_conformance_open_loop_and_summary_schema(name):
     missing = SUMMARY_REQUIRED_KEYS - set(s)
     assert not missing, f"{name} summary missing {missing}"
     assert isinstance(s["protocol"], str) and s["protocol"]
-    assert s["backend"] in ("event", "vectorized")
+    assert s["backend"] in ("event", "vectorized", "sharded")
     assert s["n_requests"] > 0
     assert 0 < s["committed"] <= s["n_requests"]
     assert 0.0 <= s["fast_commit_ratio"] <= 1.0
@@ -219,12 +219,14 @@ def test_every_registry_entry_runs_a_cataloged_scenario(name):
     assert set(d) == set(SCENARIO_RESULT_KEYS)
     assert d["scenario"] == "intra-zone"
     assert d["protocol"] and isinstance(d["protocol"], str)
-    assert d["backend"] in ("event", "vectorized")
-    if name.startswith("nezha-vectorized"):
+    assert d["backend"] in ("event", "vectorized", "sharded")
+    if name.startswith("nezha-vectorized") or name == "nezha-sharded":
         assert d["tier"] in ("numpy", "jit", "pallas")
         assert d["epochs"] > 0
     else:
         assert d["tier"] == "event"
+    assert d["groups"] == 1 and d["cross_group_ops"] == 0
+    assert d["per_group_view_changes"] == [0]
     assert 0 < d["committed"] <= d["n_requests"]
     assert 0.0 <= d["fast_commit_ratio"] <= 1.0
     assert np.isfinite(d["median_latency"]) and d["median_latency"] > 0

@@ -41,8 +41,19 @@ def test_fp8_kv_cache_decode_close_to_bf16():
     for i in range(4):
         logits, cache = step(params, cache, tok, jnp.int32(i))
         logits8, cache8 = step8(params, cache8, tok, jnp.int32(i))
-    # greedy decisions should agree despite fp8 quantization at smoke scale
-    assert jnp.argmax(logits[0]) == jnp.argmax(logits8[0])
+    # fp8 KV quantization must keep logits close; exact-argmax equality is
+    # brittle when the top-2 bf16 logits sit within the quantization error,
+    # so require the greedy choices to agree UP TO that error: each path's
+    # winning token must score within the observed logit error of the other
+    # path's maximum (ties under quantization noise are allowed, genuine
+    # decision flips are not)
+    l = np.asarray(logits[0], np.float32)
+    l8 = np.asarray(logits8[0], np.float32)
+    err = float(np.abs(l - l8).max())
+    assert err < 0.1, f"fp8 logit error {err} too large"
+    tol = 2 * max(err, 1e-3)
+    assert l[l8.argmax()] >= l.max() - tol
+    assert l8[l.argmax()] >= l8.max() - tol
 
 
 def test_sharding_profiles_on_small_mesh():

@@ -1,0 +1,403 @@
+"""Sharded Nezha (repro.core.sharded): G-group degeneracy/parity contracts,
+stable key routing, cross-group multi-op atomicity, and the teeth of the
+cross-group linearizability checker.
+
+The contracts under test, in order:
+  * G = 1 is the unsharded jit backend, bitwise (summary, latencies,
+    commit trace);
+  * key->group routing is PYTHONHASHSEED- and restart-stable and covers
+    every group;
+  * per-group numpy-vs-jit tier parity holds THROUGH a single-group
+    leader crash (the determinism contract survives sharding + recovery);
+  * the vmapped all-groups dispatch is bitwise identical to sequential
+    per-group dispatch;
+  * multi-key ops spanning groups commit atomically in global deadline
+    order with no coordination round, and the trace checker both passes
+    clean runs and fires on injected torn/off-deadline damage -- and ONLY
+    the cross-group checker fires on that damage.
+"""
+import hashlib
+import os
+import subprocess
+import sys
+from dataclasses import replace
+
+import numpy as np
+import pytest
+
+from repro.core.registry import make_cluster
+from repro.core.sharded import ShardedConfig, ShardedNezhaCluster
+from repro.sim.scenario import (
+    Crash,
+    GroupFault,
+    Scenario,
+    ScenarioResult,
+    get_scenario,
+)
+from repro.sim.trace import (
+    ADVERSARIAL_CHECKS,
+    CommitTrace,
+    ShardedTrace,
+    check_adversarial,
+    check_cross_group_linearizability,
+    check_trace,
+    run_scenario_with_trace,
+)
+from repro.sim.workload import Workload, WorkloadDriver, route_keys
+
+_W = Workload(mode="open", rate_per_client=2000.0, duration=0.1,
+              warmup=0.02, drain=0.1, seed=1)
+_W_MULTI = replace(_W, multiop_ratio=0.15, multiop_span=3, seed=3)
+
+
+def _commit_trace_arrays(grp) -> list[np.ndarray]:
+    return [np.concatenate([np.asarray(r[i]) for r in grp._trace_commits])
+            if grp._trace_commits else np.zeros(0)
+            for i in range(5)]
+
+
+def _groups_bitwise_equal(a: ShardedNezhaCluster,
+                          b: ShardedNezhaCluster) -> bool:
+    for ga, gb in zip(a.groups, b.groups):
+        la = (np.concatenate(ga._latencies) if ga._latencies
+              else np.zeros(0))
+        lb = (np.concatenate(gb._latencies) if gb._latencies
+              else np.zeros(0))
+        if not np.array_equal(la.view(np.uint64), lb.view(np.uint64)):
+            return False
+        for x, y in zip(_commit_trace_arrays(ga), _commit_trace_arrays(gb)):
+            if not np.array_equal(np.asarray(x, np.float64).view(np.uint64),
+                                  np.asarray(y, np.float64).view(np.uint64)):
+                return False
+    return True
+
+
+# ---------------------------------------------------------------------------
+# G = 1 degeneracy and routing
+# ---------------------------------------------------------------------------
+def test_g1_bitwise_identity_with_vectorized_jit():
+    """summary, commit latencies, and the commit trace of nezha-sharded at
+    G=1 are bitwise identical to nezha-vectorized-jit (same seed, same rid
+    sequence, same key classes)."""
+    a = make_cluster("nezha-vectorized-jit", ShardedConfig(groups=1))
+    sa = WorkloadDriver(_W).run(a)
+    b = make_cluster("nezha-sharded", ShardedConfig(groups=1))
+    sb = WorkloadDriver(_W).run(b)
+    diff = [k for k in sa if k not in ("protocol", "backend")
+            and sb.get(k, sa[k]) != sa[k]]
+    assert not diff, diff
+    la, lb = np.concatenate(a._latencies), np.concatenate(
+        b.groups[0]._latencies)
+    assert np.array_equal(la.view(np.uint64), lb.view(np.uint64))
+    ta, tb = _commit_trace_arrays(a), _commit_trace_arrays(b.groups[0])
+    for x, y in zip(ta, tb):
+        assert np.array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_g1_closed_loop_matches_vectorized_jit():
+    w = Workload(mode="closed", duration=0.05, drain=0.05, seed=0)
+    sa = WorkloadDriver(w).run(
+        make_cluster("nezha-vectorized-jit", ShardedConfig(groups=1,
+                                                           n_clients=2)))
+    sb = WorkloadDriver(w).run(
+        make_cluster("nezha-sharded", ShardedConfig(groups=1, n_clients=2)))
+    assert sa["committed"] == sb["committed"]
+    assert sa["median_latency"] == sb["median_latency"]
+
+
+def test_closed_loop_rejected_at_g_gt_1():
+    cl = make_cluster("nezha-sharded", ShardedConfig(groups=2, n_clients=2))
+    assert not cl.supports_closed_loop
+    with pytest.raises(ValueError, match="closed"):
+        WorkloadDriver(Workload(mode="closed", duration=0.02)).run(cl)
+
+
+def test_routing_covers_every_group():
+    keys = np.arange(100_000, dtype=np.uint64)
+    for g in (2, 4, 16, 64):
+        ga = route_keys(keys, g)
+        assert ga.min() >= 0 and ga.max() < g
+        counts = np.bincount(ga, minlength=g)
+        assert (counts > 0).all()
+        # splitmix64 + multiply-shift: roughly balanced, not pathological
+        assert counts.max() < 3.0 * counts.min()
+
+
+def test_routing_stable_across_hashseed_and_restarts():
+    """Key->group assignment must be identical across PYTHONHASHSEED values
+    and process restarts: it goes through repro.core.hashing's splitmix64,
+    never the builtin hash()."""
+    keys = np.arange(0, 70_000, 7, dtype=np.uint64)
+    local = hashlib.sha256(route_keys(keys, 8).tobytes()).hexdigest()
+    code = ("import hashlib, numpy as np\n"
+            "from repro.sim.workload import route_keys\n"
+            "keys = np.arange(0, 70000, 7, dtype=np.uint64)\n"
+            "print(hashlib.sha256(route_keys(keys, 8).tobytes())"
+            ".hexdigest())\n")
+    for seed in ("0", "1", "31337", "random"):
+        env = dict(os.environ, PYTHONHASHSEED=seed,
+                   PYTHONPATH=os.pathsep.join(sys.path))
+        out = subprocess.run([sys.executable, "-c", code], env=env,
+                             capture_output=True, text=True, check=True)
+        assert out.stdout.strip() == local, f"PYTHONHASHSEED={seed}"
+
+
+# ---------------------------------------------------------------------------
+# parity contracts at G > 1
+# ---------------------------------------------------------------------------
+def test_per_group_numpy_jit_parity_through_group_crash():
+    """The numpy/jit bitwise-parity contract holds per group THROUGH a
+    single-group leader crash: the crashed group's view change and
+    recovery replay the same on both tiers, and the other groups are
+    untouched by it."""
+    sc = get_scenario("sharded-group-crash")
+    out = {}
+    for tier in ("numpy", "jit"):
+        res, tr = run_scenario_with_trace("nezha-sharded", sc, tier=tier)
+        out[tier] = (res, tr)
+        assert res.per_group_view_changes[1] >= 1      # the crashed group
+        assert sum(res.per_group_view_changes) == res.per_group_view_changes[1]
+    (a, ta), (b, tb) = out["numpy"], out["jit"]
+    assert a.committed == b.committed
+    assert a.median_latency == b.median_latency
+    assert a.p90_latency == b.p90_latency
+    assert a.per_group_view_changes == b.per_group_view_changes
+    for ga, gb in zip(ta.groups, tb.groups):           # bitwise, per group
+        for col in ga.log:
+            x, y = np.asarray(ga.log[col]), np.asarray(gb.log[col])
+            assert x.shape == y.shape and np.array_equal(
+                x.view(np.uint64) if x.dtype == np.float64 else x,
+                y.view(np.uint64) if y.dtype == np.float64 else y), col
+        for col in ga.commits:
+            assert np.array_equal(ga.commits[col], gb.commits[col]), col
+
+
+def test_crash_in_one_group_does_not_stall_others():
+    cfg = ShardedConfig(groups=4)
+    cl = make_cluster("nezha-sharded", cfg)
+    cl.groups[2].crash_at(0.04, 0)                     # group 2's leader
+    WorkloadDriver(_W).run(cl)
+    vc = [g.view_changes for g in cl.groups]
+    assert vc[2] >= 1
+    assert vc[0] == vc[1] == vc[3] == 0
+    # every healthy group kept committing
+    for g in (0, 1, 3):
+        assert sum(x.size for x in cl.groups[g]._latencies) > 0
+
+
+def test_vmapped_dispatch_bitwise_equals_sequential():
+    """vmap over the group axis is a dispatch-count optimization, not a
+    semantic change: per-group latencies and commit traces are bitwise
+    identical, and the vmapped path actually ran."""
+    seq = make_cluster("nezha-sharded", ShardedConfig(groups=4))
+    ss = WorkloadDriver(_W).run(seq)
+    vm = make_cluster("nezha-sharded", ShardedConfig(groups=4,
+                                                     vmap_groups=True))
+    sv = WorkloadDriver(_W).run(vm)
+    assert sv["vmap_epochs"] > 0
+    diff = [k for k in ss if k != "vmap_epochs" and sv[k] != ss[k]]
+    assert not diff, diff
+    assert _groups_bitwise_equal(seq, vm)
+
+
+def test_vmap_falls_back_under_faults():
+    """A fault in ANY group makes the whole dispatch ineligible for the
+    vmapped program (it carries no fault operands); results still match
+    the sequential path because the fallback IS the sequential path."""
+    vm = make_cluster("nezha-sharded", ShardedConfig(groups=4,
+                                                     vmap_groups=True))
+    vm.groups[1].crash_at(0.04, 0)
+    sv = WorkloadDriver(_W).run(vm)
+    assert sv["vmap_epochs"] == 0
+    assert sv["per_group_view_changes"][1] >= 1
+
+
+# ---------------------------------------------------------------------------
+# cross-group multi-key ops
+# ---------------------------------------------------------------------------
+def test_multiop_commits_atomically_across_groups():
+    cl = make_cluster("nezha-sharded", ShardedConfig(groups=4))
+    s = WorkloadDriver(_W_MULTI).run(cl)
+    assert s["cross_group_ops"] > 0
+    tr = CommitTrace.from_cluster(cl)
+    assert isinstance(tr, ShardedTrace)
+    assert check_trace(tr) == []
+    # every durable multi-op is durable in EVERY involved group (atomic),
+    # at the identical pre-stamped deadline
+    glogs = [set(g.log_uids.tolist()) for g in tr.groups]
+    n_durable = 0
+    for uid, info in tr.multiops.items():
+        present = [gi for gi in info["groups"] if uid in glogs[gi]]
+        assert len(present) in (0, len(info["groups"]))
+        n_durable += bool(present)
+    assert n_durable > 0
+
+
+def test_multiop_latency_counts_last_group():
+    """A multi-op is client-committed when its LAST involved group
+    delivers: its merged latency is >= each involved group's own commit
+    latency for the sub-entries."""
+    cl = make_cluster("nezha-sharded", ShardedConfig(groups=4))
+    WorkloadDriver(_W_MULTI).run(cl)
+    tr = CommitTrace.from_cluster(cl)
+    per_group = {}
+    for g in tr.groups:
+        for t, u in zip(g.commits["t"], g.commit_uids):
+            per_group.setdefault(int(u), []).append(float(t))
+    lat, _ = cl._merged_latencies()
+    assert np.isfinite(lat).sum() > 0
+    for uid, info in tr.multiops.items():
+        ts = per_group.get(uid, [])
+        if len(ts) == len(info["groups"]):
+            assert max(ts) >= min(ts)      # sanity: max-over-groups rule
+
+
+def test_cross_group_checker_passes_catalog_scenario():
+    res, tr = run_scenario_with_trace("nezha-sharded",
+                                      get_scenario("sharded-multi-key"))
+    assert res.groups == 4
+    assert res.cross_group_ops > 0
+    assert res.cross_group_violations == 0
+    assert check_trace(tr) == []
+
+
+# ---------------------------------------------------------------------------
+# checker teeth: injected damage fires the cross-group checker, and ONLY it
+# ---------------------------------------------------------------------------
+def _sharded_trace() -> ShardedTrace:
+    cl = make_cluster("nezha-sharded", ShardedConfig(groups=4))
+    WorkloadDriver(_W_MULTI).run(cl)
+    tr = CommitTrace.from_cluster(cl)
+    assert check_trace(tr) == []          # clean before injection
+    return tr
+
+
+def _durable_multiop(tr: ShardedTrace) -> int:
+    glogs = [set(g.log_uids.tolist()) for g in tr.groups]
+    for uid, info in sorted(tr.multiops.items()):
+        if all(uid in glogs[gi] for gi in info["groups"]):
+            return uid
+    pytest.skip("no fully durable multi-op in the run")
+
+
+def test_checker_fires_on_torn_multiop():
+    tr = _sharded_trace()
+    uid = _durable_multiop(tr)
+    gi = tr.multiops[uid]["groups"][0]
+    g = tr.groups[gi]
+    # tear the op out of ONE involved group's durable log AND deliveries
+    # (log-only removal would also trip that group's durable-log check --
+    # the point here is that the torn op is visible ONLY cross-group)
+    keep = g.log_uids != uid
+    g.log = {k: v[keep] for k, v in g.log.items()}
+    keepc = g.commit_uids != uid
+    g.commits = {k: v[keepc] for k, v in g.commits.items()}
+    v = check_cross_group_linearizability(tr)
+    assert len(v) == 1 and "torn multi-op" in v[0]
+    # ...and ONLY the cross-group checker fires
+    for grp in tr.groups:
+        assert check_trace(grp) == []
+    assert check_adversarial(tr) == v
+
+
+def test_checker_fires_on_off_deadline_commit():
+    """Nudge one group's logged deadline for a multi-op by 1 ulp-scale
+    epsilon (small enough to preserve within-batch sortedness): the
+    bit-equality check must catch the op committing off its pre-stamped
+    global slot, while every per-group invariant stays silent."""
+    tr = _sharded_trace()
+    uid = _durable_multiop(tr)
+    gi = tr.multiops[uid]["groups"][-1]
+    g = tr.groups[gi]
+    idx = int(np.flatnonzero(g.log_uids == uid)[0])
+    g.log["deadline"] = g.log["deadline"].copy()
+    g.log["deadline"][idx] += 1e-12
+    v = check_cross_group_linearizability(tr)
+    assert len(v) == 1 and "pre-stamped deadline" in v[0]
+    for grp in tr.groups:
+        assert check_trace(grp) == []
+    assert check_adversarial(tr) == v
+
+
+@pytest.mark.parametrize("name,tier", [("nezha", None),
+                                       ("nezha-vectorized", "numpy"),
+                                       ("nezha-vectorized", "jit")])
+def test_checker_silent_on_control_backends(name, tier):
+    """Silent-on-control: the cross-group checker returns [] on every
+    non-sharded trace (event, numpy, jit) -- it must never add noise to
+    the existing backends' adversarial sweeps."""
+    sc = replace(get_scenario("intra-zone"), n_clients=2,
+                 workload=Workload(mode="open", rate_per_client=500.0,
+                                   duration=0.08, warmup=0.01, drain=0.06,
+                                   seed=0))
+    _, tr = run_scenario_with_trace(name, sc, tier=tier)
+    assert not isinstance(tr, ShardedTrace)
+    assert check_cross_group_linearizability(tr) == []
+    assert "cross-group" in ADVERSARIAL_CHECKS
+
+
+# ---------------------------------------------------------------------------
+# sanitizer: pre-stamped deadline preservation
+# ---------------------------------------------------------------------------
+def test_sanitizer_checks_prestamped_deadlines():
+    from repro.core.sanitizer import SanitizerError
+
+    cfg = ShardedConfig(groups=4, tier="numpy", sanitize=True)
+    cl = make_cluster("nezha-sharded", cfg)
+    WorkloadDriver(replace(_W_MULTI, duration=0.06, drain=0.06)).run(cl)
+    tier = cl.groups[0].engine.tier
+    assert tier.epochs_checked > 0        # armed and silent on clean runs
+    # teeth: re-check a synthetic state whose stamped deadline drifted off
+    # the fixed pre-stamped value
+    from repro.core.engine import EpochState
+
+    s = EpochState(t=np.array([0.01]), t0=np.array([0.01]),
+                   cid=np.array([0]), rid=np.array([0]), kcls=None,
+                   alive=np.ones(3, bool), leader=0)
+    s.deadlines = np.array([0.0125 + 1e-9])
+    s.pre_deadline = np.array([0.0125])
+    s.commit_time = np.array([np.inf])
+    s.committed = np.array([False])
+    s.fast = np.array([False])
+    with pytest.raises(SanitizerError, match="pre-stamped"):
+        tier.check_epoch(s, cl.groups[0].engine)
+
+
+# ---------------------------------------------------------------------------
+# scenario-layer validation
+# ---------------------------------------------------------------------------
+def test_scenario_groups_validation():
+    with pytest.raises(ValueError, match="groups"):
+        Scenario("bad", groups=0)
+    with pytest.raises(ValueError, match="group"):
+        Scenario("bad", groups=2,
+                 faults=(GroupFault(5, Crash(0.05, rid=0)),),
+                 workload=_W)
+    with pytest.raises(ValueError, match="multiop_span"):
+        Scenario("bad", workload=replace(_W, multiop_ratio=0.1,
+                                         multiop_span=1))
+
+
+def test_scenario_result_sharded_fields():
+    base = dict(scenario="s", protocol="nezha-sharded", backend="sharded",
+                tier="jit", n_requests=10, committed=10,
+                fast_commit_ratio=1.0, median_latency=1e-3,
+                p90_latency=2e-3, mean_latency=1e-3, throughput=1e4,
+                epochs=4, view_changes=1, recovered_entries=0,
+                dropped_speculative=0, applied_faults=1, skipped_faults=0)
+    r = ScenarioResult(**base, groups=4,
+                       per_group_view_changes=[0, 1, 0, 0],
+                       cross_group_ops=3)
+    assert r.groups == 4
+    with pytest.raises(ValueError, match="per_group_view_changes"):
+        ScenarioResult(**base, groups=4, per_group_view_changes=[0, 0])
+    with pytest.raises(ValueError, match="groups"):
+        ScenarioResult(**base, groups=0)
+
+
+def test_global_replica_id_fault_routing():
+    cl = make_cluster("nezha-sharded", ShardedConfig(groups=4))
+    assert cl._split_rid(0) == (0, 0)
+    assert cl._split_rid(7) == (2, 1)      # n = 3 per group
+    with pytest.raises(ValueError, match="out of range"):
+        cl._split_rid(12)
