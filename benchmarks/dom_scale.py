@@ -319,6 +319,76 @@ def _bench_fault_family(quick: bool) -> list[dict]:
     return rows
 
 
+def _bench_clocksync(quick: bool) -> list[dict]:
+    """Fused-epoch overhead of the modeled sync loop (PR 10).
+
+    Runs the identical epoch batch through `DomEngine.run_epoch` three ways
+    per N: `baseline` (perfect clocks, no clock operands), `injected` (the
+    pre-PR-10 drifty model: N(mu, sigma) clock-read error on every node --
+    the [N]/[N, R] clock operands with host-side draws) and `clocksync`
+    (the modeled daemon at one probe round per epoch, the worst case: the
+    clock operands PLUS the [M, M] theta/rtt round operands and the
+    in-program estimator reductions).  `clocksync` vs `injected` is the
+    estimator-in-epoch cost; both vs `baseline` shows the whole family.
+    """
+    from dataclasses import replace as dc_replace
+
+    from repro.core.clock import ClockParams
+    from repro.core.engine import PENDING_DTYPE, DomEngine
+    from repro.core.vectorized_cluster import VectorizedConfig
+    from repro.sim.network import CloudNetwork
+
+    Ns = [10_000, 100_000] if quick else [10_000, 100_000, 1_000_000]
+    reps = 2 if quick else 4
+    epoch = VectorizedConfig.epoch_duration
+    sync_clock = ClockParams(drift_ppm_sigma=50.0, sync_model=True,
+                             sync_interval=epoch)   # a round EVERY epoch
+    rows = []
+    for n in Ns:
+        rng = np.random.default_rng(0)
+        due = np.zeros(n, PENDING_DTYPE)
+        due["t"] = np.sort(rng.uniform(0, n / 2e5, n))
+        due["t0"] = due["t"]
+        due["cid"] = rng.integers(0, 64, n)
+        due["rid"] = np.arange(n)
+        due["kcls"] = rng.integers(0, 1000, n)
+        alive = np.ones(3, bool)
+        walls = {}
+        for mode in ("baseline", "injected", "clocksync"):
+            cfg = VectorizedConfig(f=1, n_clients=64, seed=0)
+            if mode == "clocksync":
+                cfg = dc_replace(cfg, clock=sync_clock)
+            net = CloudNetwork(3 + cfg.n_proxies + cfg.n_clients, cfg.net,
+                               seed=0)
+            eng = DomEngine(cfg, net, 3, tier="jit", track_logs=False)
+            if mode == "injected":
+                for i in range(3):
+                    eng.set_clock_fault("replica", i, 0.0, 10e-6)
+                eng.set_clock_fault("proxy", 0, 0.0, 10e-6)
+            tick = [0.0]
+
+            def run(eng=eng, tick=tick):
+                if eng.sync_active:
+                    tick[0] += epoch
+                    eng.advance_sync(tick[0])
+                eng.run_epoch(due.copy(), alive, leader=0)
+
+            wall = _time_call(run, reps)
+            walls[mode] = wall
+            rows.append({"kind": "clocksync_epoch", "tier": "jit", "n": n,
+                         "mode": mode, "requests_per_sec": n / wall,
+                         "wall_s": wall})
+            print(f"  epoch jit {mode:<9s} N={n:>9,d} "
+                  f"{n / wall:>12,.0f} req/s")
+        rows.append({"kind": "clocksync_overhead", "tier": "jit", "n": n,
+                     "vs_injected_x": walls["clocksync"] / walls["injected"],
+                     "vs_baseline_x": walls["clocksync"] / walls["baseline"]})
+        print(f"  estimator overhead   N={n:>9,d} "
+              f"{walls['clocksync'] / walls['injected']:.2f}x injected, "
+              f"{walls['clocksync'] / walls['baseline']:.2f}x baseline")
+    return rows
+
+
 def _bench_sharded(quick: bool) -> list[dict]:
     """Aggregate throughput scaling with the group count G (nezha-sharded).
 
@@ -457,6 +527,26 @@ def fault_family(quick: bool = True) -> list[dict]:
     return rows
 
 
+def clocksync(quick: bool = True) -> list[dict]:
+    rows = _bench_clocksync(quick)
+    os.makedirs("results", exist_ok=True)
+    out = {
+        "benchmark": "clocksync",
+        "quick": quick,
+        "note": ("clocksync = modeled sync daemon at one probe round per "
+                 "epoch (worst case): fused epoch gains the [M, M] "
+                 "theta/rtt round operands and the in-program estimator "
+                 "reductions on top of the per-node residual operands; "
+                 "injected = the pre-PR-10 N(mu, sigma) clock-fault model "
+                 "(clock operands, host draws); baseline = perfect clocks"),
+        "rows": rows,
+    }
+    with open("results/BENCH_clocksync.json", "w") as f:
+        json.dump(out, f, indent=1)
+    print("  -> results/BENCH_clocksync.json")
+    return rows
+
+
 def device_resident(quick: bool = True) -> list[dict]:
     rows = _bench_epochs_per_dispatch(quick)
     os.makedirs("results", exist_ok=True)
@@ -513,8 +603,14 @@ if __name__ == "__main__":
                     help="run the sharded group sweep (G in {1,4,16,64}, "
                          "sequential vs vmapped dispatch, writes "
                          "results/BENCH_sharded.json)")
+    ap.add_argument("--clocksync", action="store_true",
+                    help="measure fused-epoch overhead of the modeled "
+                         "sync loop vs the injected-offset clock model "
+                         "(writes results/BENCH_clocksync.json)")
     args = ap.parse_args()
-    if args.groups:
+    if args.clocksync:
+        clocksync(quick=args.quick)
+    elif args.groups:
         sharded_groups(quick=args.quick)
     elif args.fault_family:
         fault_family(quick=args.quick)

@@ -96,7 +96,7 @@ def callback_prims(jaxpr) -> list[str]:
 # tracing the real programs
 # ---------------------------------------------------------------------------
 def _fused_step_args(n: int, r: int, *, dies_at=False, clock=False,
-                     pair=False, window: int = 16) -> dict:
+                     pair=False, sync=False, window: int = 16) -> dict:
     rng = np.random.default_rng(0)
     kw = dict(
         pool=np.full(window * r, np.inf),
@@ -126,6 +126,14 @@ def _fused_step_args(n: int, r: int, *, dies_at=False, clock=False,
     if pair:
         kw["pair_drop"] = np.zeros((n, r), bool)
         kw["pair_delay"] = np.zeros((n, r))
+    if sync:
+        # sync-round operands (PR 10): probe matrices over M = replicas +
+        # proxies sync nodes, plus the two estimator scalars -- all float64
+        m = r + 1
+        kw["sync_theta"] = rng.uniform(-1e-4, 1e-4, (m, m))
+        kw["sync_rtt"] = rng.uniform(1e-4, 1e-3, (m, m))
+        kw["sync_safety"] = np.float64(1.5)
+        kw["sync_floor"] = np.float64(200e-9)
     return kw
 
 
@@ -193,7 +201,8 @@ def check_fused_step(f: int = 1, n: int = 8) -> list[Finding]:
         (False, False, dict(dies_at=True)),
         (False, False, dict(clock=True)),
         (False, False, dict(pair=True)),
-        (False, False, dict(pair=True, clock=True, dies_at=True)),
+        (False, False, dict(clock=True, sync=True)),
+        (False, False, dict(pair=True, clock=True, dies_at=True, sync=True)),
     ]
     for use_kcls, use_cap, fault in variants:
         label = (f"_build_fused_step(use_kcls={use_kcls}, "
@@ -316,6 +325,13 @@ def check_compile_stability(scenarios: Iterable = None) -> list[Finding]:
         spec_keys.add((sc.f, use_kcls, use_cap, False))
         if has_pair:
             spec_keys.add((sc.f, use_kcls, use_cap, True))
+        # the sync axis (PR 10): a modeled-sync regime attaches probe-round
+        # operands to the epochs that land on a round boundary, so such
+        # scenarios compile BOTH the sync and bare variants of the step
+        # (the bare key is already in). Sync runs are fenced off the
+        # K-scan and vmapped-group fast paths, so no K/G cross product.
+        if bool(getattr(sc.env.clock, "sync_model", False)):
+            spec_keys.add((sc.f, use_kcls, use_cap, has_pair, "sync"))
         g = int(getattr(sc, "groups", 1) or 1)
         if g > 1:
             g_buckets.add(g)

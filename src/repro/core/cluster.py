@@ -290,7 +290,53 @@ class EventCluster(Cluster):
             self.scheduler.schedule_at(
                 event.t, lambda: reps[event.rid].set_lossy(), tag="fault")
             return True
+        if kind in ("sync-outage", "sync-restore", "sync-bias"):
+            # Modeled-sync faults (PR 10): need a probe-driven SyncService;
+            # clusters without one (baselines, legacy regimes) skip them.
+            sync = getattr(self, "sync", None)
+            if sync is None or not getattr(sync, "_modeled", False):
+                return False
+            if kind == "sync-bias":
+                obs = self._sync_clock_ids(event.src)   # fail at schedule
+                prs = self._sync_clock_ids(event.dst)   # time on bad selectors
+                bias = float(event.bias)
+                self.scheduler.schedule_at(
+                    event.t, lambda: sync.set_probe_bias(obs, prs, bias),
+                    tag="fault")
+            else:
+                flag = kind == "sync-outage"
+                self.scheduler.schedule_at(
+                    event.t, lambda: sync.set_outage(flag), tag="fault")
+            return True
+        if kind == "clock-leap":
+            if not (hasattr(self, "clock_of_replica")
+                    and hasattr(self, "clock_of_proxy")):
+                return False
+            targets = event.targets(self.n, getattr(self.cfg, "n_proxies", 0))
+            delta = float(event.delta)
+
+            def leap() -> None:
+                for role, idx in targets:
+                    clock = (self.clock_of_replica(idx) if role == "replica"
+                             else self.clock_of_proxy(idx))
+                    clock.leap(delta)
+
+            self.scheduler.schedule_at(event.t, leap, tag="fault")
+            return True
         return False
+
+    def _sync_clock_ids(self, selector) -> tuple[int, ...]:
+        """Resolve a clock-target selector to SyncService clock indices
+        (replicas 0..R-1, proxies R..R+P-1, matching the clocks layout)."""
+        from repro.sim.scenario import _clock_targets
+
+        n_prox = getattr(self.cfg, "n_proxies", 0)
+        if selector == "all":
+            return tuple(range(self.n + n_prox))
+        out = []
+        for role, idx in _clock_targets(selector, self.n, n_prox):
+            out.append(idx if role == "replica" else self.n + idx)
+        return tuple(out)
 
     # -- adversarial network faults (Partition/Heal/GrayLink/GrayClear) ------
     # Window bookkeeping is lazily initialized so every EventCluster subclass

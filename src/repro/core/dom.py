@@ -64,6 +64,11 @@ class OwdEstimator:
         self._win.append(recv_local_time - send_time)
 
     def estimate(self, sigma_s: float, sigma_r: float) -> float:
+        # sigma_s/sigma_r are the sender/receiver clock error bounds. Under
+        # a modeled sync loop (ClockParams.sync_model, PR 10) they are the
+        # sync daemon's *measured* bounds -- MAD-derived, grown since the
+        # last probe round -- so DOM's margin tracks actual sync quality
+        # instead of a configured constant.
         p = self.p
         if not self._win:
             base = p.initial_owd

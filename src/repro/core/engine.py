@@ -84,6 +84,7 @@ from typing import Optional, Union
 
 import numpy as np
 
+from repro.core.clocksync import estimate_offsets
 from repro.core.quorum import fast_quorum_size, slow_quorum_size
 from repro.core.recovery import (
     merge_logs_vectorized,
@@ -618,7 +619,9 @@ def _build_epoch_body(tier: ComputeTier, f: int, use_kcls: bool,
     def body(pool, ptr, cnt, t, c2p, owd_pr, drop_pr, reply_owd, alive,
              kcls, leader, n_valid, pq01, margin, clamp_d, batch_delay, cap,
              floor, dies_at=None, stamp_off=None, arr_off=None,
-             pair_drop=None, pair_delay=None, pre_dl=None):
+             pair_drop=None, pair_delay=None, pre_dl=None,
+             sync_theta=None, sync_rtt=None, sync_safety=None,
+             sync_floor=None):
         N, R = owd_pr.shape
         # Per-pair network-fault operands (Partition / GrayLink): extra
         # delay joins the effective OWD BEFORE anything observes it -- the
@@ -733,9 +736,19 @@ def _build_epoch_body(tier: ComputeTier, f: int, use_kcls: bool,
         commit_t = jnp.minimum(fast_commit_t, slow_commit_t)
         fast = fast_commit_t <= slow_commit_t
         committed = jnp.isfinite(commit_t)
-        return ((pool, ptr, cnt),
-                (stamp, deadlines, arrivals, admitted, release,
-                 commit_t, fast & committed, committed, bound))
+        outs = (stamp, deadlines, arrivals, admitted, release,
+                commit_t, fast & committed, committed, bound)
+        if sync_theta is not None:
+            # Modeled sync round (PR 10): the estimator's per-node
+            # reductions run INSIDE the dispatch over the [M, M] probe
+            # arrays this epoch carries (the sync analogue of the clock
+            # operands -- round-free epochs carry none of this), emitting
+            # the per-node offset estimates and honest error bounds the
+            # daemon folds into corrections at the epoch boundary.
+            sync_est, sync_sigma = estimate_offsets(
+                sync_theta, sync_rtt, jnp, sync_safety, sync_floor)
+            outs = outs + (sync_est, sync_sigma)
+        return ((pool, ptr, cnt), outs)
 
     return body
 
@@ -746,7 +759,9 @@ def _build_fused_step(tier: ComputeTier, f: int, use_kcls: bool,
 
     Returns the 9 epoch outputs followed by the updated (pool, ptr, cnt)
     ring carry.  The optional fault operands (dies_at / clock offsets)
-    dispatch at trace time, so fault-free epochs carry none of that work.
+    dispatch at trace time, so fault-free epochs carry none of that work;
+    a modeled sync round additionally carries theta/rtt probe operands and
+    appends the per-node (est, sigma) estimator outputs before the carry.
     """
     import jax
 
@@ -756,13 +771,17 @@ def _build_fused_step(tier: ComputeTier, f: int, use_kcls: bool,
     def step(pool, ptr, cnt, t, c2p, owd_pr, drop_pr, reply_owd, alive,
              kcls, leader, n_valid, pq01, margin, clamp_d, batch_delay, cap,
              floor, dies_at=None, stamp_off=None, arr_off=None,
-             pair_drop=None, pair_delay=None, pre_dl=None):
+             pair_drop=None, pair_delay=None, pre_dl=None,
+             sync_theta=None, sync_rtt=None, sync_safety=None,
+             sync_floor=None):
         carry, outs = body(pool, ptr, cnt, t, c2p, owd_pr, drop_pr,
                            reply_owd, alive, kcls, leader, n_valid, pq01,
                            margin, clamp_d, batch_delay, cap, floor,
                            dies_at=dies_at, stamp_off=stamp_off,
                            arr_off=arr_off, pair_drop=pair_drop,
-                           pair_delay=pair_delay, pre_dl=pre_dl)
+                           pair_delay=pair_delay, pre_dl=pre_dl,
+                           sync_theta=sync_theta, sync_rtt=sync_rtt,
+                           sync_safety=sync_safety, sync_floor=sync_floor)
         return outs + carry
 
     return step
@@ -852,6 +871,14 @@ class EpochState:
     # normally). Where > 0, the value REPLACES the proxy-computed deadline
     # after all stamping/offset math -- the cross-group global slot.
     pre_deadline: Optional[np.ndarray] = None  # [N] fixed deadlines (0=none)
+    # Modeled sync round (PR 10): a probe round due at this epoch's boundary
+    # rides the dispatch as [M, M] operands (M = replicas + proxies); the
+    # in-program estimator returns per-node (est, sigma), which the daemon
+    # folds into corrections/bounds. None on round-free epochs.
+    sync_theta: Optional[np.ndarray] = None   # [M, M] NTP offset samples
+    sync_rtt: Optional[np.ndarray] = None     # [M, M] selected-probe RTTs
+    sync_est: Optional[np.ndarray] = None     # [M] estimator output
+    sync_sigma: Optional[np.ndarray] = None   # [M] measured error bounds
     # StampStage
     bound: float = 0.0                  # DOM latency bound this epoch
     stamp: Optional[np.ndarray] = None  # [N] proxy stamp times
@@ -972,6 +999,30 @@ class SampleStage(Stage):
                 s.clock_arr_off = np.zeros((N, n))
             else:
                 s.clock_stamp_off = s.clock_stamp_off + bias
+        if eng.sync_active:
+            # Modeled sync (PR 10): the daemon's effective residual offsets
+            # (truth minus applied corrections, advanced to this epoch's
+            # boundary) ARE the clock read errors -- a proxy's residual
+            # shifts the deadline values it stamps, a replica's shifts its
+            # whole local frame. Folded additively like SkewedStamper so
+            # injected clock faults still compose on top.
+            ds = eng.clocksync
+            pids = np.asarray(s.cid) % cfg.n_proxies
+            soff = ds.stamp_err(pids)
+            aoff = np.tile(ds.arr_err(), (N, 1))
+            if s.clock_stamp_off is None:
+                s.clock_stamp_off = soff
+                s.clock_arr_off = aoff
+            else:
+                s.clock_stamp_off = s.clock_stamp_off + soff
+                s.clock_arr_off = s.clock_arr_off + aoff
+            if eng.tier.fused and ds.pending is not None:
+                # a due probe round rides this epoch's dispatch; the staged
+                # tier instead applies the numpy twin in run_epoch's
+                # epilogue (bit-identical by construction)
+                _, theta, rtt = ds.pending
+                s.sync_theta = theta
+                s.sync_rtt = rtt
 
 
 class StampStage(Stage):
@@ -1134,6 +1185,13 @@ class FusedEpochStage(Stage):
             pre_dl = np.zeros(n_pad)
             pre_dl[:N] = s.pre_deadline
             fault_kw["pre_dl"] = pre_dl
+        if s.sync_theta is not None:
+            # modeled sync round: the probe arrays are [M, M] over the
+            # synchronized fleet, independent of the batch -- no padding
+            fault_kw["sync_theta"] = s.sync_theta
+            fault_kw["sync_rtt"] = s.sync_rtt
+            fault_kw["sync_safety"] = np.float64(cfg.clock.sigma_safety)
+            fault_kw["sync_floor"] = np.float64(cfg.clock.sigma_floor)
         cap = float(getattr(cfg, "deadline_cap", 0.0) or 0.0)
         step = eng.tier.epoch_step(cfg.f, use_kcls=s.kcls is not None,
                                    use_cap=cap > 0.0)
@@ -1144,10 +1202,18 @@ class FusedEpochStage(Stage):
                        float(cfg.dom.clamp_d),
                        float(cfg.leader_batch_delay),
                        cap, float(s.release_floor), **fault_kw)
+            pulled = (out[:8] if s.sync_theta is None
+                      else out[:8] + out[9:11])
             # lint: allow[HS003] THE one epoch-end device->host pull of the fused program's outputs
-            out = [np.asarray(o)[:N] for o in out[:8]]
+            pulled = [np.asarray(o) for o in pulled]
         (s.stamp, s.deadlines, s.arrivals, s.admitted, s.release,
-         s.commit_time, s.fast, s.committed) = out
+         s.commit_time, s.fast, s.committed) = [o[:N] for o in pulled[:8]]
+        if s.sync_theta is not None:
+            # the round's estimator outputs land at the epoch boundary:
+            # corrections/bounds fold exactly where the staged tier's
+            # numpy twin folds them (run_epoch's epilogue)
+            s.sync_est, s.sync_sigma = pulled[8], pulled[9]
+            eng.clocksync.consume_round(s.sync_est, s.sync_sigma)
         s.reply_owd = rep
 
 
@@ -1572,6 +1638,18 @@ class DomEngine:
         # SkewedStamper (Byzantine-leaning): per-proxy deterministic stamp
         # bias, folded into the clock stamp_off operand by SampleStage.
         self.proxy_stamp_bias = np.zeros(getattr(cfg, "n_proxies", 1))
+        # Modeled clock-sync loop (PR 10): regimes with
+        # ``cfg.clock.sync_model`` attach a fleet daemon that owns clock
+        # TRUTH (drift/wander/steps) and the MEASURED error bounds; DOM's
+        # beta-margin then comes from measurements, not configuration.
+        self.clocksync = None
+        if getattr(getattr(cfg, "clock", None), "sync_model", False):
+            from repro.core.clocksync import ClockSyncDaemon
+
+            self.clocksync = ClockSyncDaemon(
+                n_replicas, getattr(cfg, "n_proxies", 1), cfg.clock, net,
+                seed=getattr(cfg, "seed", 0))
+        self._margin_used: Optional[float] = None
 
     # -- clock faults (Appendix D) -------------------------------------------
     @property
@@ -1610,6 +1688,22 @@ class DomEngine:
     @property
     def stampers_biased(self) -> bool:
         return bool(self.proxy_stamp_bias.any())
+
+    # -- modeled clock sync (PR 10) ------------------------------------------
+    @property
+    def sync_active(self) -> bool:
+        """A modeled sync daemon is attached: every epoch carries the
+        fleet's effective residual offsets (and round epochs the probe
+        operands), so sync regimes fall off the K-scan fast path exactly
+        like injected clock faults do."""
+        return self.clocksync is not None
+
+    def advance_sync(self, t_end: float) -> None:
+        """Advance the daemon's clock truth to the epoch boundary ``t_end``
+        and queue any due probe round; no-op without a daemon. The cluster
+        calls this once per epoch BEFORE running it."""
+        if self.clocksync is not None:
+            self.clocksync.advance(float(t_end))
 
     def _ensure_pair_state(self) -> None:
         if self._pair_block is None:
@@ -1703,7 +1797,17 @@ class DomEngine:
 
     def bound_margin(self) -> float:
         """The clock-error margin added to the OWD percentile (one float64
-        operand; host and device add the identical value)."""
+        operand; host and device add the identical value).
+
+        With a modeled sync daemon the margin is beta * (sigma_S + sigma_R)
+        over the daemon's MEASURED per-node bounds at the current epoch
+        boundary -- the paper's Eq. (1) fed by the estimator instead of by
+        configuration, so degraded sync widens the stamped deadlines and
+        recovered sync narrows them back. Without one, the legacy
+        configured-residual margin is unchanged bit-for-bit."""
+        if self.clocksync is not None:
+            sig_s, sig_r = self.clocksync.margin_sigmas()
+            return self.cfg.dom.beta * (sig_s + sig_r)
         return self.cfg.dom.beta * 2.0 * self.cfg.clock.residual_sigma
 
     def update_bound(self, owd_new: np.ndarray) -> float:
@@ -1714,6 +1818,13 @@ class DomEngine:
         cached bound.
         """
         cfg = self.cfg
+        margin = self.bound_margin()
+        if margin != self._margin_used:
+            # measured-margin drift (a sync round landed, or the reported
+            # bound grew through an outage): the cached percentile+margin
+            # value is stale even when the pool itself is unchanged
+            self._margin_used = margin
+            self._bound_cache = None
         new = np.ravel(owd_new)
         if new.size:
             pool = np.concatenate([self.owd_pool, new])
@@ -1723,10 +1834,8 @@ class DomEngine:
             if self.owd_pool.size == 0:
                 bound = cfg.dom.clamp_d
             else:
-                sigma = cfg.clock.residual_sigma
                 bound = _partition_percentile(self.owd_pool,
-                                              cfg.dom.percentile) \
-                    + cfg.dom.beta * 2.0 * sigma
+                                              cfg.dom.percentile) + margin
                 if not (0.0 < bound < cfg.dom.clamp_d):
                     bound = cfg.dom.clamp_d
             self._bound_cache = float(bound)
@@ -1762,6 +1871,11 @@ class DomEngine:
             s.pre_deadline = dl
         for stage in self.stages:
             stage.run(s, self)
+        if self.clocksync is not None and self.clocksync.pending is not None:
+            # staged tier: the due probe round lands via the numpy twin of
+            # the in-program estimator at the SAME epoch slot the fused
+            # path consumes it (FusedEpochStage) -- bit-identical fold
+            self.clocksync.apply_pending()
         check = getattr(self.tier, "check_epoch", None)
         if check is not None:       # SanitizerTier (repro.core.sanitizer)
             check(s, self)
@@ -1788,7 +1902,7 @@ class DomEngine:
         from jax.experimental import enable_x64
 
         if not self.tier.fused or self.clocks_faulty or self.pairs_faulty \
-                or self.stampers_biased \
+                or self.stampers_biased or self.sync_active \
                 or any(d.size and (d["dl"] > 0).any() for d in dues):
             # (pre-stamped multi-op deadlines need the per-epoch step
             # program's pre_dl operand; the scan variant never carries it)

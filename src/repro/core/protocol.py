@@ -85,7 +85,12 @@ class NezhaCluster(EventCluster):
         # Clocks: replicas + proxies are Huygens-synchronized; clients need
         # no synchronization at all (S5 -- a proxy benefit).
         self.clocks = [Clock(i, cfg.clock, seed=cfg.seed) for i in range(total_nodes)]
-        self.sync = SyncService(self.clocks[: self.n + cfg.n_proxies], self.scheduler, cfg.clock)
+        # With cfg.clock.sync_model the service runs measured NTP-style probe
+        # rounds through the shared fabric (repro.core.clocksync); node ids
+        # 0..n+P-1 are the replica+proxy slots, matching the network's.
+        self.sync = SyncService(self.clocks[: self.n + cfg.n_proxies],
+                                self.scheduler, cfg.clock,
+                                network=self.fabric.network, seed=cfg.seed)
 
         # Adversarial-fault audit sinks (PR 8): proxies append per-request
         # deadline-offset samples, lossy replicas record crash-time durability

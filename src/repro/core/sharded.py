@@ -348,7 +348,8 @@ class ShardedNezhaCluster(Cluster):
             if not eng.tier.fused or grp.on_commit is not None \
                     or grp._vc is not None or grp._fault_events \
                     or eng.clocks_faulty or eng.pairs_faulty \
-                    or eng.stampers_biased or eng.unreachable.any() \
+                    or eng.stampers_biased or eng.sync_active \
+                    or eng.unreachable.any() \
                     or not grp._alive.all() \
                     or grp._pending.has_prestamped():
                 return False

@@ -153,6 +153,10 @@ class VectorizedNezhaCluster(Cluster):
         #                                          [(proxy_ids, replica_ids)]
         #   ("stamp-bias", proxy_id, bias)         SkewedStamper
         #   ("lossy", rid)                         LossyAcker
+        #   ("sync-outage", flag)                  SyncOutage / SyncRestore
+        #   ("sync-bias", obs, peers, bias)        SyncBias (probe-path bias
+        #                                          over daemon node ids)
+        #   ("clock-leap", nodes, delta)           ClockLeap (a TRUE step)
         self._fault_events: list[tuple[float, tuple]] = []
         # Adversarial-network exposure bookkeeping: closed fault windows for
         # the trace checkers (check_partition_liveness) + per-epoch counters
@@ -316,6 +320,13 @@ class VectorizedNezhaCluster(Cluster):
                 self.engine.set_stamp_bias(payload[1], payload[2])
             elif payload[0] == "lossy":
                 self.engine.logs.set_lossy(payload[1])
+            elif payload[0] == "sync-outage":
+                self.engine.clocksync.set_outage(payload[1])
+            elif payload[0] == "sync-bias":
+                _, obs, prs, bias = payload
+                self.engine.clocksync.set_probe_bias(obs, prs, bias)
+            elif payload[0] == "clock-leap":
+                self.engine.clocksync.step(payload[1], payload[2])
 
     def _close_partition_window(self, t1: float) -> dict:
         po = self._partition_open
@@ -394,7 +405,35 @@ class VectorizedNezhaCluster(Cluster):
                     f"replica id {event.rid} out of range [0, {self.n})")
             self._add_event(event.t, ("lossy", int(event.rid)))
             return True
+        if kind in ("sync-outage", "sync-restore", "sync-bias", "clock-leap"):
+            if self.engine.clocksync is None:
+                return False        # no modeled sync loop to degrade
+            if kind in ("sync-outage", "sync-restore"):
+                self._add_event(event.t,
+                                ("sync-outage", kind == "sync-outage"))
+            elif kind == "sync-bias":
+                obs = self._sync_nodes(event.src)
+                prs = self._sync_nodes(event.dst)
+                self._add_event(event.t,
+                                ("sync-bias", obs, prs, float(event.bias)))
+            else:
+                nodes = self._sync_nodes(event.who)
+                self._add_event(event.t,
+                                ("clock-leap", nodes, float(event.delta)))
+            return True
         return False
+
+    def _sync_nodes(self, selector) -> tuple[int, ...]:
+        """Resolve a clock-target selector to sync-daemon node ids
+        (replicas 0..R-1, proxies R..R+P-1); fails at schedule time."""
+        from repro.sim.scenario import _clock_targets
+
+        if selector == "all":
+            return tuple(range(self.n + self.cfg.n_proxies))
+        out = []
+        for role, idx in _clock_targets(selector, self.n, self.cfg.n_proxies):
+            out.append(idx if role == "replica" else self.n + idx)
+        return tuple(out)
 
     # -- view changes (the recovery pipeline) ------------------------------------
     def _viable_view(self, from_view: int) -> int:
@@ -581,6 +620,10 @@ class VectorizedNezhaCluster(Cluster):
             if self._vc is not None and np.isfinite(self._vc.t_done):
                 candidates.append(self._vc.t_done)
             epoch_end = min(candidates)
+            # Modeled sync (PR 10): clock truth advances to the epoch
+            # boundary and any due probe round queues BEFORE the epoch runs
+            # -- so every tier folds the round at the identical epoch slot.
+            self.engine.advance_sync(epoch_end)
             if self._vc is not None and np.isfinite(self._vc.t_done):
                 # recovery stall: replicas are in VIEWCHANGE status; pending
                 # requests wait in the proxies/early buffers until StartView
@@ -638,6 +681,7 @@ class VectorizedNezhaCluster(Cluster):
         if k_max < min(SCAN_K_BUCKETS) or not self.engine.tier.fused \
                 or self.on_commit is not None or self.engine.clocks_faulty \
                 or self.engine.pairs_faulty or self.engine.stampers_biased \
+                or self.engine.sync_active \
                 or self._pending.has_prestamped():
             return 0
         t_min = self._pending.min_time()

@@ -250,6 +250,46 @@ class CloudNetwork:
             dropped |= self._pair_blocked[ix]
         return owd, dropped
 
+    def sample_probe_owd(self, srcs: np.ndarray, dsts: np.ndarray,
+                         k: int, rng: np.random.Generator) -> np.ndarray:
+        """OWDs for ``k`` sync probes on each path srcs[i] -> dsts[i].
+
+        The clock-sync daemon's probe traffic (repro.core.clocksync): the
+        probes traverse the same fabric statistics as data messages --
+        persistent per-path offsets (the asymmetry the NTP-style estimator
+        must survive), lognormal jitter, bursts, drops, and any installed
+        partition/gray overrides -- but every draw comes from the CALLER's
+        ``rng``. The network's own stream is never consumed, so arming the
+        sync daemon cannot perturb data-plane sampling (bit-for-bit run
+        reproducibility, the same contract as the pair-fault overrides).
+
+        Returns owd[n_pairs, k] in seconds with +inf marking lost probes
+        (dropped or blocked); callers treat non-finite RTTs as invalid.
+        """
+        p = self.params
+        srcs = np.asarray(srcs)
+        dsts = np.asarray(dsts)
+        n = srcs.size
+        owd = np.full((n, k), p.base_owd)
+        owd += self._path_offset[srcs, dsts][:, None]
+        owd += rng.lognormal(p.lognorm_mu, p.lognorm_sigma, size=(n, k))
+        bursts = rng.random((n, k)) < p.burst_prob
+        owd += np.where(bursts, rng.exponential(p.burst_scale, size=(n, k)),
+                        0.0)
+        lost = rng.random((n, k)) < p.drop_prob
+        if self._pair_blocked is not None:
+            mu = self._pair_mu[srcs, dsts][:, None]
+            sg = self._pair_sigma[srcs, dsts][:, None]
+            if mu.any() or sg.any():
+                extra = rng.normal(np.broadcast_to(mu, (n, k)),
+                                   np.broadcast_to(sg, (n, k))).clip(min=0.0)
+                owd += np.where((mu > 0.0) | (sg > 0.0), extra, 0.0)
+            xd = self._pair_drop[srcs, dsts][:, None]
+            if xd.any():
+                lost |= rng.random((n, k)) < xd
+            lost |= self._pair_blocked[srcs, dsts][:, None]
+        return np.where(lost, np.inf, owd)
+
     def sample_owd_pairs(
         self, srcs: np.ndarray, dsts: np.ndarray
     ) -> tuple[np.ndarray, np.ndarray]:

@@ -91,8 +91,11 @@ NET_PROFILES: dict[str, NetworkParams] = {
 CLOCK_REGIMES: dict[str, ClockParams] = {
     # Huygens steady state (paper S2.1): tens-of-ns residuals.
     "synced": ClockParams(),
-    # Rarely resynchronized crystals: drift dominates between corrections.
-    "drifty": ClockParams(drift_ppm_sigma=50.0, resync_interval=10.0),
+    # Rarely resynchronized crystals under the MODELED sync loop (PR 10):
+    # per-node drift + wander truth, periodic multi-peer probe rounds
+    # through the fabric, and measured error bounds feeding DOM's margin.
+    "drifty": ClockParams(drift_ppm_sigma=50.0, resync_interval=10.0,
+                          sync_model=True),
     # Badly synchronized clocks (Appendix D regime): us-scale residuals.
     "skewed": ClockParams(residual_sigma=5e-6),
 }
@@ -322,6 +325,53 @@ class LossyAcker(FaultEvent):
 
 
 @dataclass(frozen=True)
+class SyncOutage(FaultEvent):
+    """The clock-sync daemon stops running probe rounds at ``t`` (crashed /
+    unreachable NTP fleet): clocks keep drifting unobserved and the honestly
+    reported error bound GROWS until a `SyncRestore`. Only regimes with a
+    modeled sync loop (``ClockParams.sync_model``) can exhibit it."""
+
+    kind = "sync-outage"
+
+
+@dataclass(frozen=True)
+class SyncRestore(FaultEvent):
+    """Probe rounds resume after a `SyncOutage`: the estimator re-measures
+    and the reported bound narrows back toward the synced-era value."""
+
+    kind = "sync-restore"
+
+
+@dataclass(frozen=True)
+class SyncBias(FaultEvent):
+    """Asymmetric-path probe bias: sync probes that the ``src`` clocks
+    exchange with the ``dst`` clocks read ``bias`` extra seconds of offset
+    (a congested/rerouted forward path the two-way exchange cannot cancel).
+    Selectors use the clock syntax ('leader', 'replicas', 'proxies',
+    'replica:<i>', 'proxy:<i>') plus 'all' for the whole synchronized
+    fleet; ``bias=0`` clears the pairs."""
+
+    src: str = "all"
+    dst: str = "all"
+    bias: float = 0.0
+    kind = "sync-bias"
+
+
+@dataclass(frozen=True)
+class ClockLeap(FaultEvent):
+    """A TRUE clock step on ``who`` at ``t`` (VM migration / leap second):
+    the clock's offset jumps by ``delta`` seconds and only the next probe
+    round can notice. Selector syntax matches `ClockFault.who`."""
+
+    who: str = "leader"
+    delta: float = 0.0
+    kind = "clock-leap"
+
+    def targets(self, n_replicas: int, n_proxies: int) -> list[tuple[str, int]]:
+        return _clock_targets(self.who, n_replicas, n_proxies)
+
+
+@dataclass(frozen=True)
 class GroupFault:
     """Address a fault event to ONE consensus group of a sharded backend
     (``nezha-sharded``): the wrapped ``event`` is scheduled on group
@@ -487,6 +537,7 @@ def _validate_scenario(sc: Scenario) -> None:
     down: set = set()
     partition_open = False          # Partition seen, no Heal yet
     gray_open: dict[tuple, int] = {}  # (src, dst) -> open GrayLink count
+    sync_outage_open = False        # SyncOutage seen, no SyncRestore yet
     for ev in sorted(sc.faults, key=lambda e: e.t):
         tag = f"{type(ev).__name__}(t={ev.t!r})"
         if not (0.0 <= ev.t <= horizon):
@@ -589,6 +640,32 @@ def _validate_scenario(sc: Scenario) -> None:
                             "preceding crash")
             else:
                 down.discard(rid)
+        elif kind == "sync-outage":
+            if sync_outage_open:
+                errs.append(f"{tag}: the sync daemon is already down "
+                            "(overlapping outages need a SyncRestore between)")
+            sync_outage_open = True
+        elif kind == "sync-restore":
+            if not sync_outage_open:
+                errs.append(f"{tag}: SyncRestore with no open SyncOutage "
+                            "before it")
+            sync_outage_open = False
+        elif kind == "sync-bias":
+            for sel in (ev.src, ev.dst):
+                if sel != "all":
+                    try:
+                        _clock_targets(sel, n, n_prox)
+                    except ValueError as exc:
+                        errs.append(f"{tag}: {exc}")
+            if not np.isfinite(ev.bias):
+                errs.append(f"{tag}: bias must be finite")
+        elif kind == "clock-leap":
+            try:
+                _clock_targets(ev.who, n, n_prox)
+            except ValueError as exc:
+                errs.append(f"{tag}: {exc}")
+            if not (np.isfinite(ev.delta) and ev.delta != 0.0):
+                errs.append(f"{tag}: delta must be finite and nonzero")
         elif kind == "net-shift" and ev.profile not in NET_PROFILES:
             errs.append(f"{tag}: unknown net profile {ev.profile!r}; "
                         "available: " + ", ".join(NET_PROFILES))
@@ -734,6 +811,12 @@ _CAP = 50e-6                # SD.2.4 deadline cap
 _ADV_WORKLOAD = Workload(mode="open", rate_per_client=2000.0, duration=0.15,
                          warmup=0.02, drain=0.1, seed=0,
                          read_ratio=0.0, skew=0.0)
+# The sync family runs longer: the degradation detector compares the worst
+# reported bound against a healthy-percentile baseline, so the run needs
+# enough clean probe rounds on BOTH sides of the fault window.
+_SYNC_WORKLOAD = Workload(mode="open", rate_per_client=2000.0, duration=0.3,
+                          warmup=0.02, drain=0.1, seed=0,
+                          read_ratio=0.0, skew=0.0)
 
 
 def _clock_scenario(name: str, who: str, mu: float, cap: float = 0.0,
@@ -920,6 +1003,50 @@ SCENARIOS: dict[str, Scenario] = {
                  description="replica 2 acks without persisting; its crash "
                              "+ relaunch exposes the acked-but-missing "
                              "prefix"),
+        # ------------------------------------------------------------------
+        # Modeled clock-sync family (PR 10): the drifty regime runs the
+        # measured sync loop, so these degrade the MEASUREMENT process and
+        # the trace checks verify the reported error bounds stayed honest
+        # (coverage) while the paired invariant detects the degradation.
+        # ------------------------------------------------------------------
+        Scenario("sync-daemon-outage", environment="drifty-clocks",
+                 faults=(SyncOutage(0.05), SyncRestore(0.25)),
+                 workload=_SYNC_WORKLOAD, overrides={"n_proxies": 2},
+                 invariant="sync-degraded",
+                 description="the sync daemon dies for 200ms: clocks drift "
+                             "unobserved, the reported bound grows at the "
+                             "3-sigma drift rate (DOM's margin widens with "
+                             "it), then recovery narrows it back"),
+        Scenario("sync-path-bias", environment="drifty-clocks",
+                 faults=(SyncBias(0.05, src="all", dst="replica:1",
+                                  bias=140e-6),
+                         SyncBias(0.05, src="all", dst="replica:2",
+                                  bias=140e-6),
+                         SyncBias(0.25, src="all", dst="replica:1", bias=0.0),
+                         SyncBias(0.25, src="all", dst="replica:2",
+                                  bias=0.0)),
+                 workload=_SYNC_WORKLOAD, overrides={"n_proxies": 2},
+                 invariant="sync-degraded",
+                 description="probes toward two replicas read 140us of "
+                             "path asymmetry: the median estimate shifts, "
+                             "the MAD-based bound inflates to cover it, "
+                             "and coverage holds because the bound is "
+                             "measured, not asserted"),
+        Scenario("clock-leap", environment="drifty-clocks",
+                 faults=(ClockLeap(0.05, who="leader", delta=300e-6),),
+                 workload=_SYNC_WORKLOAD, overrides={"n_proxies": 2},
+                 invariant="sync-step",
+                 description="the leader's clock steps 300us (VM "
+                             "migration): the next probe round flags the "
+                             "correction as a step event and inflates the "
+                             "bound to the full step until re-measured"),
+        Scenario("sync-degrade-recover", environment="drifty-clocks",
+                 faults=(SyncOutage(0.06), SyncRestore(0.20)),
+                 workload=_SYNC_WORKLOAD, overrides={"n_proxies": 2},
+                 invariant="sync-degraded",
+                 description="a shorter outage: the bound degrades then "
+                             "provably recovers (end-of-run sigma back "
+                             "under the outage peak)"),
     )
 }
 
@@ -931,6 +1058,11 @@ ADVERSARIAL_SCENARIOS = (
 
 # The sharded family, in catalog order (tests + the sharded CI job iterate).
 SHARDED_SCENARIOS = ("sharded-multi-key", "sharded-group-crash")
+
+# The modeled clock-sync family (PR 10), in catalog order (tests + the
+# clocksync CI job iterate). All run the drifty regime's measured sync loop.
+SYNC_SCENARIOS = ("sync-daemon-outage", "sync-path-bias", "clock-leap",
+                  "sync-degrade-recover")
 
 
 def available_scenarios() -> tuple[str, ...]:
@@ -1089,9 +1221,11 @@ __all__ = [
     "NET_PROFILES", "CLOCK_REGIMES", "ENVIRONMENTS", "Environment",
     "FaultEvent", "Crash", "Relaunch", "ClockFault", "ClockClear", "NetShift",
     "Partition", "Heal", "GrayLink", "GrayClear", "SkewedStamper",
-    "LossyAcker", "GroupFault", "NET_FAULT_KINDS",
+    "LossyAcker", "SyncOutage", "SyncRestore", "SyncBias", "ClockLeap",
+    "GroupFault", "NET_FAULT_KINDS",
     "Scenario", "ScenarioResult", "SCENARIO_RESULT_KEYS",
     "SCENARIOS", "ADVERSARIAL_SCENARIOS", "SHARDED_SCENARIOS",
+    "SYNC_SCENARIOS",
     "available_scenarios", "get_scenario", "resolve_scenario",
     "build_config", "make_scenario_cluster", "run_scenario",
     "run_scenario_on_cluster",

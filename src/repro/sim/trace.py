@@ -107,6 +107,11 @@ class CommitTrace:
     #   per-replica durable-log views (positional; split-brain evidence)
     net_windows: list = field(default_factory=list)   # partition/gray fault
     #   windows: {"kind","t0","t1"[,"minority","minority_progress"]}
+    # Clock-sync evidence (PR 10): per-round per-node estimator audit rows
+    # {"t","node","err","sigma","events"} -- pre-correction true offset error
+    # vs the error bound the daemon *reported* for that round. Empty when the
+    # run used injected offsets (no modeled sync loop).
+    sync: dict = field(default_factory=dict)
 
     def __post_init__(self):
         for col in LOG_COLS:
@@ -163,6 +168,9 @@ class CommitTrace:
                 for r, cols in logs.replica_log_columns().items()}
         if hasattr(cluster, "net_windows"):
             tr.net_windows = cluster.net_windows()
+        cs = getattr(cluster.engine, "clocksync", None)
+        if cs is not None:
+            tr.sync = cs.evidence_columns()
         return tr
 
     @classmethod
@@ -229,6 +237,9 @@ class CommitTrace:
             if getattr(r, "divergent", False) or r.view_id == vmax}
         if hasattr(cluster, "net_windows"):
             tr.net_windows = cluster.net_windows()
+        sync = getattr(cluster, "sync", None)
+        if sync is not None and getattr(sync, "_modeled", False):
+            tr.sync = sync.evidence_columns()
         return tr
 
 
@@ -351,7 +362,37 @@ def check_trace(trace) -> list[str]:
             out += check_trace(g)
         return out
     return (check_at_most_once(trace) + check_durable_log(trace)
-            + check_deadline_order(trace))
+            + check_deadline_order(trace) + check_sync_coverage(trace))
+
+
+def check_sync_coverage(trace: CommitTrace,
+                        k: float = 4.0,
+                        confidence: float = 0.95) -> list[str]:
+    """Honest-bound invariant (PR 10): the sync daemon's reported error
+    bound must actually cover the true clock offset. Each evidence row holds
+    the pre-correction error of one node at one sync round and the sigma the
+    daemon *reported* for that round (grown since its last estimate); the
+    fraction of rows with ``|err| <= k * sigma`` must reach ``confidence``.
+    A genuine step event legitimately produces one uncovered row per stepped
+    node (the daemon only sees the step at the next round), which the 0.95
+    confidence absorbs. Silent when the run kept < 20 rows of evidence --
+    too few rounds to call the bound dishonest."""
+    sync = getattr(trace, "sync", None) or {}
+    err, sigma = sync.get("err"), sync.get("sigma")
+    if err is None or sigma is None or err.size < 20:
+        return []
+    covered = np.abs(err) <= k * sigma
+    frac = float(covered.mean())
+    if frac >= confidence:
+        return []
+    bad = np.flatnonzero(~covered)
+    return [
+        f"{trace.label}: sync bound dishonest: reported error bound covers "
+        f"the true offset in only {frac:.1%} of {err.size} evidence rows "
+        f"(need {confidence:.0%} at {k:g} sigma), first miss at t="
+        f"{float(sync['t'][bad[0]]):.3f}s node {int(sync['node'][bad[0]])} "
+        f"(|err| {abs(float(err[bad[0]])) * 1e6:.1f}us vs sigma "
+        f"{float(sigma[bad[0]]) * 1e6:.1f}us)"]
 
 
 # ---------------------------------------------------------------------------
@@ -556,6 +597,55 @@ def check_cross_group_linearizability(trace) -> list[str]:
     return out
 
 
+def check_sync_degraded(trace: CommitTrace) -> list[str]:
+    """Sync-quality degradation (PR 10): the daemon's reported error bound
+    widened well past its synced-era level -- a sync outage let drift accrue
+    unbounded, or biased probe paths inflated the robust spread. Compares
+    the worst per-round maximum sigma against the 25th percentile of
+    per-round maxima (the healthy baseline): degradation means the peak
+    exceeds the baseline both relatively (> 1.8x) and absolutely (> +12us).
+    A clean drifty run's between-round growth measures ~1.4x / +6us (the
+    probe-round cadence bounds how far the reported sigma wanders between
+    estimates), so both margins have ~2x headroom. Silent on traces
+    without sync evidence."""
+    sync = getattr(trace, "sync", None) or {}
+    t, sigma = sync.get("t"), sync.get("sigma")
+    if t is None or sigma is None or t.size == 0:
+        return []
+    # per-round (per unique tick) worst reported bound across nodes
+    ticks, inv = np.unique(t, return_inverse=True)
+    if ticks.size < 4:
+        return []
+    smax = np.zeros(ticks.size, np.float64)
+    np.maximum.at(smax, inv, sigma)
+    p25 = float(np.percentile(smax, 25))
+    peak = float(smax.max())
+    if peak > 1.8 * p25 and peak > p25 + 12e-6:
+        at = float(ticks[int(np.argmax(smax))])
+        return [
+            f"{trace.label}: sync degraded: reported error bound peaked at "
+            f"{peak * 1e6:.1f}us (t={at:.3f}s) vs a healthy baseline of "
+            f"{p25 * 1e6:.1f}us"]
+    return []
+
+
+def check_sync_step(trace: CommitTrace) -> list[str]:
+    """Clock step detection (PR 10): the daemon flagged a discontinuous
+    offset jump (VM migration / leap event) on some node -- an estimate far
+    outside what accrued drift could explain since the last round. Silent
+    on traces without sync evidence or without step events."""
+    sync = getattr(trace, "sync", None) or {}
+    events = sync.get("events") or []
+    steps = [ev for ev in events if ev.get("kind") == "step"]
+    if not steps:
+        return []
+    return [
+        f"{trace.label}: clock step detected on node {int(ev['node'])} at "
+        f"t={float(ev['t']):.3f}s (estimated jump "
+        f"{float(ev['magnitude']) * 1e6:.0f}us)"
+        for ev in steps]
+
+
 # scenario ``invariant`` name -> its paired checker (the catalog's
 # adversarial scenarios each assert exactly their own entry fires)
 ADVERSARIAL_CHECKS = {
@@ -564,6 +654,8 @@ ADVERSARIAL_CHECKS = {
     "durability": check_durability,
     "partition-liveness": check_partition_liveness,
     "cross-group": check_cross_group_linearizability,
+    "sync-degraded": check_sync_degraded,
+    "sync-step": check_sync_step,
 }
 
 
@@ -638,6 +730,7 @@ __all__ = [
     "check_trace", "check_equivalent_commits",
     "check_split_brain", "check_stamp_bias", "check_durability",
     "check_partition_liveness", "check_cross_group_linearizability",
+    "check_sync_coverage", "check_sync_degraded", "check_sync_step",
     "check_adversarial", "ADVERSARIAL_CHECKS",
     "assert_trace_ok", "assert_equivalent_commits",
     "run_scenario_with_trace",
